@@ -1,0 +1,130 @@
+"""Shared benchmark machinery: run the REAL scheduler over synthetic skewed
+workloads (paper §5.1.2) at the paper's topology (G=8) and feed the v5e time
+model. One function per paper figure lives in benchmarks/run.py."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.scheduler import schedule
+from repro.core.simulator import SimCosts, simulate_layer
+from repro.core.topology import EPTopology, make_topology, static_opt_placement
+
+
+@dataclasses.dataclass
+class BenchSetup:
+    arch: str = "switch128"
+    n_ranks: int = 8            # the paper's 8-GPU DGX topology
+    tokens_per_rank: int = 16384
+    top_k: int = 1
+    q: int = 0                  # 0 -> derive from Eq. 4 with the sim costs
+    cf_pair: float = 2.0
+    num_foreign_slots: int = 8
+
+    def __post_init__(self):
+        cfg = get_config(self.arch)
+        self.cfg = cfg
+        self.num_experts = cfg.moe.num_experts
+        self.top_k = cfg.moe.num_experts_per_tok
+        self.costs = SimCosts(
+            d_model=cfg.d_model, d_ff=cfg.moe.d_ff_expert,
+            n_matrices=3 if cfg.act == "swiglu" else 2)
+        self.topo = make_topology(self.n_ranks, self.num_experts)
+        if self.q == 0:
+            # Eq. 4: the chunk must compute at least as long as the fetch
+            fetch_s = (self.costs.expert_bytes * self.costs.fetch_penalty
+                       / self.costs.hw.ici_bw)
+            phi_eff = self.costs.hw.peak_flops * self.costs.mfu
+            self.q = int(fetch_s * phi_eff / self.costs.unit_flops) + 1
+
+    @property
+    def c_pair(self) -> int:
+        per = -(-self.tokens_per_rank * self.top_k // self.n_ranks)
+        return int(self.cf_pair * per)
+
+
+def skewed_counts(rng: np.random.Generator, setup: BenchSetup, alpha: float,
+                  n_hot: int = 1, dataset: str = "skew") -> np.ndarray:
+    """Per-(rank, expert) unit histogram for one batch.
+
+    dataset: 'skew' (paper's alpha mechanism), 'random' (uniform router),
+    'constant' (all tokens to the same experts), 'zipf' (real-corpus
+    surrogate, Fig. 1 shape)."""
+    G, E = setup.n_ranks, setup.topo.padded_experts
+    U = setup.tokens_per_rank * setup.top_k
+    if dataset == "constant":
+        counts = np.zeros((G, E), np.int64)
+        counts[:, :setup.top_k] = setup.tokens_per_rank
+        return counts
+    if dataset == "zipf":
+        p = 1.0 / np.arange(1, setup.num_experts + 1) ** 1.2
+    elif dataset == "random":
+        p = np.ones(setup.num_experts)
+    else:
+        p = np.full(setup.num_experts, (1 - alpha) / max(setup.num_experts - n_hot, 1))
+        p[:n_hot] = alpha / n_hot
+    p = p / p.sum()
+    counts = np.zeros((G, E), np.int64)
+    for g in range(G):
+        counts[g, :setup.num_experts] = rng.multinomial(U, p)
+    return counts
+
+
+_sched_cache: Dict = {}
+
+
+def run_policy(counts: np.ndarray, setup: BenchSetup, policy: str):
+    """Real (jitted) scheduler -> simulated layer metrics."""
+    topo = setup.topo
+    if policy == "static_opt":
+        # ExFlow-like: placement optimized offline on a profile batch
+        profile = counts.sum(axis=0)[:setup.num_experts]
+        perm = static_opt_placement(profile.astype(np.float64), setup.n_ranks)
+        topo = make_topology(setup.n_ranks, setup.num_experts, placement=perm)
+        policy_eff = "round_robin"
+    else:
+        policy_eff = policy
+    key = (id(setup.cfg), setup.n_ranks, policy_eff, setup.q, setup.c_pair,
+           setup.num_foreign_slots,
+           policy == "static_opt" and tuple(topo.slot_map.flatten()))
+    fn = _sched_cache.get(key)
+    if fn is None:
+        topo_c = topo
+
+        def _run(c):
+            return schedule(c, topo_c, policy=policy_eff, q=setup.q,
+                            c_pair=setup.c_pair,
+                            num_foreign_slots=setup.num_foreign_slots)
+        fn = jax.jit(_run)
+        _sched_cache[key] = fn
+    S, diag = fn(jnp.asarray(counts, jnp.int32))
+    S = np.asarray(S)
+    # dispatch drops: off-diagonal pair overflow beyond c_pair
+    offdiag = S.sum(axis=1) * (1 - np.eye(topo.num_ranks, dtype=np.int64))
+    drops = int(np.maximum(offdiag - setup.c_pair, 0).sum())
+    metrics = simulate_layer(S, topo, setup.costs,
+                             sched_iters=int(diag.iters), drops=drops)
+    metrics["sched_iters"] = int(diag.iters)
+    metrics["moved"] = int(diag.moved)
+    return S, metrics
+
+
+def model_tokens_per_s(layer_metrics: Dict[str, float], setup: BenchSetup,
+                       include_attention: bool = True) -> float:
+    """Scale per-MoE-layer time to full-model throughput (tokens/s)."""
+    cfg = setup.cfg
+    L = cfg.num_layers
+    n_moe = (L - cfg.moe.first_dense_layers) // cfg.moe.moe_layer_period
+    # non-MoE per-layer time: attention + dense FFN at the same batch
+    tokens = setup.tokens_per_rank * setup.n_ranks
+    dense_flops = tokens * 2 * (
+        4 * setup.cfg.d_model * setup.cfg.num_heads * setup.cfg.resolved_head_dim)
+    dense_s = dense_flops / (setup.costs.hw.peak_flops * setup.costs.mfu
+                             * setup.n_ranks)
+    total = n_moe * layer_metrics["layer_s"] + L * dense_s * include_attention
+    return tokens / total

@@ -1,0 +1,51 @@
+"""Quickstart: the HarMoEny MoE block in 60 lines.
+
+Routes a skewed batch through a small MoE layer with the paper's scheduler,
+prints the schedule diagnostics (the paper's headline: near-perfect balance,
+zero drops), and compares against round-robin.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.core.moe_layer import MoEBlockSpec, init_moe_params, moe_block
+
+B, S, D_MODEL, D_FF = 4, 128, 64, 128
+NUM_EXPERTS, TOP_K = 16, 2
+
+mesh = jax.make_mesh((1, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+for policy in ("round_robin", "harmoeny"):
+    moe = MoEConfig(
+        num_experts=NUM_EXPERTS,
+        num_experts_per_tok=TOP_K,
+        d_ff_expert=D_FF,
+        policy=policy,
+        router_skew=0.9,          # paper §5.1.2: 90% of tokens -> 1 expert
+        q_tokens=4,
+        capacity_factor=1.5,
+        num_foreign_slots=4,
+    )
+    spec = MoEBlockSpec(moe=moe, d_model=D_MODEL, ep_axis="model",
+                        batch_axes=(), ep_degree=4, tokens_local=B * S,
+                        block_m=16, act="silu")
+    params = init_moe_params(jax.random.PRNGKey(0), spec)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, D_MODEL))
+
+    with mesh:
+        y, diag = jax.jit(lambda x, p: moe_block(
+            x, p, spec=spec, mesh=mesh,
+            skew_key=jax.random.PRNGKey(7)))(x, params)
+
+    print(f"policy={policy:12s} out={tuple(y.shape)} "
+          f"finite={bool(jnp.isfinite(y).all())} "
+          f"moved={float(diag['moved_units'].mean()):6.0f} "
+          f"max_load {float(diag['max_load_before'].mean()):5.0f}"
+          f" -> {float(diag['max_load_after'].mean()):5.0f} "
+          f"drops={float(diag['send_drops'].sum() + diag['dest_drops'].sum()):.0f}")

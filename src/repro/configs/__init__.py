@@ -1,0 +1,7 @@
+from repro.configs.base import (
+    ModelConfig, MoEConfig, SSMConfig, ShapeConfig, ParallelConfig,
+    SHAPES, SHAPE_BY_NAME, shape_applicable, round_up,
+)
+from repro.configs.registry import (
+    ASSIGNED, PAPER_MODELS, REGISTRY, get_config, iter_cells,
+)

@@ -1,0 +1,200 @@
+"""Model / shape / parallelism configuration dataclasses.
+
+Every architecture in the assignment is expressed as a ``ModelConfig``. The
+full configs are exercised only via the dry-run (ShapeDtypeStruct, no
+allocation); smoke tests use ``reduced()`` copies.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """MoE sub-config. ``policy`` selects the scheduling policy of core/."""
+
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    d_ff_expert: int = 0          # per-expert FFN hidden size
+    num_shared_experts: int = 0   # dense experts applied to every token
+    moe_layer_period: int = 1     # every k-th layer is MoE (1 = all)
+    moe_layer_offset: int = 0     # first MoE layer index
+    first_dense_layers: int = 0   # leading dense layers (moonshot style)
+    policy: str = "harmoeny"      # harmoeny | round_robin | even_split | static_opt
+    capacity_factor: float = 1.25
+    num_foreign_slots: int = 4    # K extra expert slots per rank (0 for decode)
+    q_tokens: int = 0             # 0 = derive from hardware constants (Eq. 4)
+    router_skew: float = 0.0      # synthetic skew alpha (paper Sec 5.1.2)
+    router_skew_experts: int = 1  # number of "hot" experts for synthetic skew
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 128       # N (dstate)
+    head_dim: int = 64         # P
+    num_heads: int = 0         # derived if 0: expand*d_model // head_dim
+    expand: int = 2
+    conv_width: int = 4
+    chunk_size: int = 256      # SSD chunk length
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0           # derived if 0: d_model // num_heads
+
+    # --- attention flavour ---
+    rope_theta: float = 10000.0
+    sliding_window: int = 0         # 0 = full attention
+    global_attn_every: int = 0      # gemma2: every k-th layer is global (rest local)
+    attn_logit_softcap: float = 0.0
+    final_logit_softcap: float = 0.0
+    attn_every: int = 0             # zamba2: shared attn block every k layers
+    use_qk_norm: bool = False
+
+    # --- MLP / norm ---
+    act: str = "swiglu"             # swiglu | gelu | gelu_mlp
+    norm: str = "rmsnorm"           # rmsnorm | layernorm
+    tie_embeddings: bool = True
+    post_norm: bool = False         # gemma2 uses pre+post norms
+
+    # --- MoE / SSM sub-configs ---
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+
+    # --- enc-dec / multimodal ---
+    is_encoder_decoder: bool = False
+    encoder_layers: int = 0
+    encoder_seq_len: int = 0        # whisper: 1500 frames
+    num_prefix_embeddings: int = 0  # pixtral: image patch embeddings prepended
+
+    # --- numerics / source provenance ---
+    dtype: str = "bfloat16"
+    source: str = ""
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // max(self.num_heads, 1))
+
+    @property
+    def padded_vocab(self) -> int:
+        return round_up(self.vocab_size, 256)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.moe is not None and self.moe.num_experts > 0
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True iff every sequence-mixing layer is sub-quadratic (DESIGN.md §5)."""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        # all-layers sliding window counts as sub-quadratic
+        return self.sliding_window > 0 and self.global_attn_every == 0
+
+    @property
+    def has_decode(self) -> bool:
+        return True  # all assigned archs are decoder-bearing (whisper is enc-dec)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ------------------------------------------------------------------
+    def reduced(self) -> "ModelConfig":
+        """A tiny same-family config for CPU smoke tests."""
+        moe = None
+        if self.moe is not None:
+            moe = dataclasses.replace(
+                self.moe,
+                num_experts=min(self.moe.num_experts, 8),
+                num_experts_per_tok=min(self.moe.num_experts_per_tok, 2),
+                d_ff_expert=64 if self.moe.d_ff_expert else 0,
+                num_shared_experts=min(self.moe.num_shared_experts, 1),
+                first_dense_layers=min(self.moe.first_dense_layers, 1),
+                num_foreign_slots=2,
+            )
+        ssm = None
+        if self.ssm is not None:
+            ssm = dataclasses.replace(
+                self.ssm, state_dim=16, head_dim=16, num_heads=0, chunk_size=32)
+        return dataclasses.replace(
+            self,
+            num_layers=min(self.num_layers, 4),
+            d_model=128,
+            num_heads=4,
+            num_kv_heads=min(self.num_kv_heads, 4) if self.num_kv_heads else 0,
+            head_dim=32,
+            d_ff=256,
+            vocab_size=512,
+            sliding_window=min(self.sliding_window, 64) if self.sliding_window else 0,
+            global_attn_every=self.global_attn_every and 2,
+            attn_every=self.attn_every and 2,
+            encoder_layers=min(self.encoder_layers, 2),
+            encoder_seq_len=min(self.encoder_seq_len, 32) if self.encoder_seq_len else 0,
+            num_prefix_embeddings=min(self.num_prefix_embeddings, 8)
+            if self.num_prefix_embeddings else 0,
+            moe=moe,
+            ssm=ssm,
+            dtype="float32",
+        )
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One input-shape cell (assignment: train_4k / prefill_32k / decode_32k / long_500k)."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4096, 256, "train"),
+    ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32768, 128, "decode"),
+    ShapeConfig("long_500k", 524288, 1, "decode"),
+)
+
+SHAPE_BY_NAME = {s.name: s for s in SHAPES}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether a (arch, shape) cell runs, plus the reason when skipped."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, "pure full-attention arch: long_500k skipped (DESIGN.md §5)"
+    return True, ""
+
+
+@dataclass(frozen=True)
+class ParallelConfig:
+    """How a step is sharded on the production mesh."""
+
+    fsdp: bool = False            # shard params/opt-state over 'data' too
+    remat: str = "none"           # none | full | selective
+    shard_kv_seq: bool = False    # long_500k: KV sequence over 'data'
+    microbatch: int = 0           # >0: scan-accumulated microbatches w/ deferred psum
+    compress_grads: bool = False  # int8 all-reduce
+    use_pallas: bool = False      # pallas kernels (TPU target); False = XLA ref path
+    loss_chunk: int = 2048        # vocab-loss sequence chunk
+    attn_chunk: int = 1024        # chunked-flash KV block
+    moe_cf_pair: float = 2.0      # off-diagonal dispatch pair capacity factor
+    moe_block_m: int = 128        # grouped-FFN row-tile (weight reuse ~ block_m)

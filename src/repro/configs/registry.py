@@ -1,0 +1,62 @@
+"""Architecture registry: --arch <id> resolution for launchers/tests/benchmarks."""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ModelConfig, SHAPES, SHAPE_BY_NAME, shape_applicable
+
+from repro.configs.whisper_large_v3 import CONFIG as _whisper
+from repro.configs.zamba2_7b import CONFIG as _zamba2
+from repro.configs.gemma2_2b import CONFIG as _gemma2
+from repro.configs.mistral_nemo_12b import CONFIG as _nemo
+from repro.configs.phi4_mini_3_8b import CONFIG as _phi4
+from repro.configs.stablelm_1_6b import CONFIG as _stablelm
+from repro.configs.moonshot_v1_16b_a3b import CONFIG as _moonshot
+from repro.configs.mixtral_8x7b import CONFIG as _mixtral
+from repro.configs.mamba2_2_7b import CONFIG as _mamba2
+from repro.configs.pixtral_12b import CONFIG as _pixtral
+from repro.configs.switch128 import CONFIG as _switch128
+from repro.configs.qwen15_moe_a27b import CONFIG as _qwen
+
+# The ten assigned architectures (the dry-run matrix iterates these).
+ASSIGNED: Dict[str, ModelConfig] = {
+    "whisper-large-v3": _whisper,
+    "zamba2-7b": _zamba2,
+    "gemma2-2b": _gemma2,
+    "mistral-nemo-12b": _nemo,
+    "phi4-mini-3.8b": _phi4,
+    "stablelm-1.6b": _stablelm,
+    "moonshot-v1-16b-a3b": _moonshot,
+    "mixtral-8x7b": _mixtral,
+    "mamba2-2.7b": _mamba2,
+    "pixtral-12b": _pixtral,
+}
+
+# The paper's own models, used by the claim-validation benchmarks.
+PAPER_MODELS: Dict[str, ModelConfig] = {
+    "switch128": _switch128,
+    "qwen15-moe-a27b": _qwen,
+}
+
+REGISTRY: Dict[str, ModelConfig] = {**ASSIGNED, **PAPER_MODELS}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in REGISTRY:
+        raise KeyError(f"unknown arch {arch!r}; available: {sorted(REGISTRY)}")
+    return REGISTRY[arch]
+
+
+def iter_cells(include_skipped: bool = False):
+    """Yield (arch, shape, runnable, skip_reason) over the 10x4 assignment matrix."""
+    for arch, cfg in ASSIGNED.items():
+        for shape in SHAPES:
+            ok, why = shape_applicable(cfg, shape)
+            if ok or include_skipped:
+                yield arch, shape, ok, why
+
+
+__all__ = [
+    "ASSIGNED", "PAPER_MODELS", "REGISTRY", "get_config", "iter_cells",
+    "SHAPES", "SHAPE_BY_NAME",
+]

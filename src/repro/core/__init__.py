@@ -1,0 +1,3 @@
+from repro.core.topology import EPTopology, make_topology, static_opt_placement
+from repro.core.scheduler import schedule, rebalance, initial_assign, even_split
+from repro.core.moe_layer import MoEBlockSpec, moe_block, init_moe_params

@@ -1,0 +1,243 @@
+"""Schedule-driven token dispatch / combine (paper Alg. 1 steps 4 & 6).
+
+Runs *per EP rank* inside a shard_map over the 'model' mesh axis. Both sender
+and receiver derive all buffer layouts purely from the replicated schedule
+``S`` and static conventions, so no index metadata is ever communicated —
+only the token payloads move (plus the tiny counts all_gather done earlier).
+
+Ordering convention (shared by both sides): the units of (source g, expert e)
+are ordered by their within-expert rank r (stable sort of local units by
+expert). The first S[g,e,0] of them go to destination 0, the next S[g,e,1]
+to destination 1, etc. Within a pair (g -> h) chunk, units are ordered by
+(e, r). Within a destination group (one expert slot), rows are ordered by
+(source g, r).
+
+Static buffers:
+  * send/recv: [G, c_pair, d]  — off-diagonal pairs only; the self-pair
+    bypasses the all_to_all entirely (zero wire bytes, no capacity bound);
+  * grouped compute buffer: [c_total, d] with every expert-slot group
+    starting at a multiple of ``block_m`` (so Pallas tiles never straddle
+    groups, and padding rows are zeros).
+
+Overflowing units are dropped *and counted* (`DispatchDiag`): with the
+HarMoEny policy the scheduler bounds every load so drops stay ~0 at
+capacity_factor ~1.25; round-robin under skew drops heavily — the TPU-native
+restatement of the paper's latency gap (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.topology import EPTopology, local_slot_of
+
+
+class DispatchLayout(NamedTuple):
+    """Everything both sides derive from S (per rank, inside shard_map)."""
+    # sender side (per local unit)
+    unit_dest: jnp.ndarray        # [U] destination rank per unit
+    unit_pair_pos: jnp.ndarray    # [U] row within the (me -> dest) pair chunk
+    unit_row_self: jnp.ndarray    # [U] grouped-buffer row for self units (valid where dest==me)
+    # receiver side (per recv row)
+    row_target: jnp.ndarray       # [G, c_pair] grouped-buffer row per recv row
+    row_valid: jnp.ndarray        # [G, c_pair] bool
+    # grouped buffer structure
+    group_sizes: jnp.ndarray      # [n_groups] real rows per group
+    group_offsets: jnp.ndarray    # [n_groups] block-aligned start row per group
+    group_expert: jnp.ndarray     # [n_groups] expert id per group (-1 = inactive)
+    fids: jnp.ndarray             # [K] foreign expert ids on this rank (-1 = none)
+    # diagnostics
+    send_drops: jnp.ndarray
+    dest_drops: jnp.ndarray
+
+
+class DispatchDiag(NamedTuple):
+    send_drops: jnp.ndarray
+    dest_drops: jnp.ndarray
+    local_units: jnp.ndarray      # units processed on this rank (load)
+
+
+def _exclusive_cumsum(x: jnp.ndarray, axis: int) -> jnp.ndarray:
+    c = jnp.cumsum(x, axis=axis)
+    zero_shape = list(x.shape)
+    zero_shape[axis] = 1
+    zeros = jnp.zeros(zero_shape, x.dtype)
+    return jnp.concatenate([zeros, jax.lax.slice_in_dim(c, 0, x.shape[axis] - 1,
+                                                        axis=axis)], axis=axis)
+
+
+def build_layout(S: jnp.ndarray, assign: jnp.ndarray, me: jnp.ndarray,
+                 topo: EPTopology, *, c_pair: int, c_total: int,
+                 num_foreign_slots: int, block_m: int) -> DispatchLayout:
+    """Derive the full dispatch layout from schedule S and local assignment.
+
+    S: [G, Ep, G] replicated; assign: [T_slice, k] local expert choices,
+    values in [0, Ep] where the sentinel ``Ep`` marks padding units that must
+    never be scheduled (they fall through as drops with zero payload);
+    me: this rank's index on the EP axis.
+    """
+    G, Ep = topo.num_ranks, topo.padded_experts
+    epr = topo.experts_per_rank
+    K = num_foreign_slots
+    n_groups = epr + K
+    unit_expert = assign.reshape(-1)                        # [U], token-major
+    U = unit_expert.shape[0]
+    is_pad_unit = unit_expert >= Ep
+
+    # ---- sender side -------------------------------------------------
+    # histogram/cumsum arrays carry an extra row for the padding sentinel
+    counts_local = jnp.zeros((Ep + 1,), jnp.int32).at[unit_expert].add(1)
+    # r: within-expert rank of each unit, in unit order (stable)
+    sort_idx = jnp.argsort(unit_expert, stable=True)
+    start_of_expert = _exclusive_cumsum(counts_local, 0)    # [Ep+1]
+    r_sorted = jnp.arange(U, dtype=jnp.int32) - start_of_expert[unit_expert[sort_idx]]
+    r = jnp.zeros((U,), jnp.int32).at[sort_idx].set(r_sorted)
+
+    S_me = jnp.take(S, me, axis=0)                          # [Ep, G] my row
+    S_me = jnp.concatenate([S_me, jnp.zeros((1, G), S_me.dtype)], axis=0)
+    dcum = jnp.concatenate([jnp.zeros((Ep + 1, 1), jnp.int32),
+                            jnp.cumsum(S_me, axis=1)], axis=1)  # [Ep+1, G+1]
+    dcum_u = dcum[unit_expert]                              # [U, G+1]
+    unit_dest = jnp.sum(r[:, None] >= dcum_u[:, 1:], axis=1).astype(jnp.int32)
+    unit_dest = jnp.minimum(unit_dest, G - 1)               # unscheduled -> clamp (dropped below)
+    scheduled = (r < dcum_u[:, G]) & ~is_pad_unit           # unit covered by S at all
+
+    # row within the (me -> dest) pair chunk: by (e, r) within the chunk
+    pair_e_off = _exclusive_cumsum(S_me, 0)                 # [Ep+1, G] rows of earlier experts
+    unit_pair_pos = (pair_e_off[unit_expert, unit_dest]
+                     + r - dcum[unit_expert, unit_dest])
+
+    # ---- receiver-side group structure (all replicated-computable) ----
+    recv_counts = jnp.take(S, me, axis=2)                   # [G_src, Ep]
+    tok_e = recv_counts.sum(axis=0)                         # [Ep] units per expert on me
+    lsl = jnp.asarray(local_slot_of(topo))                  # [G, Ep] static
+    my_local_slot = jnp.take(lsl, me, axis=0)               # [Ep] (-1 if not local)
+    is_foreign_active = (tok_e > 0) & (my_local_slot < 0)
+    foreign_rank = jnp.cumsum(is_foreign_active.astype(jnp.int32)) - 1
+    # fids[k] = k-th active foreign expert (by expert id)
+    scatter_idx = jnp.where(is_foreign_active,
+                            jnp.minimum(foreign_rank, K), K)
+    fids = jnp.full((K + 1,), -1, jnp.int32).at[scatter_idx].set(
+        jnp.arange(Ep, dtype=jnp.int32), mode="drop")[:K]
+    # group of each expert on me: local slot j -> group j; k-th foreign -> epr + k
+    grp_of_e = jnp.where(my_local_slot >= 0, my_local_slot,
+                         jnp.where(is_foreign_active & (foreign_rank < K),
+                                   epr + foreign_rank, n_groups))  # n_groups = invalid
+    group_expert = jnp.full((n_groups + 1,), -1, jnp.int32).at[
+        jnp.minimum(grp_of_e, n_groups)].set(jnp.arange(Ep, dtype=jnp.int32),
+                                             mode="drop")
+    # only experts with tokens or local residence define groups
+    slot_experts = jnp.take(jnp.asarray(topo.slot_map), me, axis=0)  # [epr]
+    group_expert = group_expert.at[jnp.arange(epr)].set(slot_experts)
+    group_expert = group_expert[:n_groups]
+
+    group_sizes = jnp.zeros((n_groups + 1,), jnp.int32).at[
+        jnp.minimum(grp_of_e, n_groups)].add(tok_e, mode="drop")[:n_groups]
+    padded = round_up_j(group_sizes, block_m)
+    group_offsets = _exclusive_cumsum(padded, 0)            # block-aligned starts
+    overflow_rows = jnp.minimum(
+        jnp.maximum(group_offsets + padded - c_total, 0), group_sizes)
+
+    # within-group offset of source g for expert e: earlier sources first
+    wgo = _exclusive_cumsum(recv_counts, 0)                 # [G_src, Ep]
+
+    # ---- receiver side: map each recv row (g, c) -> grouped row --------
+    ecum = jnp.concatenate([jnp.zeros((G, 1), jnp.int32),
+                            jnp.cumsum(recv_counts, axis=1)], axis=1)  # [G, Ep+1]
+    c_idx = jnp.arange(c_pair, dtype=jnp.int32)
+    # e_row[g, c]: which expert the c-th row of pair (g -> me) carries
+    e_row = jax.vmap(lambda bounds: jnp.searchsorted(
+        bounds, c_idx, side="right").astype(jnp.int32))(ecum[:, 1:])
+    e_row = jnp.minimum(e_row, Ep - 1)
+    r_rel = c_idx[None, :] - jnp.take_along_axis(ecum, e_row, axis=1)
+    pair_total = ecum[:, Ep]
+    row_valid = (c_idx[None, :] < pair_total[:, None]) \
+        & (jnp.arange(G)[:, None] != me)                    # self handled directly
+    grp_row = grp_of_e[e_row]                               # [G, c_pair]
+    row_target = (jnp.take(group_offsets, jnp.minimum(grp_row, n_groups - 1))
+                  + jnp.take_along_axis(wgo, e_row, axis=1)
+                  + r_rel)
+    row_valid = row_valid & (grp_row < n_groups)
+    row_target = jnp.where(row_valid, row_target, c_total)  # oob -> dropped
+
+    # ---- self units: grouped row computed sender-side ------------------
+    ue_c = jnp.minimum(unit_expert, Ep - 1)                 # clamp pad sentinel
+    grp_u = grp_of_e[ue_c]
+    wgo_me = jnp.take(wgo, me, axis=0)                      # [Ep]
+    unit_row_self = (jnp.take(group_offsets, jnp.minimum(grp_u, n_groups - 1))
+                     + wgo_me[ue_c]
+                     + (r - dcum[unit_expert, unit_dest]))
+    unit_row_self = jnp.where((unit_dest == me) & scheduled & (grp_u < n_groups),
+                              unit_row_self, c_total)
+
+    send_valid = (unit_dest != me) & scheduled & (unit_pair_pos < c_pair)
+    send_drops = jnp.sum((unit_dest != me) & scheduled
+                         & (unit_pair_pos >= c_pair))
+    dest_drops = overflow_rows.sum()
+    unit_pair_pos = jnp.where(send_valid, unit_pair_pos, c_pair)  # oob -> dropped
+
+    return DispatchLayout(
+        unit_dest=unit_dest, unit_pair_pos=unit_pair_pos,
+        unit_row_self=unit_row_self,
+        row_target=row_target, row_valid=row_valid,
+        group_sizes=group_sizes, group_offsets=group_offsets,
+        group_expert=group_expert, fids=fids,
+        send_drops=send_drops.astype(jnp.int32),
+        dest_drops=dest_drops.astype(jnp.int32),
+    )
+
+
+def round_up_j(x: jnp.ndarray, m: int) -> jnp.ndarray:
+    return ((x + m - 1) // m) * m
+
+
+def dispatch(x_units: jnp.ndarray, layout: DispatchLayout, *, axis_name: str,
+             num_ranks: int, c_pair: int, c_total: int) -> jnp.ndarray:
+    """Scatter local units to the grouped buffers of their destinations.
+
+    x_units: [U, d] unit payloads (token embedding per (token, k) choice).
+    Returns the grouped compute buffer [c_total, d] for *this* rank.
+    """
+    d = x_units.shape[-1]
+    send = jnp.zeros((num_ranks, c_pair, d), x_units.dtype).at[
+        layout.unit_dest, layout.unit_pair_pos].set(x_units, mode="drop")
+    recv = jax.lax.all_to_all(send, axis_name, split_axis=0, concat_axis=0,
+                              tiled=True)
+    grouped = jnp.zeros((c_total, d), x_units.dtype).at[
+        layout.row_target.reshape(-1)].set(
+        recv.reshape(num_ranks * c_pair, d)
+        * layout.row_valid.reshape(-1, 1).astype(x_units.dtype), mode="drop")
+    # self units go straight into the grouped buffer (no wire bytes)
+    grouped = grouped.at[layout.unit_row_self].set(x_units, mode="drop")
+    return grouped
+
+
+def combine(out_grouped: jnp.ndarray, layout: DispatchLayout, *,
+            axis_name: str, num_ranks: int, c_pair: int,
+            gates: jnp.ndarray, top_k: int) -> jnp.ndarray:
+    """Return processed rows to their source ranks and gate-combine (step 6)."""
+    d = out_grouped.shape[-1]
+    c_total = out_grouped.shape[0]
+    padded_out = jnp.concatenate(
+        [out_grouped, jnp.zeros((1, d), out_grouped.dtype)], axis=0)
+    back = padded_out[jnp.minimum(layout.row_target, c_total)].reshape(
+        num_ranks, c_pair, d)
+    back = back * layout.row_valid[..., None].astype(back.dtype)
+    ret = jax.lax.all_to_all(back, axis_name, split_axis=0, concat_axis=0,
+                             tiled=True)
+    # per-unit outputs: remote units read ret[dest, pos]; self units read grouped
+    pad_ret = jnp.concatenate(
+        [ret, jnp.zeros((num_ranks, 1, d), ret.dtype)], axis=1)
+    y_remote = pad_ret[layout.unit_dest, jnp.minimum(layout.unit_pair_pos, c_pair)]
+    y_self = padded_out[jnp.minimum(layout.unit_row_self, c_total)]
+    is_self = (layout.unit_row_self < c_total)[:, None].astype(y_self.dtype)
+    y_units = y_self * is_self + y_remote * (1 - is_self)
+    # gate-weighted combine over the k choices of each token
+    U = y_units.shape[0]
+    T = U // top_k
+    y = (y_units.reshape(T, top_k, d)
+         * gates.reshape(T, top_k, 1).astype(y_units.dtype)).sum(axis=1)
+    return y

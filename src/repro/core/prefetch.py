@@ -1,0 +1,87 @@
+"""Asynchronous expert fetching, adapted to TPU (paper §4.3).
+
+On the paper's hardware, experts are paged from *host* memory over PCIe into
+a GPU-side cache, overwriting finished experts. At pod scale every expert
+already lives in some peer's HBM, so the fetch source becomes peer HBM over
+ICI (strictly faster than host DRAM) and the fetch primitive is a collective:
+
+Every rank can compute every rank's foreign-expert needs from the replicated
+schedule (`FIDS[G, K]`), so each source fills, for each destination, the K
+expert-weight slots it hosts, and a single all_to_all delivers them; the
+receiver sums over sources (exactly one source is non-zero per slot, or
+``hosts_per_expert`` sources each contributing 1/hosts share).
+
+XLA's latency-hiding scheduler overlaps this all_to_all with the attention /
+shared-expert compute that precedes the grouped matmul — the analogue of the
+paper's dedicated CUDA stream. The f-dimension is chunked (`fetch_chunk`) so
+the transient buffer stays bounded for large experts (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.topology import EPTopology, local_slot_of
+
+
+def all_foreign_ids(S: jnp.ndarray, topo: EPTopology,
+                    num_foreign_slots: int) -> jnp.ndarray:
+    """FIDS [G, K]: the k-th foreign expert of each destination (-1 = none).
+
+    Replicated-computable: pure function of the replicated schedule S.
+    """
+    G, Ep = topo.num_ranks, topo.padded_experts
+    K = num_foreign_slots
+    tok_e = S.sum(axis=0)                                    # [Ep, G_dst]
+    lsl = jnp.asarray(local_slot_of(topo))                   # [G, Ep]
+    active = (tok_e.T > 0) & (lsl < 0)                       # [G, Ep]
+    f_rank = jnp.cumsum(active.astype(jnp.int32), axis=1) - 1
+    scatter = jnp.where(active, jnp.minimum(f_rank, K), K)   # [G, Ep]
+    fids = jnp.full((G, K + 1), -1, jnp.int32)
+    fids = fids.at[jnp.arange(G)[:, None], scatter].set(
+        jnp.broadcast_to(jnp.arange(Ep, dtype=jnp.int32), (G, Ep)), mode="drop")
+    return fids[:, :K]
+
+
+def fetch_foreign_weights(w_local: jnp.ndarray, fids_all: jnp.ndarray,
+                          me: jnp.ndarray, topo: EPTopology, *,
+                          axis_name: str, fetch_chunk: int = 0) -> jnp.ndarray:
+    """w_local [epr, ...] (this rank's expert shard) -> [K, ...] foreign weights.
+
+    fids_all: FIDS [G, K] replicated. Works leaf-wise; call under tree_map for
+    multi-matrix experts. ``fetch_chunk`` > 0 chunks the last dimension to
+    bound the all_to_all transient for large experts.
+    """
+    G = topo.num_ranks
+    K = fids_all.shape[1]
+    slot_experts = jnp.take(jnp.asarray(topo.slot_map), me, axis=0)  # [epr]
+    # mask[dst, k, j] = 1 iff my local slot j hosts dst's k-th foreign expert
+    mask = (fids_all[:, :, None] == slot_experts[None, None, :])
+    mask = mask.astype(w_local.dtype) / topo.hosts_per_expert
+
+    def one_chunk(w):
+        # outbox[dst, k, ...] = sum_j mask * w_local[j]
+        out = jnp.einsum("dkj,j...->dk...", mask, w)
+        ret = jax.lax.all_to_all(out, axis_name, split_axis=0, concat_axis=0,
+                                 tiled=True)                 # [G_src, K, ...]
+        return ret.sum(axis=0)                               # [K, ...]
+
+    if fetch_chunk and w_local.shape[-1] > fetch_chunk:
+        F = w_local.shape[-1]
+        n = (F + fetch_chunk - 1) // fetch_chunk
+        Fp = n * fetch_chunk
+        w_pad = jnp.pad(w_local, [(0, 0)] * (w_local.ndim - 1) + [(0, Fp - F)])
+        chunks = jnp.moveaxis(
+            w_pad.reshape(w_pad.shape[:-1] + (n, fetch_chunk)), -2, 0)
+        fetched = jax.lax.map(one_chunk, chunks)             # [n, K, ..., chunk]
+        fetched = jnp.moveaxis(fetched, 0, -2).reshape(
+            (K,) + w_local.shape[1:-1] + (Fp,))
+        return fetched[..., :F]
+    return one_chunk(w_local)
+
+
+def gather_all_experts(w_local: jnp.ndarray, *, axis_name: str) -> jnp.ndarray:
+    """Even-Split policy support: replicate the full expert set on every rank
+    (paper §5.3.2 — deliberately expensive; used by benchmarks only)."""
+    return jax.lax.all_gather(w_local, axis_name, axis=0, tiled=True)

@@ -1,0 +1,49 @@
+"""Token-transfer threshold q (paper §4.4, Eq. 4), adapted to TPU v5e.
+
+Paper (GPU):   q > phi * d_type / (2 * beta),  beta = PCIe bandwidth.
+TPU adaptation: the fetch source is peer HBM over ICI and the fetch primitive
+is a dense all_to_all whose ring cost scales the effective bandwidth by ~1/G
+(DESIGN.md §2), so:
+
+    q > phi * d_type / (2 * beta_ici / G_penalty)
+
+with G_penalty = G for the dense a2a fetch (zeros ride the wire) and 1 for a
+hypothetical sparse fetch. The estimator exposes both so benchmarks can show
+the trade-off.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    """TPU v5e per-chip constants (assignment-provided)."""
+    peak_flops: float = 197e12       # bf16 FLOP/s
+    hbm_bw: float = 819e9            # B/s
+    ici_bw: float = 50e9             # B/s per link
+    dtype_bytes: int = 2             # bf16
+
+
+V5E = HardwareSpec()
+
+
+def q_threshold(hw: HardwareSpec = V5E, *, ep_degree: int = 1,
+                dense_fetch: bool = True) -> int:
+    """Eq. 4 with the ICI substitution. Returns a per-chunk token count."""
+    penalty = ep_degree if dense_fetch else 1
+    beta_eff = hw.ici_bw / max(penalty, 1)
+    q = hw.peak_flops * hw.dtype_bytes / (2.0 * beta_eff)
+    return int(q) + 1
+
+
+def expert_fetch_seconds(expert_bytes: float, hw: HardwareSpec = V5E, *,
+                         ep_degree: int = 1, dense_fetch: bool = True) -> float:
+    penalty = ep_degree if dense_fetch else 1
+    return expert_bytes * penalty / hw.ici_bw
+
+
+def expert_compute_seconds(tokens: float, d_model: int, d_ff: int,
+                           n_matrices: int, hw: HardwareSpec = V5E) -> float:
+    flops = 2.0 * tokens * d_model * d_ff * n_matrices
+    return flops / hw.peak_flops

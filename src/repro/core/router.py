@@ -1,0 +1,70 @@
+"""Top-k MoE router + the paper's synthetic expert-popularity skew (§5.1.2).
+
+The router is a dense linear layer producing per-expert logits; assignment is
+top-k with softmax-normalized gate weights over the selected experts
+(Mixtral-style; Switch top-1 is the k=1 special case).
+
+Synthetic skew: with skew ``alpha`` and ``n_hot`` hot experts, the hot set
+shares probability mass ``alpha`` and the remaining experts share ``1-alpha``
+evenly; per-unit experts are sampled from that multinomial (paper §5.1.2).
+This replaces the learned router in benchmarks to inject controlled imbalance.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class RouterOutput(NamedTuple):
+    assign: jnp.ndarray   # [T, k] int32 expert ids
+    gates: jnp.ndarray    # [T, k] float gate weights (sum to 1 across k)
+    counts: jnp.ndarray   # [Ep] int32 histogram of assignments
+    aux_loss: jnp.ndarray # load-balance auxiliary loss (training)
+
+
+def _histogram(assign: jnp.ndarray, num_experts: int) -> jnp.ndarray:
+    return jnp.zeros((num_experts,), jnp.int32).at[assign.reshape(-1)].add(
+        1, mode="drop")
+
+
+def route_topk(x: jnp.ndarray, w_router: jnp.ndarray, *, top_k: int,
+               num_real_experts: int) -> RouterOutput:
+    """x [T, d], w_router [d, Ep] -> top-k assignment.
+
+    Padded (dummy) experts beyond ``num_real_experts`` are masked to -inf so
+    they are never selected.
+    """
+    T, _ = x.shape
+    Ep = w_router.shape[1]
+    logits = (x.astype(jnp.float32) @ w_router.astype(jnp.float32))
+    mask = jnp.arange(Ep) >= num_real_experts
+    logits = jnp.where(mask[None, :], -jnp.inf, logits)
+    top_vals, assign = jax.lax.top_k(logits, top_k)              # [T, k]
+    gates = jax.nn.softmax(top_vals, axis=-1)
+    counts = _histogram(assign, Ep)
+    # Switch-style load-balance aux loss: E * sum_e f_e * p_e
+    probs = jax.nn.softmax(logits, axis=-1)
+    f = counts.astype(jnp.float32) / jnp.maximum(T * top_k, 1)
+    p = probs.mean(axis=0)
+    aux = num_real_experts * jnp.sum(f * p)
+    return RouterOutput(assign.astype(jnp.int32), gates, counts, aux)
+
+
+def route_skewed(key: jax.Array, T: int, *, top_k: int, num_experts: int,
+                 padded_experts: int, alpha: float,
+                 n_hot: int = 1) -> RouterOutput:
+    """Paper §5.1.2 synthetic skew router (for benchmarks / ablations)."""
+    hot = jnp.arange(padded_experts) < n_hot
+    p_hot = alpha / n_hot
+    p_cold = (1.0 - alpha) / max(num_experts - n_hot, 1)
+    probs = jnp.where(hot, p_hot,
+                      jnp.where(jnp.arange(padded_experts) < num_experts,
+                                p_cold, 0.0))
+    logits = jnp.log(jnp.maximum(probs, 1e-30))
+    assign = jax.random.categorical(key, logits[None, :],
+                                    shape=(T, top_k)).astype(jnp.int32)
+    gates = jnp.full((T, top_k), 1.0 / top_k, jnp.float32)
+    counts = _histogram(assign, padded_experts)
+    return RouterOutput(assign, gates, counts, jnp.float32(0.0))

@@ -1,0 +1,201 @@
+"""HarMoEny token scheduling (paper Alg. 2) + baseline policies.
+
+The schedule is the paper's ``S[g_from, e, g_to]`` int32 tensor: number of
+routable units (token, expert-choice) sent from source EP rank ``g_from`` for
+expert ``e`` to destination EP rank ``g_to``.
+
+All policies are *replicated deterministic* computations: every rank runs the
+same function on the same all-gathered metadata and obtains the same schedule
+(paper §4.1 step 3 — no synchronization beyond the metadata exchange).
+
+TPU/static-shape extensions over the paper (DESIGN.md §2):
+  * off-diagonal pair capacity ``c_pair`` (the all_to_all buffer is static);
+    the self-pair (g -> g) bypasses the network and is exempt;
+  * at most ``num_foreign_slots`` distinct non-resident experts per
+    destination (static foreign weight buffers);
+  * bounded iteration count (`max_iters`) for the while_loop.
+
+Invariant (tested by hypothesis): every policy conserves
+``S.sum(axis=2) == counts`` — tokens are never created or destroyed by
+scheduling; only the destination changes. Drops can only happen later, at
+dispatch, when a static buffer overflows, and are counted there.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.topology import EPTopology, local_slot_of
+
+_INT_MAX = jnp.iinfo(jnp.int32).max
+
+
+class ScheduleDiag(NamedTuple):
+    iters: jnp.ndarray          # rebalance iterations executed
+    moved: jnp.ndarray          # total units moved
+    max_load_before: jnp.ndarray
+    max_load_after: jnp.ndarray
+
+
+def initial_assign(counts: jnp.ndarray, topo: EPTopology) -> jnp.ndarray:
+    """Paper Alg.1 line 11: S_initial — route every unit to its expert's host.
+
+    counts: [G, Ep] int32. Returns S: [G, Ep, G] int32. For replicated
+    experts (E < G) the load is split evenly across the host replicas
+    (remainder to the first hosts).
+    """
+    G, Ep = topo.num_ranks, topo.padded_experts
+    r = topo.hosts_per_expert
+    S = jnp.zeros((G, Ep, G), jnp.int32)
+    base = counts // r
+    rem = counts % r
+    for i in range(r):
+        onehot = np.zeros((Ep, G), np.int32)
+        onehot[np.arange(Ep), topo.host_of[:, i]] = 1
+        share = base + (rem > i).astype(jnp.int32)
+        S = S + share[:, :, None] * jnp.asarray(onehot)[None, :, :]
+    return S
+
+
+def even_split(counts: jnp.ndarray, topo: EPTopology) -> jnp.ndarray:
+    """Paper §5.3.2 Even-Split policy: each expert's units split over all G."""
+    G = topo.num_ranks
+    base = counts // G
+    rem = counts % G
+    h = jnp.arange(G, dtype=jnp.int32)
+    return base[:, :, None] + (h[None, None, :] < rem[:, :, None]).astype(jnp.int32)
+
+
+class _LoopState(NamedTuple):
+    S: jnp.ndarray              # [G, Ep, G]
+    foreign: jnp.ndarray        # [G(dest), Ep] bool — active non-resident experts
+    it: jnp.ndarray
+    moved: jnp.ndarray
+    done: jnp.ndarray
+
+
+def rebalance(S_initial: jnp.ndarray, topo: EPTopology, *, q: int,
+              c_pair: int, num_foreign_slots: int,
+              max_iters: int = 128) -> tuple[jnp.ndarray, ScheduleDiag]:
+    """Paper Alg. 2 (greedy token rebalancing) as a lax.while_loop.
+
+    Two imbalance criteria, repaired by the same greedy move
+    (g_from, e_max, g_hot) -> (g_from, e_max, g_min):
+      A. an off-diagonal pair exceeds ``c_pair`` (static-buffer criterion;
+         takes priority and ignores the q-threshold since the alternative is
+         dropping tokens);
+      B. a destination exceeds the average load t_avg (the paper's criterion,
+         guarded by the q-threshold, Alg.2 lines 6-17).
+    """
+    G, Ep = topo.num_ranks, topo.padded_experts
+    is_local = jnp.asarray(local_slot_of(topo) >= 0)            # [G, Ep]
+    offdiag = 1 - jnp.eye(G, dtype=jnp.int32)
+    q = jnp.int32(q)
+
+    total = S_initial.sum()
+    t_avg = total // G                                           # Alg.2 line 4
+
+    def t_g_of(S):
+        return S.sum(axis=(0, 1))                                # line 5
+
+    def cond(st: _LoopState):
+        t_g = t_g_of(st.S)
+        pair_over = (st.S.sum(axis=1) * offdiag) > c_pair
+        return (~st.done) & (st.it < max_iters) & (
+            jnp.any(t_g > t_avg) | jnp.any(pair_over))           # line 6
+
+    def body(st: _LoopState) -> _LoopState:
+        S, foreign = st.S, st.foreign
+        t_g = t_g_of(S)
+        pair = S.sum(axis=1)                                     # [G_src, G_dst]
+        over_pair = pair * offdiag - c_pair
+        has_pair_over = jnp.any(over_pair > 0)
+
+        # --- pick (g_from, g_hot): the chunk we take tokens away from ---
+        flatA = jnp.argmax(over_pair)
+        gA_from, gA_hot = flatA // G, flatA % G
+        gB_hot = jnp.argmax(t_g)                                 # line 7
+        gB_from = jnp.argmax(pair[:, gB_hot])                    # line 8
+        g_hot = jnp.where(has_pair_over, gA_hot, gB_hot)
+        g_from = jnp.where(has_pair_over, gA_from, gB_from)
+
+        col = jnp.take(jnp.take(S, g_from, axis=0), g_hot, axis=1)  # [Ep]
+        e_max = jnp.argmax(col)                                  # line 9
+        t_move = col[e_max]                                      # line 11
+
+        # q-threshold (line 12) only guards the load criterion; pair overflow
+        # must be repaired regardless (or the dispatch buffer drops tokens).
+        stop_q = (~has_pair_over) & (t_move < q)
+
+        # --- pick g_min among *feasible* destinations ---
+        e_local = is_local[:, e_max]                             # [G]
+        e_foreign_active = foreign[:, e_max]
+        n_foreign = foreign.sum(axis=1)
+        slot_ok = e_local | e_foreign_active | (n_foreign < num_foreign_slots)
+        # pair capacity at the candidate destination (self-pair exempt)
+        pair_from = pair[g_from]                                 # [G]
+        pair_slack = jnp.where(jnp.arange(G) == g_from,
+                               _INT_MAX, c_pair - pair_from)
+        allowed = slot_ok & (pair_slack > 0)
+        allowed = allowed.at[g_hot].set(False)
+        g_min = jnp.argmin(jnp.where(allowed, t_g, _INT_MAX))    # line 15
+        none_allowed = ~jnp.any(allowed)
+
+        # destination headroom (line 16/19); pair repair may exceed t_avg by q
+        headroom = t_avg - t_g[g_min] + jnp.where(has_pair_over, q, 0)
+        t_s = jnp.minimum(t_move, jnp.minimum(headroom, pair_slack[g_min]))
+        # for pair repair we only need to shed the overflow
+        t_s = jnp.where(has_pair_over,
+                        jnp.minimum(t_s, jnp.maximum(over_pair[g_from, g_hot], 0)),
+                        t_s)
+
+        stop_cap = (~has_pair_over) & (t_g[g_min] + q > t_avg)   # line 16
+        done = stop_q | none_allowed | (g_min == g_hot) | (t_s <= 0) | stop_cap
+
+        S_new = S.at[g_from, e_max, g_hot].add(-t_s) \
+                 .at[g_from, e_max, g_min].add(t_s)              # lines 20-23
+        f_new = foreign.at[g_min, e_max].set(
+            foreign[g_min, e_max] | ~is_local[g_min, e_max])
+        return _LoopState(
+            S=jnp.where(done, S, S_new),
+            foreign=jnp.where(done, foreign, f_new),
+            it=st.it + 1,
+            moved=st.moved + jnp.where(done, 0, t_s),
+            done=done,
+        )
+
+    init = _LoopState(S_initial, jnp.zeros((G, Ep), bool),
+                      jnp.int32(0), jnp.int32(0), jnp.bool_(False))
+    final = jax.lax.while_loop(cond, body, init)
+    diag = ScheduleDiag(final.it, final.moved,
+                        t_g_of(S_initial).max(), t_g_of(final.S).max())
+    return final.S, diag
+
+
+def schedule(counts: jnp.ndarray, topo: EPTopology, *, policy: str, q: int,
+             c_pair: int, num_foreign_slots: int,
+             max_iters: int = 128) -> tuple[jnp.ndarray, ScheduleDiag]:
+    """counts [G, Ep] -> (S [G, Ep, G], diagnostics) under ``policy``.
+
+    policies: harmoeny | round_robin | even_split | static_opt.
+    ``static_opt`` (ExFlow-like) differs only via the profile-optimized
+    placement baked into ``topo`` — the dispatch itself is round-robin.
+    """
+    S0 = initial_assign(counts, topo)
+    if policy == "harmoeny":
+        return rebalance(S0, topo, q=q, c_pair=c_pair,
+                         num_foreign_slots=num_foreign_slots,
+                         max_iters=max_iters)
+    if policy in ("round_robin", "static_opt"):
+        zero = jnp.int32(0)
+        t_g = S0.sum(axis=(0, 1))
+        return S0, ScheduleDiag(zero, zero, t_g.max(), t_g.max())
+    if policy == "even_split":
+        S = even_split(counts, topo)
+        zero = jnp.int32(0)
+        return S, ScheduleDiag(zero, zero,
+                               S0.sum(axis=(0, 1)).max(), S.sum(axis=(0, 1)).max())
+    raise ValueError(f"unknown policy {policy!r}")

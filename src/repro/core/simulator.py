@@ -1,0 +1,99 @@
+"""Deterministic v5e time model for schedule quality (benchmark backend).
+
+Wall-clock on this container (1 CPU core, fake devices) is meaningless for
+absolute claims, so the benchmarks evaluate policies with (i) exact schedule
+metrics (loads, drops, moves) from the real scheduler, and (ii) this
+calibrated per-rank time model:
+
+  compute[g]  = load[g] * unit_flops / peak_flops        (MoE expert math)
+  fetch[g]    = n_foreign[g] * expert_bytes * fetch_penalty / ici_bw,
+                overlapped with compute (paper §4.3): busy = max(comp, fetch)
+  a2a         = max_g off-diagonal payload bytes / ici_bw   (x2: scatter+gather)
+  metadata    = G*E*4 bytes / ici_bw + launch latency
+  scheduler   = rebalance iterations * per-iter cost (on-device while loop)
+
+  layer time  = max_g busy[g] + a2a + metadata + scheduler
+  idle[g]     = layer - busy[g]   (the paper's Fig. 5/11 waiting time)
+
+The same model underlies the q-threshold discussion (Eq. 4): fetch is
+maskable iff compute >= fetch, i.e. load >= q.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+import numpy as np
+
+from repro.core.qthreshold import HardwareSpec, V5E
+from repro.core.topology import EPTopology, local_slot_of
+
+
+@dataclass(frozen=True)
+class SimCosts:
+    hw: HardwareSpec = V5E
+    d_model: int = 768
+    d_ff: int = 3072
+    n_matrices: int = 2          # 2 for gelu MLP, 3 for swiglu
+    dtype_bytes: int = 2
+    # Fetch transport model: a peer-HBM DMA read over ICI (x2 for link
+    # contention). The current XLA implementation pays ~G x via the dense
+    # all_to_all (zeros ride the wire); a Pallas RDMA fetch would reach this
+    # model's cost — tracked in EXPERIMENTS.md §Perf as the gap between the
+    # compiled collective bytes and this target.
+    fetch_penalty: float = 2.0
+    sched_iter_us: float = 0.15  # argmax/update over S[G,E,G] per iteration
+    launch_us: float = 5.0
+    mfu: float = 0.4             # achievable fraction of peak on expert GEMMs
+
+    @property
+    def unit_flops(self) -> float:
+        return 2.0 * self.d_model * self.d_ff * self.n_matrices
+
+    @property
+    def expert_bytes(self) -> float:
+        return self.n_matrices * self.d_model * self.d_ff * self.dtype_bytes
+
+
+def simulate_layer(S: np.ndarray, topo: EPTopology, costs: SimCosts,
+                   sched_iters: int = 0, drops: int = 0) -> Dict[str, float]:
+    """S: [G, Ep, G] schedule. Returns per-layer timing + balance metrics."""
+    G = topo.num_ranks
+    S = np.asarray(S)
+    load = S.sum(axis=(0, 1)).astype(np.float64)               # per dest
+    lsl = local_slot_of(topo)
+    foreign = np.array([
+        sum(1 for e in range(topo.padded_experts)
+            if S[:, e, g].sum() > 0 and lsl[g, e] < 0)
+        for g in range(G)])
+
+    comp = load * costs.unit_flops / (costs.hw.peak_flops * costs.mfu)
+    fetch = foreign * costs.expert_bytes * costs.fetch_penalty / costs.hw.ici_bw
+    busy = np.maximum(comp, fetch)
+
+    offdiag = S.sum(axis=1) * (1 - np.eye(G, dtype=np.int64))
+    a2a_bytes = max(offdiag.sum(axis=1).max(), offdiag.sum(axis=0).max()) \
+        * costs.d_model * costs.dtype_bytes
+    a2a = 2.0 * a2a_bytes / costs.hw.ici_bw
+    metadata = (G * topo.padded_experts * 4) / costs.hw.ici_bw \
+        + costs.launch_us * 1e-6
+    sched = sched_iters * costs.sched_iter_us * 1e-6 + costs.launch_us * 1e-6
+
+    layer = busy.max() + a2a + metadata + sched
+    idle = layer - busy
+    total_units = float(S.sum())
+    return {
+        "layer_s": float(layer),
+        "compute_s": float(comp.max()),
+        "fetch_s": float(fetch.max()),
+        "a2a_s": float(a2a),
+        "sched_s": float(sched),
+        "metadata_s": float(metadata),
+        "idle_frac_mean": float(idle.mean() / layer) if layer > 0 else 0.0,
+        "idle_frac_max": float(idle.max() / layer) if layer > 0 else 0.0,
+        "max_load": float(load.max()),
+        "mean_load": float(load.mean()),
+        "imbalance": float(load.max() / max(load.mean(), 1e-9)),
+        "tokens_per_s": total_units / layer if layer > 0 else 0.0,
+        "dropped": float(drops),
+    }

@@ -1,0 +1,109 @@
+"""Expert-parallel topology: static expert placement and slot maps.
+
+Ranks are the positions along the EP ("model") mesh axis. Experts are padded
+to a multiple of the EP degree so every rank owns the same number of local
+slots; padded (dummy) experts are never routed to.
+
+Two regimes:
+  * E >= G (switch128, moonshot, qwen):  experts_per_rank = Ep // G, expert e
+    lives on rank ``e % G`` (DeepSpeed-style round-robin).
+  * E <  G (mixtral-8x7b on a 16-wide EP axis): each expert is replicated on
+    ``G // E`` host ranks; rank g hosts expert ``g % E``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.configs.base import round_up
+
+
+@dataclass(frozen=True)
+class EPTopology:
+    num_ranks: int            # G: EP degree (size of the 'model' axis)
+    num_experts: int          # E: real experts
+    padded_experts: int       # Ep: round_up(E, G) when E >= G else E
+    experts_per_rank: int     # local slots per rank
+    hosts_per_expert: int     # replication factor (1 when E >= G)
+    slot_map: np.ndarray      # [G, experts_per_rank] expert id of each local slot
+    host_of: np.ndarray       # [Ep, hosts_per_expert] host ranks of each expert
+
+    @property
+    def is_replicated(self) -> bool:
+        return self.hosts_per_expert > 1
+
+
+def make_topology(num_ranks: int, num_experts: int,
+                  placement: np.ndarray | None = None) -> EPTopology:
+    """Build the static placement.
+
+    ``placement`` optionally permutes experts onto slots (the ExFlow-like
+    ``static_opt`` policy passes a profile-optimized permutation [Ep]).
+    """
+    G = int(num_ranks)
+    E = int(num_experts)
+    if E >= G:
+        Ep = round_up(E, G)
+        epr = Ep // G
+        perm = np.arange(Ep) if placement is None else np.asarray(placement)
+        assert perm.shape == (Ep,)
+        # slot (g, j) hosts expert perm[j * G + g]  (round-robin over ranks)
+        slot_map = perm.reshape(epr, G).T.copy()          # [G, epr]
+        host_of = np.zeros((Ep, 1), np.int64)
+        for g in range(G):
+            for j in range(epr):
+                host_of[slot_map[g, j], 0] = g
+        return EPTopology(G, E, Ep, epr, 1, slot_map.astype(np.int32),
+                          host_of.astype(np.int32))
+    else:
+        assert G % E == 0, f"EP degree {G} must be a multiple of num_experts {E}"
+        r = G // E
+        slot_map = (np.arange(G) % E).reshape(G, 1)
+        host_of = np.zeros((E, r), np.int64)
+        for e in range(E):
+            host_of[e] = np.arange(r) * E + e
+        return EPTopology(G, E, E, 1, r, slot_map.astype(np.int32),
+                          host_of.astype(np.int32))
+
+
+def local_slot_of(topo: EPTopology) -> np.ndarray:
+    """[G, Ep] -> local slot index of expert e on rank g, or -1 if not hosted."""
+    out = -np.ones((topo.num_ranks, topo.padded_experts), np.int32)
+    for g in range(topo.num_ranks):
+        for j in range(topo.experts_per_rank):
+            out[g, topo.slot_map[g, j]] = j
+    return out
+
+
+def static_opt_placement(profile_counts: np.ndarray, num_ranks: int) -> np.ndarray:
+    """ExFlow-like offline placement: greedy bin-packing of expert popularity.
+
+    ``profile_counts`` [E] from a held-out profile batch. Returns a
+    permutation [Ep] such that popular experts are spread across ranks:
+    experts sorted by popularity are dealt round-robin into rank bins in a
+    snake order (largest-processing-time heuristic of the IP the paper's
+    ExFlow baseline solves offline).
+    """
+    E = profile_counts.shape[0]
+    Ep = round_up(E, num_ranks)
+    counts = np.zeros(Ep)
+    counts[:E] = profile_counts
+    order = np.argsort(-counts)                 # most popular first
+    epr = Ep // num_ranks
+    # snake-deal into G bins to equalize bin sums
+    bins: list[list[int]] = [[] for _ in range(num_ranks)]
+    loads = np.zeros(num_ranks)
+    for e in order:
+        g = int(np.argmin(loads))
+        if len(bins[g]) >= epr:               # bin full: next least-loaded with room
+            cand = [i for i in range(num_ranks) if len(bins[i]) < epr]
+            g = cand[int(np.argmin(loads[cand]))]
+        bins[g].append(int(e))
+        loads[g] += counts[e]
+    # perm[j*G + g] = expert in slot j of rank g
+    perm = np.zeros(Ep, np.int64)
+    for g in range(num_ranks):
+        for j in range(epr):
+            perm[j * num_ranks + g] = bins[g][j]
+    return perm

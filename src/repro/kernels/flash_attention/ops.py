@@ -1,0 +1,16 @@
+"""Jitted wrapper used by models/attention.py (layout adaptation)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_kernel
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, interpret: bool = False) -> jnp.ndarray:
+    """q/k/v in model layout [B, S, H, hd] -> [B, S, H, hd]."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o = flash_attention_kernel(qt, kt, vt, causal=causal, interpret=interpret)
+    return o.transpose(0, 2, 1, 3)

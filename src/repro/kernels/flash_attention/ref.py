@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the flash attention kernel (naive softmax)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True) -> jnp.ndarray:
+    """q: [B, H, Sq, hd]; k/v: [B, Hkv, Sk, hd]."""
+    B, H, Sq, hd = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    qf = (q.astype(jnp.float32) * hd ** -0.5).reshape(B, Hkv, rep, Sq, hd)
+    s = jnp.einsum("bgrqh,bgkh->bgrqk", qf, k.astype(jnp.float32))
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrqk,bgkh->bgrqh", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, hd).astype(q.dtype)

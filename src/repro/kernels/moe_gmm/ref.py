@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the fused grouped expert FFN kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _act(name: str, h):
+    return {"gelu": jax.nn.gelu, "relu": jax.nn.relu,
+            "silu": jax.nn.silu}[name](h)
+
+
+def moe_gmm_ref(x: jnp.ndarray, w_in: jnp.ndarray, w_out: jnp.ndarray,
+                tile_group: jnp.ndarray, *,
+                w_gate: Optional[jnp.ndarray] = None, act: str = "gelu",
+                block_m: int = 128) -> jnp.ndarray:
+    """Per-row expert FFN using the tile->group map (exact, O(M*G) masked)."""
+    M, d = x.shape
+    G = w_in.shape[0]
+    row_group = jnp.repeat(tile_group, block_m)[:M]
+    out = jnp.zeros((M, d), jnp.float32)
+    for g in range(G):
+        h = x.astype(jnp.float32) @ w_in[g].astype(jnp.float32)
+        if w_gate is not None:
+            h = _act("silu", x.astype(jnp.float32)
+                     @ w_gate[g].astype(jnp.float32)) * h
+        else:
+            h = _act(act, h)
+        y = h.astype(x.dtype).astype(jnp.float32) @ w_out[g].astype(jnp.float32)
+        out = jnp.where((row_group == g)[:, None], y, out)
+    return out.astype(x.dtype)

@@ -1,0 +1,338 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: the 16x16
+single-pod mesh AND the 2x16x16 multi-pod mesh must compile for every
+assigned architecture x input shape, using ShapeDtypeStruct stand-ins (no
+allocation). Prints memory_analysis() (fits) and cost_analysis() (FLOPs /
+bytes for the roofline), extracts per-collective byte counts from the
+compiled HLO, and caches everything to results/dryrun/<cell>.json so the
+matrix is resumable.
+
+Usage:
+  python -m repro.launch.dryrun --arch stablelm-1.6b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--force]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ASSIGNED, SHAPE_BY_NAME, SHAPES, get_config,
+                           iter_cells)
+from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
+from repro.launch.mesh import make_production_mesh
+from repro.launch import hlo_analysis
+from repro.launch import shardings as SH
+from repro.launch.steps import make_decode_step, make_prefill_step, \
+    make_train_step, optimizer_shapes
+from repro.models.model import MeshShape, build_model
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Sum result-shape bytes of every collective op in the compiled HLO.
+
+    Convention (documented in EXPERIMENTS.md): bytes-on-the-wire per chip is
+    approximated by the op's result bytes, x2 for all-reduce (ring RS+AG).
+    """
+    per_kind: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}]+)\s+(\w[\w\-]*)\(",
+                     stripped)
+        if not m:
+            continue
+        op = m.group(2)
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-start") or op == c + "-done":
+                kind = c
+                break
+        if kind is None or op.endswith("-done"):
+            continue
+        nbytes = _shape_bytes(m.group(1))
+        factor = 2.0 if kind == "all-reduce" else 1.0
+        per_kind[kind] += nbytes * factor
+        counts[kind] += 1
+    total = sum(per_kind.values())
+    return {"per_kind": per_kind, "counts": counts, "total": total}
+
+
+def parallel_config(cfg: ModelConfig, shape: ShapeConfig) -> ParallelConfig:
+    return ParallelConfig(
+        fsdp=(shape.kind == "train"),
+        remat="full" if shape.kind == "train" else "none",
+        shard_kv_seq=(shape.name == "long_500k"),
+        microbatch=4 if shape.kind == "train" else 0,
+        # 512-row MoE tiles: expert-weight HBM traffic scales ~1/block_m
+        # (EXPERIMENTS.md §Perf iteration 4); decode keeps 128 (model.py)
+        moe_block_m=512 if shape.kind != "decode" else 128,
+        use_pallas=False,   # CPU dry-run lowers the XLA reference path
+    )
+
+
+def _sds_with(shapes: Any, shardings: Any) -> Any:
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings)
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               verbose: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPE_BY_NAME[shape_name]
+    pcfg = parallel_config(cfg, shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_shape = MeshShape(tuple(zip(mesh.axis_names, mesh.devices.shape)))
+    n_chips = mesh.devices.size
+
+    model = build_model(cfg, pcfg, batch=shape.global_batch,
+                        seq_len=shape.seq_len, mesh_shape=mesh_shape,
+                        mesh=mesh)
+
+    param_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_shard = SH.param_shardings(param_shapes, cfg, pcfg, mesh)
+    params_in = _sds_with(param_shapes, p_shard)
+    batch_shapes = model.input_specs(shape.kind)
+    batch_in = _sds_with(batch_shapes, SH.batch_shardings(
+        batch_shapes, global_batch=shape.global_batch, mesh=mesh))
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            opt_shapes = optimizer_shapes(param_shapes)
+            o_shard = SH.param_shardings(
+                jax.eval_shape(lambda p: p, opt_shapes.m), cfg, pcfg, mesh)
+            opt_in = jax.tree_util.tree_map(lambda x: x, opt_shapes)
+            opt_in = type(opt_shapes)(
+                jax.ShapeDtypeStruct((), jnp.int32),
+                _sds_with(opt_shapes.m, o_shard),
+                _sds_with(opt_shapes.v, o_shard))
+            step = make_train_step(model)
+            lowered = jax.jit(step, donate_argnums=(0, 1)).lower(
+                params_in, opt_in, batch_in)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(model, s_max=shape.seq_len + 64)
+            lowered = jax.jit(step).lower(params_in, batch_in)
+        else:  # decode
+            cache_shapes = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len))
+            c_shard = SH.cache_shardings(
+                cache_shapes, cfg, global_batch=shape.global_batch, mesh=mesh,
+                shard_kv_seq=pcfg.shard_kv_seq)
+            caches_in = _sds_with(cache_shapes, c_shard)
+            token_in = jax.ShapeDtypeStruct(
+                (shape.global_batch, 1), jnp.int32,
+                sharding=jax.tree.leaves(SH.batch_shardings(
+                    {"t": jax.ShapeDtypeStruct((shape.global_batch, 1),
+                                               jnp.int32)},
+                    global_batch=shape.global_batch, mesh=mesh))[0])
+            pos_in = jax.ShapeDtypeStruct((), jnp.int32)
+            step = make_decode_step(model)
+            lowered = jax.jit(step, donate_argnums=(2,)).lower(
+                params_in, token_in, caches_in, pos_in)
+        t_lower = time.time() - t0
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    corrected = hlo_analysis.analyze(hlo)
+
+    result = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        # raw XLA cost analysis (per device, while-bodies counted ONCE)
+        "flops_raw": float(cost.get("flops", 0.0)),
+        "bytes_raw": float(cost.get("bytes accessed", 0.0)),
+        # trip-count-corrected (per device) — see launch/hlo_analysis.py
+        "flops": corrected["flops"],
+        "bytes_accessed": corrected["bytes_accessed"],
+        "collectives": {
+            "total": corrected["collective_bytes"],
+            "per_kind": corrected["collectives_per_kind"],
+            "counts": corrected["collective_counts"],
+            "uncorrected": coll,
+        },
+        "model_flops": model_flops_estimate(cfg, shape),
+        "param_count": param_count(param_shapes),
+        "hlo_ops": len(hlo.splitlines()),
+    }
+    if verbose:
+        print(f"[{arch} x {shape_name} x "
+              f"{'multi' if multi_pod else 'single'}-pod ({n_chips} chips)]")
+        print(f"  lower {t_lower:.1f}s compile {t_compile:.1f}s")
+        print(f"  memory_analysis: {result['memory']}")
+        print(f"  per-device corrected: flops={result['flops']:.3e} "
+              f"bytes={result['bytes_accessed']:.3e} "
+              f"coll={result['collectives']['total']:.3e}B")
+        print(f"  (xla raw, scan bodies once: flops={result['flops_raw']:.3e})")
+    return result
+
+
+def param_count(param_shapes: Any) -> int:
+    import numpy as np
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(param_shapes)))
+
+
+def model_flops_estimate(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Analytic MODEL_FLOPS (whole step, all chips): 6*N*D train (dense),
+    6*N_active*D (MoE); 2*N(_active)*D for forward-only steps."""
+    n_total, n_active = _active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch  # decode: one token per sequence
+    return 2.0 * n_active * tokens
+
+
+def _active_params(cfg: ModelConfig):
+    """(total, activated-per-token) parameter counts from the config."""
+    d, L = cfg.d_model, cfg.num_layers
+    hd = cfg.resolved_head_dim
+    attn = d * hd * (cfg.num_heads * 2 + cfg.num_kv_heads * 2)
+    n_mats = 3 if cfg.act in ("swiglu", "gelu") else 2
+    dense_ffn = n_mats * d * cfg.d_ff
+    embed = cfg.padded_vocab * d * (1 if cfg.tie_embeddings else 2)
+    ssm = 0
+    if cfg.ssm is not None:
+        from repro.models.mamba2 import mamba_dims
+        dm = mamba_dims(cfg)
+        ssm = 2 * d * dm.d_inner + dm.d_inner * d \
+            + 2 * d * dm.state + d * dm.n_heads
+    if cfg.family == "ssm":
+        total = L * ssm + embed
+        return total, total
+    if cfg.family == "hybrid":
+        shared = attn + dense_ffn
+        total = L * ssm + shared + embed
+        active = total  # shared block applied every group
+        return total, active
+    if cfg.is_moe:
+        m = cfg.moe
+        n_moe = (L - m.first_dense_layers) // m.moe_layer_period
+        n_dense_layers = L - n_moe
+        expert = n_mats * d * m.d_ff_expert
+        shared_e = m.num_shared_experts * expert
+        router = d * m.num_experts
+        total = (L * attn + n_dense_layers * dense_ffn
+                 + n_moe * (m.num_experts * expert + shared_e + router) + embed)
+        active = (L * attn + n_dense_layers * dense_ffn
+                  + n_moe * (m.num_experts_per_tok * expert + shared_e + router)
+                  + embed)
+        return total, active
+    enc = cfg.encoder_layers * (attn + dense_ffn) if cfg.is_encoder_decoder else 0
+    cross = L * 4 * d * cfg.num_heads * hd if cfg.is_encoder_decoder else 0
+    total = L * (attn + dense_ffn) + enc + cross + embed
+    return total, total
+
+
+def cell_path(arch: str, shape_name: str, multi_pod: bool) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    tag = "multi" if multi_pod else "single"
+    return os.path.join(RESULTS_DIR, f"{arch}__{shape_name}__{tag}.json")
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             force: bool = False) -> Dict[str, Any]:
+    path = cell_path(arch, shape_name, multi_pod)
+    if not force and os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    try:
+        result = lower_cell(arch, shape_name, multi_pod=multi_pod)
+    except Exception as e:  # record failures for triage, then re-raise
+        result = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                  "error": f"{type(e).__name__}: {e}",
+                  "traceback": traceback.format_exc()}
+        with open(path + ".failed", "w") as f:
+            json.dump(result, f, indent=2)
+        raise
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=[s.name for s in SHAPES])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    if args.all:
+        ok, failed = 0, []
+        for mp in meshes:
+            for arch, shape, runnable, why in iter_cells(include_skipped=True):
+                if not runnable:
+                    print(f"[skip] {arch} x {shape.name}: {why}")
+                    continue
+                try:
+                    run_cell(arch, shape.name, multi_pod=mp, force=args.force)
+                    ok += 1
+                except Exception as e:
+                    print(f"[FAIL] {arch} x {shape.name} x "
+                          f"{'multi' if mp else 'single'}: {e}")
+                    failed.append((arch, shape.name, mp))
+        print(f"\ndry-run matrix: {ok} cells ok, {len(failed)} failed")
+        for f in failed:
+            print("  FAILED:", f)
+        raise SystemExit(1 if failed else 0)
+
+    assert args.arch and args.shape
+    run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+             force=args.force)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,274 @@
+"""Trip-count-aware HLO analysis for roofline terms.
+
+XLA's ``compiled.cost_analysis()`` visits every computation ONCE — a
+``lax.scan``'s while-body FLOPs are *not* multiplied by the trip count
+(verified empirically; see EXPERIMENTS.md §Method). Since every stack in
+this framework scans over layers, that undercounts compute by ~L x. This
+module reparses ``compiled.as_text()`` and propagates loop multipliers:
+
+  * while ops carry ``backend_config={"known_trip_count":{"n":...}}`` for
+    counted loops (every lax.scan); unknown-trip loops (the HarMoEny
+    scheduler's tiny rebalance loop) default to multiplier 1;
+  * fusion/call ops propagate their caller's multiplier (fusion bodies are
+    counted for FLOPs but not for bytes — operands/results of the fusion
+    node itself model the HBM traffic, which is exactly XLA's own model);
+  * FLOPs counted from dot ops (2 * prod(result) * prod(contracted dims)) —
+    >99% of model compute; bytes from operand+result sizes of top-level ops;
+    collective bytes from result sizes (x2 for all-reduce: ring RS+AG).
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from typing import Any, Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_NAME_RE = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+
+
+def _parse_instr(line: str) -> Optional[Tuple[str, str, str, str]]:
+    """'%x = TYPE op(...), attrs' -> (name, type, op, rest). Handles tuple
+    types containing /*index=N*/ comments via paren balancing."""
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    type_str, rest = rest[:i + 1], rest[i + 1:]
+                    break
+        else:
+            return None
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str, rest = rest[:sp], rest[sp:]
+    rest = rest.strip()
+    om = re.match(r"([\w\-]+)\(", rest)
+    if not om:
+        return None
+    return name, type_str, om.group(1), rest[om.end():]
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\((.*?)\)\s*->")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "after-all", "iota", "partition-id", "replica-id"}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+class Instruction:
+    __slots__ = ("name", "type_str", "op", "rest")
+
+    def __init__(self, name, type_str, op, rest):
+        self.name, self.type_str, self.op, self.rest = name, type_str, op, rest
+
+
+def parse_module(hlo: str) -> Dict[str, Dict[str, Any]]:
+    """computation name -> {instrs: [Instruction], types: {name: type_str}}."""
+    comps: Dict[str, Dict[str, Any]] = {}
+    current: Optional[Dict[str, Any]] = None
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        if not line or line.startswith("//"):
+            continue
+        if (line.startswith("%") or line.startswith("ENTRY")) and "->" in line \
+                and line.endswith("{"):
+            m = _COMP_RE.match(line)
+            if m:
+                current = {"instrs": [], "types": {}}
+                comps[m.group(1)] = current
+                # parameters: "name: type, name: type" (types may contain
+                # commas inside brackets/parens — split carefully)
+                params = m.group(2)
+                for pm in re.finditer(r"([\w.\-]+):\s*((?:\([^)]*\))|(?:[\w\[\],]+))",
+                                      params):
+                    current["types"][pm.group(1)] = pm.group(2)
+            continue
+        if line.startswith("}"):
+            continue
+        if current is None:
+            continue
+        parsed = _parse_instr(line)
+        if parsed is None:
+            continue
+        name, type_str, op, rest = parsed
+        current["instrs"].append(Instruction(name, type_str, op, rest))
+        current["types"][name] = type_str
+    return comps
+
+
+def _find_entry(comps: Dict[str, Dict[str, Any]], hlo: str) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo, re.MULTILINE)
+    if m and m.group(1) in comps:
+        return m.group(1)
+    # fall back: computation never referenced by others
+    referenced = set()
+    for c in comps.values():
+        for ins in c["instrs"]:
+            for r in re.findall(r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)",
+                                ins.rest):
+                referenced.add(r)
+    for name in comps:
+        if name not in referenced:
+            return name
+    return next(iter(comps))
+
+
+def _multipliers(comps: Dict[str, Dict[str, Any]], entry: str
+                 ) -> Tuple[Dict[str, float], Dict[str, bool]]:
+    mult: Dict[str, float] = defaultdict(float)
+    fused: Dict[str, bool] = defaultdict(bool)
+    mult[entry] = 1.0
+    stack = [entry]
+    seen_edges = set()
+    while stack:
+        comp = stack.pop()
+        m = mult[comp]
+        for ins in comps[comp]["instrs"]:
+            targets: List[Tuple[str, float, bool]] = []
+            if ins.op == "while":
+                trip = 1.0
+                tm = re.search(r'"known_trip_count":\{"n":"(\d+)"', ins.rest)
+                if tm:
+                    trip = float(tm.group(1))
+                for key in ("body", "condition"):
+                    bm = re.search(rf"{key}=%?([\w.\-]+)", ins.rest)
+                    if bm:
+                        targets.append((bm.group(1), m * trip,
+                                        fused[comp]))
+            elif ins.op == "fusion":
+                fm = re.search(r"calls=%?([\w.\-]+)", ins.rest)
+                if fm:
+                    targets.append((fm.group(1), m, True))
+            elif ins.op in ("call", "custom-call", "async-start"):
+                fm = re.search(r"to_apply=%?([\w.\-]+)", ins.rest)
+                if fm:
+                    targets.append((fm.group(1), m, fused[comp]))
+            elif ins.op == "conditional":
+                for bm in re.finditer(r"(?:branch_computations=\{([^}]*)\}|"
+                                      r"(?:true|false)_computation=%?([\w.\-]+))",
+                                      ins.rest):
+                    names = bm.group(1) or bm.group(2) or ""
+                    for nm in re.findall(r"%?([\w.\-]+)", names):
+                        targets.append((nm, m, fused[comp]))
+            for tgt, tm_, fz in targets:
+                if tgt not in comps:
+                    continue
+                edge = (comp, tgt)
+                if mult[tgt] < tm_ or edge not in seen_edges:
+                    mult[tgt] = max(mult[tgt], tm_)
+                    fused[tgt] = fused[tgt] or fz
+                    seen_edges.add(edge)
+                    stack.append(tgt)
+    return mult, fused
+
+
+def _dot_flops(ins: Instruction, types: Dict[str, str]) -> float:
+    result_elems = 1
+    for d in _shape_dims(ins.type_str):
+        result_elems *= d
+    ops = re.findall(r"%([\w.\-]+)", ins.rest.split("),")[0])
+    if not ops:
+        return 0.0
+    lhs_type = types.get(ops[0], "")
+    lhs_dims = _shape_dims(lhs_type)
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+    contracted = 1
+    if cm and lhs_dims:
+        for idx in cm.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                contracted *= lhs_dims[int(idx)]
+    return 2.0 * result_elems * contracted
+
+
+def analyze(hlo: str) -> Dict[str, Any]:
+    """Trip-count-corrected {flops, bytes, collectives{...}} for one module."""
+    comps = parse_module(hlo)
+    entry = _find_entry(comps, hlo)
+    mult, fused = _multipliers(comps, entry)
+
+    flops = 0.0
+    bytes_all = 0.0      # every non-fused op: unfused worst case
+    bytes_dot = 0.0      # dot/conv/gather/scatter/collective traffic only:
+                         # models the fused TPU target (elementwise chains
+                         # stay in VMEM/registers; see EXPERIMENTS.md §Method)
+    coll_bytes: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    coll_counts: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        types = comp["types"]
+        for ins in comp["instrs"]:
+            in_fusion = fused.get(cname, False)
+            base = ins.op.replace("-start", "").replace("-done", "")
+            is_coll = base in _COLLECTIVES and not ins.op.endswith("-done")
+            if ins.op in ("dot", "dot-general"):
+                flops += m * _dot_flops(ins, types)
+            if ins.op in _SKIP_BYTES:
+                continue
+            if ins.op in ("dynamic-slice", "gather"):
+                nbytes = 2 * _type_bytes(ins.type_str)
+                dot_nbytes = nbytes
+            elif ins.op in ("dynamic-update-slice", "scatter"):
+                ops_ = re.findall(r"%([\w.\-]+)", ins.rest)
+                upd = types.get(ops_[1]) if len(ops_) > 1 else None
+                nbytes = 2 * _type_bytes(upd or ins.type_str)
+                dot_nbytes = nbytes
+            else:
+                nbytes = _type_bytes(ins.type_str)
+                for opn in re.findall(r"%([\w.\-]+)", ins.rest)[:8]:
+                    t = types.get(opn)
+                    if t:
+                        nbytes += _type_bytes(t)
+                dot_nbytes = nbytes if (
+                    ins.op in ("dot", "dot-general", "convolution")
+                    or is_coll) else 0.0
+            if not in_fusion:
+                bytes_all += m * nbytes
+            # dots may live inside (CPU) wrapper fusions: count regardless
+            bytes_dot += m * dot_nbytes
+            if is_coll:
+                factor = 2.0 if base == "all-reduce" else 1.0
+                coll_bytes[base] += m * _type_bytes(ins.type_str) * factor
+                coll_counts[base] += m
+    return {
+        "flops": flops,
+        "bytes_accessed": bytes_dot,
+        "bytes_all": bytes_all,
+        "collective_bytes": sum(coll_bytes.values()),
+        "collectives_per_kind": coll_bytes,
+        "collective_counts": coll_counts,
+    }

@@ -1,0 +1,206 @@
+"""Sharding rules: parameter / optimizer / cache PartitionSpecs per arch.
+
+Parallelism mapping (DESIGN.md §3):
+  * EP   — MoE expert slot rows over 'model' (required by the shard_map island)
+  * TP   — attention heads, dense-FFN hidden, SSM inner channels, vocab over
+           'model' (skipped per-leaf when not divisible, e.g. whisper's 20 heads)
+  * DP   — batch over ('pod', 'data')
+  * FSDP — with ``ParallelConfig.fsdp``, params/opt-state additionally sharded
+           over 'data' on a non-'model' dim; XLA all-gathers at use
+  * SP   — long-context KV caches: sequence over 'data' when batch can't shard
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _tp(nd: int, *trailing) -> P:
+    """PartitionSpec on the trailing dims, leading (stacking) dims replicated."""
+    lead = nd - len(trailing)
+    return P(*([None] * lead + list(trailing)))
+
+
+def param_spec(path, leaf, cfg: ModelConfig, *, ep: int, fsdp: bool,
+               data: int) -> P:
+    name = _path_str(path)
+    shape = leaf.shape
+    nd = len(shape)
+
+    def div(n, by):
+        return by > 0 and n % by == 0
+
+    # ---------- base (TP/EP) rule ----------
+    if "embed" in name or "lm_head" in name:
+        # vocab sharding pays for big tables (and their gradients); small
+        # tables replicate — XLA's sharded-gather lowering (one-hot select +
+        # all-reduce, in f32) costs several [B,S,d] buffers per lookup
+        big_vocab = shape[-2] >= 100_000
+        spec = (_tp(nd, "model", None) if div(shape[-2], ep) and big_vocab
+                else _tp(nd, None, None))
+    elif "router" in name:
+        spec = _tp(nd, None, None)
+    elif "/moe/" in name and ("w_in" in name or "w_gate" in name or "w_out" in name):
+        if div(shape[-3], ep):                   # EP: expert slot rows over 'model'
+            spec = _tp(nd, "model", None, None)
+        elif "w_out" in name and div(shape[-2], ep):
+            spec = _tp(nd, None, "model", None)  # TP mode: d_ff-sliced
+        elif "w_out" not in name and div(shape[-1], ep):
+            spec = _tp(nd, None, None, "model")
+        else:
+            spec = _tp(nd, None, None, None)
+    elif name.endswith("wq") or name.endswith("wk") or name.endswith("wv"):
+        spec = (_tp(nd, None, "model", None) if div(shape[-2], ep)
+                else _tp(nd, None, None, None))
+    elif name.endswith("wo"):
+        spec = (_tp(nd, "model", None, None) if div(shape[-3], ep)
+                else _tp(nd, None, None, None))
+    elif "w_in" in name or "w_gate" in name:     # dense MLP column-parallel
+        spec = (_tp(nd, None, "model") if div(shape[-1], ep)
+                else _tp(nd, None, None))
+    elif "w_out" in name:                        # dense MLP row-parallel
+        spec = (_tp(nd, "model", None) if div(shape[-2], ep)
+                else _tp(nd, None, None))
+    elif name.endswith("wz") or name.endswith("wx"):
+        spec = (_tp(nd, None, "model") if div(shape[-1], ep)
+                else _tp(nd, None, None))
+    elif name.endswith("out_proj"):
+        spec = (_tp(nd, "model", None) if div(shape[-2], ep)
+                else _tp(nd, None, None))
+    elif name.endswith("conv_x"):
+        spec = (_tp(nd, None, "model") if div(shape[-1], ep)
+                else _tp(nd, None, None))
+    elif name.endswith("A_log") or name.endswith("/D") or name.endswith("dt_bias"):
+        spec = _tp(nd, "model") if div(shape[-1], ep) else _tp(nd, None)
+    elif name.endswith("norm_scale"):
+        spec = _tp(nd, "model") if div(shape[-1], ep) else _tp(nd, None)
+    else:
+        spec = P(*([None] * nd))
+
+    # ---------- FSDP overlay: shard one replicated dim over 'data' ----------
+    if fsdp and data > 1 and leaf.size >= (1 << 16):
+        parts = list(spec) + [None] * (nd - len(spec))
+        # NEVER the leading dim of stacked (>=3D) leaves: that's the
+        # scan-over-layers stack, and slicing a 'data'-sharded stack forces
+        # XLA to all-gather ALL layers' weights inside every scan step
+        # (observed 40x AG blowup on mistral-nemo train — EXPERIMENTS.md
+        # §Perf iteration 1).
+        start = 1 if nd >= 3 else 0
+        for i in range(start, nd):
+            if parts[i] is None and div(shape[i], data):
+                parts[i] = "data"
+                break
+        spec = P(*parts)
+    return spec
+
+
+def param_shardings(param_shapes: Any, cfg: ModelConfig, pcfg: ParallelConfig,
+                    mesh: jax.sharding.Mesh) -> Any:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ep = sizes.get("model", 1)
+    data = sizes.get("data", 1)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, param_spec(path, leaf, cfg, ep=ep, fsdp=pcfg.fsdp,
+                             data=data)),
+        param_shapes)
+
+
+# ----------------------------------------------------------------------
+# KV / SSM cache shardings
+# ----------------------------------------------------------------------
+def cache_spec(path, leaf, cfg: ModelConfig, *, batch_axes, ep: int,
+               shard_kv_seq: bool) -> P:
+    name = _path_str(path)
+    shape = leaf.shape
+    nd = len(shape)
+
+    def div(n, by):
+        return by > 0 and n % by == 0
+
+    bspec = batch_axes if batch_axes else None
+    if name.endswith("/k") or name.endswith("/v"):
+        # [(stack dims...), B, S, Hkv, hd]. Prefer head sharding (TP decode);
+        # when heads don't divide the axis, shard the SEQUENCE over 'model'
+        # instead (flash-decode style — XLA partitions the softmax reduction)
+        if div(shape[-2], ep):
+            head_s, seq_s = "model", ("data" if shard_kv_seq else None)
+        elif div(shape[-3], ep):
+            head_s, seq_s = None, "model"
+        else:
+            head_s, seq_s = None, None
+        if bspec is not None:
+            return _tp(nd, bspec, seq_s if seq_s == "model" else None,
+                       head_s, None)
+        if seq_s != "model" and shard_kv_seq and div(shape[-3], 1):
+            seq_s = "data"
+        return _tp(nd, None, seq_s, head_s, None)
+    if "ssm" in name:
+        # [(stack), B, H, P, N]
+        head_s = "model" if div(shape[-3], ep) else None
+        return _tp(nd, bspec, head_s, None, None)
+    if "conv_x" in name:
+        ch_s = "model" if div(shape[-1], ep) else None
+        return _tp(nd, bspec, None, ch_s)
+    if "conv" in name:
+        return _tp(nd, bspec, None, None)
+    return P(*([None] * nd))
+
+
+def cache_shardings(cache_shapes: Any, cfg: ModelConfig, *, global_batch: int,
+                    mesh: jax.sharding.Mesh, shard_kv_seq: bool = False) -> Any:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ep = sizes.get("model", 1)
+    cand = [a for a in ("pod", "data") if a in sizes]
+    batch_axes: tuple = ()
+    prod = 1
+    for a in cand:
+        if global_batch % (prod * sizes[a]) == 0:
+            batch_axes += (a,)
+            prod *= sizes[a]
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, cache_spec(path, leaf, cfg, batch_axes=batch_axes, ep=ep,
+                             shard_kv_seq=shard_kv_seq and not batch_axes)),
+        cache_shapes)
+
+
+def batch_shardings(batch_shapes: Any, *, global_batch: int,
+                    mesh: jax.sharding.Mesh) -> Any:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    cand = [a for a in ("pod", "data") if a in sizes]
+    batch_axes: tuple = ()
+    prod = 1
+    for a in cand:
+        if global_batch % (prod * sizes[a]) == 0:
+            batch_axes += (a,)
+            prod *= sizes[a]
+    bspec = batch_axes if batch_axes else None
+    return jax.tree.map(
+        lambda leaf: NamedSharding(
+            mesh, P(*([bspec] + [None] * (len(leaf.shape) - 1)))),
+        batch_shapes)
+
+
+def replicated(tree: Any, mesh: jax.sharding.Mesh) -> Any:
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, P(*([None] * len(leaf.shape)))), tree)

@@ -1,0 +1,78 @@
+"""Step functions (train / prefill / decode) assembled from model + optimizer.
+
+Shared by train.py, serve.py, dryrun.py and the benchmarks so the compiled
+artifact analyzed in the dry-run is exactly what the drivers run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+
+
+def make_train_step(model: Model, *, lr: float = 3e-4):
+    """Training step with optional microbatch gradient accumulation.
+
+    ``pcfg.microbatch`` > 1 scans over microbatches accumulating f32 grads
+    and defers the (compressed) data-parallel reduction + optimizer update to
+    the tail — the standard compute/comm-overlap schedule, and it bounds the
+    per-step activation residuals to one microbatch (DESIGN.md §3).
+    """
+    n_ub = max(model.pcfg.microbatch, 1)
+
+    def grads_of(params, batch, skew_key):
+        def loss_fn(p):
+            loss, diags = model.train_loss(p, batch, skew_key)
+            return loss, diags
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def train_step(params, opt_state: AdamWState, batch, skew_key=None):
+        if n_ub == 1:
+            (loss, diags), grads = grads_of(params, batch, skew_key)
+        else:
+            ub_batch = jax.tree.map(
+                lambda x: x.reshape((n_ub, x.shape[0] // n_ub) + x.shape[1:]),
+                batch)
+
+            def acc_step(acc, ub):
+                (loss, diags), g = grads_of(params, ub, skew_key)
+                g32 = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                   acc[0], g)
+                return (g32, acc[1] + loss), diags
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, loss_sum), diags = jax.lax.scan(
+                acc_step, (zeros, jnp.float32(0.0)), ub_batch)
+            grads = jax.tree.map(lambda g: g / n_ub, gsum)
+            loss = loss_sum / n_ub
+            diags = jax.tree.map(lambda d: d.mean(), diags)
+        new_params, new_opt = adamw_update(grads, opt_state, params, lr=lr)
+        return new_params, new_opt, loss, diags
+    return train_step
+
+
+def make_prefill_step(model: Model, *, s_max: int):
+    def prefill_step(params, batch):
+        logits, caches, pos, diags = model.prefill(params, batch, s_max=s_max)
+        token = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        return token, caches, pos, diags
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, token, caches, pos):
+        logits, new_caches, new_pos, diags = model.decode_step(
+            params, token, caches, pos)
+        new_token = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        return new_token, new_caches, new_pos, diags
+    return decode_step
+
+
+def optimizer_shapes(param_shapes: Any) -> AdamWState:
+    return jax.eval_shape(adamw_init, param_shapes)

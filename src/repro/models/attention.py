@@ -1,0 +1,242 @@
+"""Attention: GQA/MHA with RoPE, sliding window, logit softcap.
+
+Prefill/train path: chunked ("flash-style") attention — a lax.scan over KV
+blocks with an online softmax, so the [S, S] score matrix is never
+materialized (memory-roofline honest at 32k). The Pallas flash kernel
+(kernels/flash_attention) is the TPU-target equivalent; this is its oracle
+twin used for dry-runs and CPU tests.
+
+Decode path: one query position against a static-size KV cache with position
+masking. Distributed long-context decode works by *sharding constraint*: the
+cache's sequence dim carries P('data') and XLA partitions the reduction
+(distributed softmax) — no shard_map needed (DESIGN.md §3 SP).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope
+
+_NEG_INF = -1e30
+
+
+def init_attention(key: jax.Array, cfg: ModelConfig, dtype) -> Dict[str, jnp.ndarray]:
+    d, H, Hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    s = (2.0 / d) ** 0.5
+    return {
+        "wq": (jax.random.normal(ks[0], (d, H, hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, Hkv, hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, Hkv, hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (H, hd, d)) * s).astype(dtype),
+    }
+
+
+def _softcap(scores: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if cap <= 0:
+        return scores
+    return cap * jnp.tanh(scores / cap)
+
+
+def _repeat_kv(k: jnp.ndarray, rep: int) -> jnp.ndarray:
+    """GQA: repeat kv heads to the q-head count. An explicit repeat keeps the
+    q-head sharding intact (a [Hkv, rep] reshape would split across the
+    sharded head dim and force XLA to all-gather q — observed 8.6 GB/chunk
+    score blowups on mixtral prefill before this change)."""
+    return jnp.repeat(k, rep, axis=2) if rep > 1 else k
+
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      causal: bool, window: int = 0, softcap: float = 0.0,
+                      chunk: int = 1024,
+                      q_offset: int = 0) -> jnp.ndarray:
+    """Online-softmax attention.
+
+    q: [B, Sq, H, hd]; k/v: [B, Sk, Hkv, hd] with H = Hkv * rep.
+    Scans KV in blocks of ``chunk``; running (max, denom, acc) carried.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    chunk = min(chunk, Sk)
+    n_chunks = -(-Sk // chunk)
+    Skp = n_chunks * chunk
+    if Skp != Sk:
+        k = jnp.pad(k, ((0, 0), (0, Skp - Sk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Skp - Sk), (0, 0), (0, 0)))
+    k = _repeat_kv(k, rep)
+    v = _repeat_kv(v, rep)
+    scale = hd ** -0.5
+    qf = q.astype(jnp.float32) * scale                     # [B, Sq, H, hd]
+    q_pos = q_offset + jnp.arange(Sq)
+
+    kc = k.reshape(B, n_chunks, chunk, H, hd)
+    vc = v.reshape(B, n_chunks, chunk, H, hd)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kb, vb, c0 = inp
+        kv_pos = c0 + jnp.arange(chunk)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kb.astype(jnp.float32))
+        s = _softcap(s, softcap)
+        mask = kv_pos[None, :] < Sk
+        if causal:
+            mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+        if window > 0:
+            mask = mask & (q_pos[:, None] - kv_pos[None, :] < window)
+        s = jnp.where(mask[None, None, :, :], s, _NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Sq), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, hd), jnp.float32)
+    c0s = jnp.arange(n_chunks) * chunk
+    # checkpoint the chunk body: backward recomputes the [Sq, chunk] score
+    # block instead of storing it per chunk (flash-style backward memory)
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(step), (m0, l0, a0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), c0s))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def full_attention_ref(q, k, v, *, causal, window=0, softcap=0.0, q_offset=0):
+    """Naive O(S^2)-memory oracle for tests."""
+    B, Sq, H, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    k = _repeat_kv(k, rep)
+    v = _repeat_kv(v, rep)
+    qf = q.astype(jnp.float32) * hd ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", qf, k.astype(jnp.float32))
+    s = _softcap(s, softcap)
+    q_pos = q_offset + jnp.arange(Sq)
+    kv_pos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kv_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        mask &= q_pos[:, None] - kv_pos[None, :] < window
+    s = jnp.where(mask[None, None], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bhqd", p, v.astype(jnp.float32))
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     cache_len: jnp.ndarray, *, window: int = 0,
+                     softcap: float = 0.0) -> jnp.ndarray:
+    """q: [B, 1, H, hd]; caches: [B, S_max, Hkv, hd]; cache_len: scalar int
+    (entries < cache_len are valid; the new token's K/V must already be
+    written at cache_len - 1)."""
+    B, _, H, hd = q.shape
+    S_max, Hkv = k_cache.shape[1], k_cache.shape[2]
+    rep = H // Hkv
+    kr = _repeat_kv(k_cache, rep)
+    vr = _repeat_kv(v_cache, rep)
+    qf = (q.astype(jnp.float32) * hd ** -0.5)[:, 0]        # [B, H, hd]
+    s = jnp.einsum("bhd,bkhd->bhk", qf, kr.astype(jnp.float32))
+    s = _softcap(s, softcap)
+    kv_pos = jnp.arange(S_max)
+    mask = kv_pos < cache_len
+    if window > 0:
+        mask = mask & (kv_pos >= cache_len - window)
+    s = jnp.where(mask[None, None, :], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhk,bkhd->bhd", p, vr.astype(jnp.float32))
+    return out[:, None].astype(q.dtype)
+
+
+class AttnCache(NamedTuple):
+    k: jnp.ndarray   # [B, S_max, Hkv, hd]
+    v: jnp.ndarray
+
+
+def attention_block(x: jnp.ndarray, p: Dict[str, jnp.ndarray],
+                    cfg: ModelConfig, *, causal: bool = True,
+                    is_global: bool = True, q_offset: int = 0,
+                    cache: Optional[AttnCache] = None,
+                    cache_len: Optional[jnp.ndarray] = None,
+                    kv_source: Optional[jnp.ndarray] = None,
+                    attn_chunk: int = 1024,
+                    use_pallas: bool = False, interpret: bool = False,
+                    ) -> Tuple[jnp.ndarray, Optional[AttnCache]]:
+    """Full attention sub-layer (projections + RoPE + attention + out-proj).
+
+    Modes:
+      * prefill/train: cache=None -> chunked attention over x itself
+        (or ``kv_source`` for cross-attention), returns fresh cache if
+        cache_len is not None.
+      * decode: cache given, x is [B, 1, d]; writes K/V at cache_len-1.
+    """
+    B, S, d = x.shape
+    window = 0 if (is_global and cfg.global_attn_every) else cfg.sliding_window
+    softcap = cfg.attn_logit_softcap
+    kv_in = x if kv_source is None else kv_source
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", kv_in, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", kv_in, p["wv"])
+
+    if cfg.rope_theta > 0 and kv_source is None:
+        q_pos = q_offset + jnp.arange(S)
+        q = apply_rope(q, q_pos, cfg.rope_theta)
+        k_pos = q_offset + jnp.arange(kv_in.shape[1])
+        k = apply_rope(k, k_pos, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None and S > 1:
+        # prefill with a pre-allocated cache: full causal attention over x,
+        # then write the computed K/V into the cache prefix [0, S).
+        out = chunked_attention(q, k, v, causal=causal, window=window,
+                                softcap=softcap, chunk=attn_chunk,
+                                q_offset=0)
+        S_max = cache.k.shape[1]
+        kw = k[:, :S_max].astype(cache.k.dtype)
+        vw = v[:, :S_max].astype(cache.v.dtype)
+        if S >= S_max and window > 0 and S_max <= window:
+            kw, vw = k[:, S - S_max:].astype(cache.k.dtype), \
+                v[:, S - S_max:].astype(cache.v.dtype)  # ring: keep the tail
+        k_cache = jax.lax.dynamic_update_slice(cache.k, kw, (0, 0, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(cache.v, vw, (0, 0, 0, 0))
+        y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+        return y, AttnCache(k_cache, v_cache)
+    if cache is not None:
+        # decode: write the new K/V at position cache_len-1, attend over cache.
+        # Sliding-window caches sized to the window act as ring buffers
+        # (mixtral long_500k): slots are overwritten in place and the window
+        # constraint is enforced by the overwrite itself.
+        S_max = cache.k.shape[1]
+        ring = window > 0 and S_max <= window
+        pos = ((cache_len - 1) % S_max) if ring else (cache_len - 1)
+        k_cache = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype),
+                                               (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
+                                               (0, pos, 0, 0))
+        eff_len = jnp.minimum(cache_len, S_max) if ring else cache_len
+        out = decode_attention(q, k_cache, v_cache, eff_len,
+                               window=0 if ring else window, softcap=softcap)
+        new_cache = AttnCache(k_cache, v_cache)
+    else:
+        if use_pallas and causal and window == 0 and softcap == 0.0:
+            from repro.kernels.flash_attention.ops import flash_attention
+            out = flash_attention(q, k, v, causal=True, interpret=interpret)
+        else:
+            out = chunked_attention(q, k, v, causal=causal, window=window,
+                                    softcap=softcap, chunk=attn_chunk,
+                                    q_offset=q_offset)
+        if cache_len is not None:
+            # prefill: keep the K/V we just computed as the cache prefix
+            new_cache = AttnCache(k, v)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_cache

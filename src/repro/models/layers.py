@@ -1,0 +1,100 @@
+"""Shared building blocks: norms, RoPE, MLPs, embeddings."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """Reduction in f32, scaling in the input dtype: the normalized output
+    stays bf16, so downstream SP all-gathers move bf16 not f32 (halved
+    collective bytes — EXPERIMENTS.md §Perf iteration 3)."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = (jax.lax.rsqrt(var + eps) * (1.0 + scale)).astype(x.dtype)
+    return x * inv
+
+
+def layernorm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+              eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    return ((x - mu.astype(x.dtype)) * (inv * scale).astype(x.dtype)
+            + bias.astype(x.dtype))
+
+
+def norm(x: jnp.ndarray, p: Dict[str, jnp.ndarray], kind: str) -> jnp.ndarray:
+    if kind == "rmsnorm":
+        return rmsnorm(x, p["scale"])
+    return layernorm(x, p["scale"], p["bias"])
+
+
+def init_norm(d: int, kind: str) -> Dict[str, jnp.ndarray]:
+    if kind == "rmsnorm":
+        return {"scale": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+# ----------------------------------------------------------------------
+# RoPE
+# ----------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: [..., S, H, hd]; positions: [..., S] (broadcastable)."""
+    if theta <= 0:
+        return x
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # [..,S,1,hd/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, d: int) -> jnp.ndarray:
+    """Whisper-style absolute sinusoidal embeddings [S, d]."""
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, jnp.float32) * (-jnp.log(10000.0) / (d // 2 - 1)))
+    ang = pos * div[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)[:, :d]
+
+
+# ----------------------------------------------------------------------
+# Dense MLPs
+# ----------------------------------------------------------------------
+def init_mlp(key: jax.Array, d: int, f: int, act: str, dtype) -> Dict[str, jnp.ndarray]:
+    ks = jax.random.split(key, 3)
+    si, so = (2.0 / d) ** 0.5, (2.0 / f) ** 0.5
+    p = {"w_in": (jax.random.normal(ks[0], (d, f)) * si).astype(dtype),
+         "w_out": (jax.random.normal(ks[1], (f, d)) * so).astype(dtype)}
+    if act in ("swiglu", "gelu"):  # gated variants (geglu for gemma2)
+        p["w_gate"] = (jax.random.normal(ks[2], (d, f)) * si).astype(dtype)
+    return p
+
+
+def mlp(x: jnp.ndarray, p: Dict[str, jnp.ndarray], act: str) -> jnp.ndarray:
+    h = x @ p["w_in"]
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * h
+    elif act == "gelu":
+        h = jax.nn.gelu(x @ p["w_gate"]) * h
+    elif act == "gelu_mlp":
+        h = jax.nn.gelu(h)
+    elif act == "relu_mlp":
+        h = jax.nn.relu(h)
+    else:
+        raise ValueError(act)
+    return h @ p["w_out"]
+
+
+def init_embedding(key: jax.Array, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)

@@ -1,0 +1,215 @@
+"""Mamba2 block: SSD (state-space duality, arXiv:2405.21060).
+
+Prefill/train: the chunked SSD algorithm — a lax.scan over sequence chunks;
+within a chunk the quadratic (attention-like) form is used, across chunks the
+recurrent state [B, H, P, N] is carried. Linear in sequence length, so
+long_500k decodes/prefills without quadratic blowup.
+
+Decode: the O(1) recurrence h <- dA*h + dt*x (x) B, y = h . C.
+
+Projections are stored per-component (z, x, B, C, dt) rather than as one
+fused in_proj so each can carry its natural TP sharding (x/z: column-parallel
+over 'model'; B/C/dt tiny, replicated) without mid-tensor resharding; the
+causal convs are likewise per-component. B and C are shared across heads
+(ngroups=1) as in the reference implementation.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.layers import rmsnorm
+
+
+class MambaDims(NamedTuple):
+    d_inner: int
+    n_heads: int
+    head_dim: int
+    state: int
+    conv_w: int
+
+
+def mamba_dims(cfg: ModelConfig) -> MambaDims:
+    s: SSMConfig = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = s.num_heads or (d_inner // s.head_dim)
+    return MambaDims(d_inner, n_heads, s.head_dim, s.state_dim, s.conv_width)
+
+
+def init_mamba(key: jax.Array, cfg: ModelConfig, dtype) -> Dict[str, jnp.ndarray]:
+    dm = mamba_dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    s_in = (2.0 / d) ** 0.5
+    return {
+        "wz": (jax.random.normal(ks[0], (d, dm.d_inner)) * s_in).astype(dtype),
+        "wx": (jax.random.normal(ks[1], (d, dm.d_inner)) * s_in).astype(dtype),
+        "wB": (jax.random.normal(ks[2], (d, dm.state)) * s_in).astype(dtype),
+        "wC": (jax.random.normal(ks[3], (d, dm.state)) * s_in).astype(dtype),
+        "wdt": (jax.random.normal(ks[4], (d, dm.n_heads)) * s_in).astype(dtype),
+        "out_proj": (jax.random.normal(ks[5], (dm.d_inner, d))
+                     * (2.0 / dm.d_inner) ** 0.5).astype(dtype),
+        "conv_x": (jax.random.normal(ks[6], (dm.conv_w, dm.d_inner)) * 0.2
+                   ).astype(dtype),
+        "conv_B": (jax.random.normal(ks[7], (dm.conv_w, dm.state)) * 0.2
+                   ).astype(dtype),
+        "conv_C": (jax.random.normal(jax.random.fold_in(key, 9),
+                                     (dm.conv_w, dm.state)) * 0.2).astype(dtype),
+        "conv_bx": jnp.zeros((dm.d_inner,), dtype),
+        "conv_bB": jnp.zeros((dm.state,), dtype),
+        "conv_bC": jnp.zeros((dm.state,), dtype),
+        "A_log": jnp.log(jnp.arange(1, dm.n_heads + 1, dtype=jnp.float32)),
+        "D": jnp.ones((dm.n_heads,), jnp.float32),
+        "dt_bias": jnp.full((dm.n_heads,), -2.0, jnp.float32),
+        "norm_scale": jnp.zeros((dm.d_inner,), jnp.float32),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv + silu. x: [B, L, C]; w: [W, C]; state: last W-1
+    inputs (for decode continuity)."""
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(W))
+    new_state = xp[:, -(W - 1):, :] if W > 1 else state
+    return jax.nn.silu(y + b[None, None, :]), new_state
+
+
+class MambaState(NamedTuple):
+    ssm: jnp.ndarray      # [B, H, P, N] float32
+    conv_x: jnp.ndarray   # [B, W-1, d_inner]
+    conv_B: jnp.ndarray   # [B, W-1, N]
+    conv_C: jnp.ndarray   # [B, W-1, N]
+
+
+def init_state(batch: int, cfg: ModelConfig, dtype=jnp.float32) -> MambaState:
+    dm = mamba_dims(cfg)
+    return MambaState(
+        ssm=jnp.zeros((batch, dm.n_heads, dm.head_dim, dm.state), jnp.float32),
+        conv_x=jnp.zeros((batch, dm.conv_w - 1, dm.d_inner), dtype),
+        conv_B=jnp.zeros((batch, dm.conv_w - 1, dm.state), dtype),
+        conv_C=jnp.zeros((batch, dm.conv_w - 1, dm.state), dtype))
+
+
+def ssd_chunked(xh: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                Bs: jnp.ndarray, Cs: jnp.ndarray, *, chunk: int,
+                init_ssm: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan.
+
+    xh: [B, L, H, P]; dt: [B, L, H] (post-softplus); A: [H] (negative);
+    Bs/Cs: [B, L, N]. Returns (y [B, L, H, P], final state [B, H, P, N]).
+    """
+    Bb, L, H, Pd = xh.shape
+    N = Bs.shape[-1]
+    Q = min(chunk, L)
+    n_chunks = -(-L // Q)
+    Lp = n_chunks * Q
+    if Lp != L:
+        xh = jnp.pad(xh, ((0, 0), (0, Lp - L), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, Lp - L), (0, 0)))
+        Bs = jnp.pad(Bs, ((0, 0), (0, Lp - L), (0, 0)))
+        Cs = jnp.pad(Cs, ((0, 0), (0, Lp - L), (0, 0)))
+
+    xh = xh.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    Bs = Bs.astype(jnp.float32)
+    Cs = Cs.astype(jnp.float32)
+
+    logdA = dt * A[None, None, :]                                # [B, Lp, H]
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape(Bb, n_chunks, Q, *t.shape[2:]), 1, 0)
+
+    xc, dtc, Bc, Cc, ldc = map(to_chunks, (xh, dt, Bs, Cs, logdA))
+
+    def step(state, inp):
+        x_q, dt_q, B_q, C_q, ld_q = inp                          # [B, Q, ...]
+        Lcum = jnp.cumsum(ld_q, axis=1)                          # [B, Q, H]
+        # within-chunk quadratic form
+        G = jnp.einsum("bqn,bsn->bqs", C_q, B_q)                 # [B, Q, Q]
+        decay = jnp.exp(Lcum[:, :, None, :] - Lcum[:, None, :, :])  # [B,Q,S,H]
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        W = jnp.where(tri[None, :, :, None], G[..., None] * decay, 0.0)
+        xdt = x_q * dt_q[..., None]                              # [B, Q, H, P]
+        y_diag = jnp.einsum("bqsh,bshp->bqhp", W, xdt)
+        # off-diagonal: contribution of the carried state
+        y_off = jnp.einsum("bqn,bhpn,bqh->bqhp", C_q, state,
+                           jnp.exp(Lcum))
+        # chunk state and carry update
+        rem = jnp.exp(Lcum[:, -1:, :] - Lcum)                    # decay to chunk end
+        S_c = jnp.einsum("bsh,bshp,bsn->bhpn", rem, xdt, B_q)
+        state_new = state * jnp.exp(Lcum[:, -1])[:, :, None, None] + S_c
+        return state_new, y_diag + y_off
+
+    state0 = (jnp.zeros((Bb, H, Pd, N), jnp.float32)
+              if init_ssm is None else init_ssm)
+    state_f, ys = jax.lax.scan(jax.checkpoint(step), state0,
+                               (xc, dtc, Bc, Cc, ldc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bb, Lp, H, Pd)[:, :L]
+    return y, state_f
+
+
+def ssd_recurrent_ref(xh, dt, A, Bs, Cs):
+    """Naive per-step recurrence oracle for tests."""
+    Bb, L, H, Pd = xh.shape
+    N = Bs.shape[-1]
+    state = jnp.zeros((Bb, H, Pd, N), jnp.float32)
+    ys = []
+    for t in range(L):
+        dA = jnp.exp(dt[:, t] * A[None, :])                      # [B, H]
+        upd = jnp.einsum("bhp,bn->bhpn", xh[:, t] * dt[:, t, :, None], Bs[:, t])
+        state = state * dA[:, :, None, None] + upd
+        ys.append(jnp.einsum("bhpn,bn->bhp", state, Cs[:, t]))
+    return jnp.stack(ys, axis=1), state
+
+
+def mamba_block(x: jnp.ndarray, p: Dict[str, jnp.ndarray], cfg: ModelConfig,
+                *, state: Optional[MambaState] = None,
+                ) -> Tuple[jnp.ndarray, Optional[MambaState]]:
+    """x: [B, L, d] -> [B, L, d]. state given => stateful (decode or resume)."""
+    dm = mamba_dims(cfg)
+    dtype = x.dtype
+    z = x @ p["wz"]
+    xc = x @ p["wx"]
+    Bs = x @ p["wB"]
+    Cs = x @ p["wC"]
+    dt = x @ p["wdt"]
+    cx = state.conv_x if state is not None else None
+    cB = state.conv_B if state is not None else None
+    cC = state.conv_C if state is not None else None
+    xc, ncx = _causal_conv(xc, p["conv_x"], p["conv_bx"], cx)
+    Bs, ncB = _causal_conv(Bs, p["conv_B"], p["conv_bB"], cB)
+    Cs, ncC = _causal_conv(Cs, p["conv_C"], p["conv_bC"], cC)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    xh = xc.reshape(*xc.shape[:2], dm.n_heads, dm.head_dim)
+
+    L = x.shape[1]
+    init_ssm = state.ssm if state is not None else None
+    if L == 1 and state is not None:
+        # decode: single recurrence step
+        dA = jnp.exp(dt[:, 0] * A[None, :])                      # [B, H]
+        xdt = xh[:, 0].astype(jnp.float32) * dt[:, 0, :, None]
+        upd = jnp.einsum("bhp,bn->bhpn", xdt, Bs[:, 0].astype(jnp.float32))
+        ssm = init_ssm * dA[:, :, None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", ssm, Cs[:, 0].astype(jnp.float32))
+        y = y[:, None]                                           # [B, 1, H, P]
+    else:
+        y, ssm = ssd_chunked(xh, dt, A, Bs.astype(jnp.float32),
+                             Cs.astype(jnp.float32), chunk=cfg.ssm.chunk_size,
+                             init_ssm=init_ssm)
+    new_state = (MambaState(ssm, ncx, ncB, ncC)
+                 if state is not None else None)
+
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(*y.shape[:2], dm.d_inner).astype(dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"])
+    return y @ p["out_proj"], new_state

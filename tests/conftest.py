@@ -1,0 +1,7 @@
+# NOTE: deliberately does NOT set --xla_force_host_platform_device_count:
+# smoke tests and benches must see the real single device; distributed tests
+# spawn subprocesses with their own XLA_FLAGS (see tests/test_distributed.py).
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

