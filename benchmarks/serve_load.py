@@ -1,0 +1,127 @@
+"""Serving load benchmark: arrival rate × router skew × policy sweep.
+
+Runs the repro.serve continuous-batching engine on a reduced Mixtral-family
+MoE over 2 CPU-emulated devices (model/expert-parallel) and emits a
+machine-readable ``BENCH_serve.json`` — per-cell TTFT/TPOT percentiles,
+decode tokens/s, occupancy, and HarMoEny schedule diagnostics — so future
+PRs can regress against the serving-perf trajectory.
+
+  PYTHONPATH=src python benchmarks/serve_load.py [--out BENCH_serve.json]
+"""
+import argparse
+import json
+import os
+import platform
+import sys
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=2")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses                                            # noqa: E402
+
+import jax                                                    # noqa: E402
+
+from repro.configs import get_config                          # noqa: E402
+from repro.configs.base import ParallelConfig                 # noqa: E402
+from repro.launch.mesh import make_host_mesh                  # noqa: E402
+from repro.models.model import MeshShape, build_model         # noqa: E402
+from repro.serve import (ServeEngine, engine_config_for,      # noqa: E402
+                         poisson_requests)
+
+ARCH = "mixtral-8x7b"
+MODEL_PAR = 2
+PROMPT_LEN, GEN, SLOTS, N_REQ = 32, 8, 4, 12
+PREFILL_CHUNK = 16
+RATES = [0.0, 50.0]            # req/s; 0 = closed batch
+SKEWS = [0.0, 0.9]
+POLICIES = ["harmoeny", "round_robin"]
+
+
+def build_engine(skew: float, policy: str, skew_seed: int):
+    cfg = get_config(ARCH).reduced()
+    moe = dataclasses.replace(cfg.moe, policy=policy)
+    if skew > 0:
+        moe = dataclasses.replace(moe, router_skew=skew)
+    cfg = cfg.replace(moe=moe)
+    mesh = make_host_mesh(data=1, model=MODEL_PAR)
+    ms = MeshShape(tuple(zip(mesh.axis_names, mesh.devices.shape)))
+    model = build_model(cfg, ParallelConfig(attn_chunk=PROMPT_LEN),
+                        batch=SLOTS, seq_len=PROMPT_LEN,
+                        mesh_shape=ms, mesh=mesh)
+    with mesh:
+        params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(
+        model, params,
+        engine_config_for(cfg, max_slots=SLOTS, prompt_len=PROMPT_LEN,
+                          max_new_tokens=GEN, prefill_chunk=PREFILL_CHUNK,
+                          skew_seed=skew_seed),
+        mesh=mesh)
+    engine.warmup()
+    return cfg, engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_serve.json"))
+    args = ap.parse_args()
+
+    results = []
+    for skew in SKEWS:
+        for policy in POLICIES:
+            cfg, engine = build_engine(skew, policy, skew_seed=1)
+            for rate in RATES:
+                engine.reset_metrics()
+                reqs = poisson_requests(
+                    N_REQ, rate=rate, vocab_size=cfg.vocab_size,
+                    prompt_len=PROMPT_LEN, max_new_tokens=GEN, seed=0)
+                rep = engine.run(reqs)
+                moe = rep.get("moe", {})
+                cell = {
+                    "rate": rate, "skew": skew, "policy": policy,
+                    "n_requests": rep["n_requests"],
+                    "ttft_p50_ms": rep["ttft"]["p50"] * 1e3,
+                    "ttft_p99_ms": rep["ttft"]["p99"] * 1e3,
+                    "tpot_p50_ms": rep["tpot"]["p50"] * 1e3,
+                    "tpot_p99_ms": rep["tpot"]["p99"] * 1e3,
+                    "e2e_p50_ms": rep["e2e"]["p50"] * 1e3,
+                    "tok_s": rep["throughput_tok_s"],
+                    "mean_occupancy": rep["mean_occupancy"],
+                    "decode_steps": rep["decode_steps"],
+                    "prefill_chunks": rep["prefill_chunks"],
+                    "recompiled_after_warmup":
+                        rep.get("recompiled_after_warmup"),
+                    "moved_units": moe.get("prefill/moved_units", 0.0),
+                    "drops": (moe.get("prefill/send_drops", 0.0)
+                              + moe.get("prefill/dest_drops", 0.0)),
+                    "max_load_before": moe.get("prefill/max_load_before",
+                                               0.0),
+                    "max_load_after": moe.get("prefill/max_load_after", 0.0),
+                }
+                results.append(cell)
+                print(f"[bench] skew={skew} policy={policy:11s} rate={rate:5.0f} "
+                      f"ttft_p50={cell['ttft_p50_ms']:8.1f}ms "
+                      f"tpot_p50={cell['tpot_p50_ms']:6.2f}ms "
+                      f"tok/s={cell['tok_s']:6.1f}")
+
+    out = {
+        "meta": {
+            "bench": "serve_load", "arch": ARCH, "reduced": True,
+            "devices": len(jax.devices()), "model_par": MODEL_PAR,
+            "slots": SLOTS, "n_requests": N_REQ,
+            "prompt_len": PROMPT_LEN, "gen": GEN,
+            "prefill_chunk": PREFILL_CHUNK,
+            "backend": jax.default_backend(),
+            "platform": platform.platform(),
+            "jax": jax.__version__,
+        },
+        "results": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"[bench] wrote {os.path.abspath(args.out)} "
+          f"({len(results)} cells)")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,12 +14,12 @@ import jax.numpy as jnp
 
 from repro.configs.base import MoEConfig
 from repro.core.moe_layer import MoEBlockSpec, init_moe_params, moe_block
+from repro.launch.mesh import make_mesh
 
 B, S, D_MODEL, D_FF = 4, 128, 64, 128
 NUM_EXPERTS, TOP_K = 16, 2
 
-mesh = jax.make_mesh((1, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((1, 4), ("data", "model"))
 
 for policy in ("round_robin", "harmoeny"):
     moe = MoEConfig(

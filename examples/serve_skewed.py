@@ -1,26 +1,72 @@
 """End-to-end serving under heavy expert skew (paper §5.2's scenario).
 
-Serves a reduced Mixtral-family MoE with batched requests through prefill +
-decode, comparing HarMoEny and round-robin token scheduling under a 90%-hot
-router. Prints TTFT, decode throughput, and schedule diagnostics.
+Serves a reduced Mixtral-family MoE through the repro.serve
+continuous-batching engine — Poisson arrivals admitted into freed decode
+slots, chunked prefill interleaved with decode — comparing HarMoEny and
+round-robin token scheduling under a 90%-hot router. Prints per-request
+TTFT/TPOT percentiles, decode throughput, and schedule diagnostics.
 
   PYTHONPATH=src python examples/serve_skewed.py
 """
-import subprocess
-import sys
 import os
+import sys
 
-HERE = os.path.dirname(__file__)
-SRC = os.path.join(HERE, "..", "src")
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-for policy in ("round_robin", "harmoeny"):
-    print(f"=== policy: {policy} ===")
-    env = dict(os.environ)
-    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
-    subprocess.run(
-        [sys.executable, "-m", "repro.launch.serve", "--arch", "mixtral-8x7b",
-         "--reduced", "--batch", "4", "--prompt-len", "64", "--gen", "8",
-         "--skew", "0.9", "--policy", policy, "--model-par", "4",
-         "--data-par", "1"],
-        env=env, check=True)
+import dataclasses                                            # noqa: E402
+
+import jax                                                    # noqa: E402
+
+from repro.configs import get_config                          # noqa: E402
+from repro.configs.base import ParallelConfig                 # noqa: E402
+from repro.launch.mesh import make_host_mesh                  # noqa: E402
+from repro.models.model import MeshShape, build_model         # noqa: E402
+from repro.serve import (ServeEngine, engine_config_for,      # noqa: E402
+                         poisson_requests)
+
+PROMPT_LEN, GEN, SLOTS, N_REQ, RATE, SKEW = 64, 8, 4, 8, 50.0, 0.9
+
+
+def run_policy(policy: str):
+    cfg = get_config("mixtral-8x7b").reduced()
+    cfg = cfg.replace(moe=dataclasses.replace(
+        cfg.moe, router_skew=SKEW, policy=policy))
+    mesh = make_host_mesh(data=1, model=4)
+    ms = MeshShape(tuple(zip(mesh.axis_names, mesh.devices.shape)))
+    model = build_model(cfg, ParallelConfig(attn_chunk=PROMPT_LEN),
+                        batch=SLOTS, seq_len=PROMPT_LEN,
+                        mesh_shape=ms, mesh=mesh)
+    with mesh:
+        params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(
+        model, params,
+        engine_config_for(cfg, max_slots=SLOTS, prompt_len=PROMPT_LEN,
+                          max_new_tokens=GEN, skew_seed=1),
+        mesh=mesh)
+    engine.warmup()
+    reqs = poisson_requests(N_REQ, rate=RATE, vocab_size=cfg.vocab_size,
+                            prompt_len=PROMPT_LEN, max_new_tokens=GEN,
+                            seed=0)
+    return engine.run(reqs)
+
+
+def main():
+    for policy in ("round_robin", "harmoeny"):
+        print(f"=== policy: {policy} ===")
+        rep = run_policy(policy)
+        moe = rep.get("moe", {})
+        drops = moe.get("prefill/send_drops", 0) \
+            + moe.get("prefill/dest_drops", 0)
+        print(f"  TTFT p50 {rep['ttft']['p50'] * 1e3:8.1f} ms  "
+              f"p99 {rep['ttft']['p99'] * 1e3:8.1f} ms")
+        print(f"  TPOT p50 {rep['tpot']['p50'] * 1e3:8.2f} ms   "
+              f"decode {rep['throughput_tok_s']:.1f} tok/s")
+        print(f"  prefill schedule: moved={moe.get('prefill/moved_units', 0):.0f} "
+              f"drops={drops:.0f} max_load "
+              f"{moe.get('prefill/max_load_before', 0):.0f}->"
+              f"{moe.get('prefill/max_load_after', 0):.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Tier-1 suite + a 2-device CPU serving smoke (the ISSUE acceptance path).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1 tests =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+
+echo "== 2-device CPU serve smoke =="
+XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+python -m repro.launch.serve --arch mixtral-8x7b --reduced --model-par 2 \
+    --skew 0.9 --prompt-len 32 --gen 8 --requests 6 --rate 20
+
+echo "smoke OK"

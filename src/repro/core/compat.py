@@ -1,0 +1,34 @@
+"""Compatibility shims for jax API drift across supported versions.
+
+The repo targets current jax, but must degrade gracefully on 0.4.x (the
+container toolchain): ``shard_map`` lived in ``jax.experimental`` and took
+``check_rep`` instead of ``check_vma``; ``jax.sharding.AxisType`` did not
+exist (see launch/mesh.py for the mesh-side shim).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(*args, **kwargs):
+    """``jax.shard_map`` where available, else the experimental one (with
+    ``check_vma`` mapped back to its old name ``check_rep``)."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+    return sm(*args, **kwargs)
+
+
+def tpu_compiler_params(**kwargs):
+    """Pallas-TPU compiler params across the CompilerParams /
+    TPUCompilerParams rename."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams",
+                  getattr(pltpu, "TPUCompilerParams", None))
+    if cls is None:
+        raise ImportError(
+            "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+            "TPUCompilerParams; unsupported jax version")
+    return cls(**kwargs)

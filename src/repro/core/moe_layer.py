@@ -30,6 +30,8 @@ from repro.core.grouped_ffn import grouped_ffn
 from repro.core.qthreshold import q_threshold
 from repro.core.topology import EPTopology, make_topology
 
+from repro.core.compat import shard_map as _shard_map
+
 
 @dataclass(frozen=True)
 class MoEBlockSpec:
@@ -133,7 +135,9 @@ def init_moe_params(key: jax.Array, spec: MoEBlockSpec,
 
 def _moe_forward_local(x_rep: jnp.ndarray, params: Dict[str, jnp.ndarray],
                        spec: MoEBlockSpec, n_valid: int,
-                       skew_key: Optional[jax.Array]) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+                       skew_key: Optional[jax.Array],
+                       valid_rep: Optional[jnp.ndarray] = None
+                       ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """Per-rank body (inside shard_map). x_rep: [t_pad, d] replicated over EP."""
     topo = spec.topo
     moe = spec.moe
@@ -159,9 +163,16 @@ def _moe_forward_local(x_rep: jnp.ndarray, params: Dict[str, jnp.ndarray],
     else:
         r_out = R.route_topk(x_slice, params["router"], top_k=k,
                              num_real_experts=moe.num_experts)
-    # mark padding tokens with the sentinel expert id Ep (never scheduled)
+    # mark padding tokens with the sentinel expert id Ep (never scheduled);
+    # valid_rep additionally masks caller-declared dead tokens (inactive
+    # decode slots, prompt-chunk padding) out of routing and capacity
     tok_idx = me * t_slice + jnp.arange(t_slice)
     valid_tok = tok_idx < n_valid
+    if valid_rep is not None:
+        v_slice = valid_rep if spec.seq_sharded else \
+            jax.lax.dynamic_slice_in_dim(valid_rep, me * t_slice, t_slice,
+                                         axis=0)
+        valid_tok = valid_tok & v_slice
     assign = jnp.where(valid_tok[:, None], r_out.assign, Ep)
     counts = jnp.zeros((Ep,), jnp.int32).at[assign.reshape(-1)].add(
         1, mode="drop")
@@ -316,7 +327,7 @@ def tp_moe_block(x: jnp.ndarray, params: Dict[str, jnp.ndarray], *,
                      "aux_loss", "send_drops", "dest_drops", "sched_iters",
                      "moved_units", "max_load_before", "max_load_after",
                      "mean_load")})
-    fn = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+    fn = _shard_map(body, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs, check_vma=False)
     return fn(x, params["router"], params["w_in"], params["w_out"],
               params.get("w_gate"), skew_key)
@@ -324,14 +335,21 @@ def tp_moe_block(x: jnp.ndarray, params: Dict[str, jnp.ndarray], *,
 
 def moe_block(x: jnp.ndarray, params: Dict[str, jnp.ndarray], *,
               spec: MoEBlockSpec, mesh: jax.sharding.Mesh,
-              skew_key: Optional[jax.Array] = None
+              skew_key: Optional[jax.Array] = None,
+              valid_mask: Optional[jnp.ndarray] = None
               ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """Global-view MoE block. x: [B, S, d] -> [B, S, d], diagnostics.
 
     Batch is sharded over ``spec.batch_axes``; experts over ``spec.ep_axis``
     (or d_ff over ``spec.ep_axis`` in TP mode — see MoEBlockSpec).
+    ``valid_mask`` [B, S] (bool) excludes dead tokens — inactive serving
+    slots, prompt-chunk padding — from routing, capacity, and the schedule
+    diagnostics; their outputs are still produced (garbage) and must be
+    discarded by the caller.
     """
     if spec.tp_mode:
+        # TP-MoE is capacity-free and compute-balanced; dead tokens cannot
+        # drop real ones, so the mask is unnecessary there.
         return tp_moe_block(x, params, spec=spec, mesh=mesh,
                             skew_key=skew_key)
     P = jax.sharding.PartitionSpec
@@ -340,22 +358,28 @@ def moe_block(x: jnp.ndarray, params: Dict[str, jnp.ndarray], *,
 
     epr = spec.topo.experts_per_rank
 
-    def body(xb, p_router, p_in, p_out, p_gate, key):
+    def body(xb, p_router, p_in, p_out, p_gate, key, vmask):
         B_loc, S_loc = xb.shape[0], xb.shape[1]
         flat = xb.reshape(B_loc * S_loc, d)
         prm = {"router": p_router, "w_in": p_in, "w_out": p_out}
         if p_gate is not None:
             prm["w_gate"] = p_gate
         if spec.seq_sharded:
-            # xb is already this rank's token slice
-            y, diag = _moe_forward_local(flat, prm, spec,
-                                         flat.shape[0] * spec.ep_degree, key)
+            # xb (and vmask) are already this rank's token slice
+            y, diag = _moe_forward_local(
+                flat, prm, spec, flat.shape[0] * spec.ep_degree, key,
+                valid_rep=None if vmask is None else vmask.reshape(-1))
             y = y.reshape(B_loc, S_loc, d)
         else:
             n_valid = flat.shape[0]
             t_pad = round_up(max(n_valid, spec.ep_degree), spec.ep_degree)
             x_rep = jnp.pad(flat, ((0, t_pad - n_valid), (0, 0)))
-            y, diag = _moe_forward_local(x_rep, prm, spec, n_valid, key)
+            v_rep = None
+            if vmask is not None:
+                v_rep = jnp.pad(vmask.reshape(-1),
+                                (0, t_pad - n_valid))   # pads are invalid
+            y, diag = _moe_forward_local(x_rep, prm, spec, n_valid, key,
+                                         valid_rep=v_rep)
             y = y[:n_valid].reshape(B_loc, S_loc, d)
         return y, diag
 
@@ -367,13 +391,14 @@ def moe_block(x: jnp.ndarray, params: Dict[str, jnp.ndarray], *,
         P(spec.ep_axis, None, None),
         (P(spec.ep_axis, None, None) if "w_gate" in params else None),
         (P() if skew_key is not None else None),
+        (P(batch_spec, x_seq_spec) if valid_mask is not None else None),
     )
     out_specs = (P(batch_spec, x_seq_spec, None),
                  {k: P(batch_spec) for k in (
                      "aux_loss", "send_drops", "dest_drops", "sched_iters",
                      "moved_units", "max_load_before", "max_load_after",
                      "mean_load")})
-    fn = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+    fn = _shard_map(body, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs, check_vma=False)
     return fn(x, params["router"], params["w_in"], params["w_out"],
-              params.get("w_gate"), skew_key)
+              params.get("w_gate"), skew_key, valid_mask)

@@ -33,6 +33,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.compat import tpu_compiler_params as _tpu_compiler_params
+
 
 def _apply_act(act: str, h):
     if act == "gelu":
@@ -122,7 +124,7 @@ def moe_gmm(x: jnp.ndarray, w_in: jnp.ndarray, w_out: jnp.ndarray,
     fn = pl.pallas_call(
         kernel, grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((M, d), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_tpu_compiler_params(
             dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret)
     return fn(tile_group.astype(jnp.int32), *operands)

@@ -1,29 +1,34 @@
-"""Serving driver: batched prefill + decode with HarMoEny load balancing.
+"""Serving CLI: a thin driver over the ``repro.serve`` continuous-batching
+engine (HarMoEny load balancing under request streams).
 
 Example (CPU, small MoE, heavy synthetic skew):
   PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --reduced \
       --batch 4 --prompt-len 64 --gen 16 --skew 0.9 --model-par 4
 
-Reports TTFT (prefill latency), decode tokens/s, and the HarMoEny schedule
-diagnostics (moved units, drops, load balance) — the paper's §5 metrics.
+The old one-shot semantics (one closed batch of ``--batch`` prompts,
+lockstep greedy decode) are the default: ``--requests N --rate R`` opens the
+loop with N Poisson arrivals at R req/s, admitted into freed decode slots as
+earlier requests finish. Reports per-request TTFT/TPOT percentiles, decode
+tokens/s, and the HarMoEny schedule diagnostics (moved units, drops, load
+balance) — the paper's §5 metrics.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
+import json
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.configs.base import ParallelConfig
 from repro.launch.mesh import make_host_mesh
 from repro.models.model import MeshShape, build_model
+from repro.serve import (ServeEngine, engine_config_for, load_trace,
+                         poisson_requests)
 
 
-def serve(args):
+def config_from_args(args):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
@@ -32,70 +37,89 @@ def serve(args):
             cfg.moe, router_skew=args.skew, policy=args.policy))
     elif cfg.moe is not None:
         cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, policy=args.policy))
-    pcfg = ParallelConfig(attn_chunk=min(512, args.prompt_len))
-    n_dev = len(jax.devices())
-    data = args.data_par or max(1, n_dev // max(args.model_par, 1))
-    mesh = make_host_mesh(data=data, model=args.model_par)
+    return cfg
+
+
+def build_serving_engine(args, cfg=None, *, prompt_len=None, gen=None):
+    """Config + model + engine from CLI args (shared with examples).
+
+    ``prompt_len``/``gen`` override the CLI shapes (trace-driven runs size
+    the engine from the trace, not the defaults)."""
+    cfg = cfg if cfg is not None else config_from_args(args)
+    prompt_len = prompt_len or args.prompt_len
+    gen = gen or args.gen
+    pcfg = ParallelConfig(attn_chunk=min(512, prompt_len))
+    if args.data_par > 1:
+        raise NotImplementedError(
+            "the serving engine shards the model/expert axis only; "
+            "--data-par must be 1 (data-parallel serving is an open item)")
+    mesh = make_host_mesh(data=1, model=args.model_par)
     ms = MeshShape(tuple(zip(mesh.axis_names, mesh.devices.shape)))
-    model = build_model(cfg, pcfg, batch=args.batch, seq_len=args.prompt_len,
+    model = build_model(cfg, pcfg, batch=args.batch, seq_len=prompt_len,
                         mesh_shape=ms, mesh=mesh)
-
-    rng = np.random.default_rng(args.seed)
-    prompts = rng.integers(0, cfg.vocab_size,
-                           (args.batch, args.prompt_len)).astype(np.int32)
-    batch = {"tokens": jnp.asarray(prompts)}
-    if cfg.is_encoder_decoder:
-        batch["frames"] = jnp.zeros(
-            (args.batch, cfg.encoder_seq_len, cfg.d_model), jnp.float32)
-    if cfg.num_prefix_embeddings:
-        batch["patches"] = jnp.zeros(
-            (args.batch, cfg.num_prefix_embeddings, cfg.d_model), jnp.float32)
-    if cfg.is_moe and args.skew > 0:
-        batch["skew_key"] = jax.random.PRNGKey(args.seed)
-
-    s_max = args.prompt_len + args.gen + cfg.num_prefix_embeddings + 8
     with mesh:
         params = model.init(jax.random.PRNGKey(0))
-        prefill = jax.jit(lambda p, b: model.prefill(p, b, s_max=s_max))
-        decode = jax.jit(model.decode_step)
+    ecfg = engine_config_for(
+        cfg, max_slots=args.batch, prompt_len=prompt_len,
+        max_new_tokens=gen, prefill_chunk=args.prefill_chunk,
+        skew_seed=args.seed + 1)
+    engine = ServeEngine(model, params, ecfg, mesh=mesh)
+    return cfg, engine
 
-        # warmup/compile excluded from TTFT
-        logits, caches, pos, diags = jax.block_until_ready(
-            prefill(params, batch))
-        t0 = time.time()
-        logits, caches, pos, diags = jax.block_until_ready(
-            prefill(params, batch))
-        ttft = time.time() - t0
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
 
-        generated = [np.asarray(tok)]
-        skew_key = jax.random.PRNGKey(args.seed + 1)
-        t0 = time.time()
-        for i in range(args.gen - 1):
-            logits, caches, pos, ddiags = decode(params, tok, caches, pos)
-            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-            generated.append(np.asarray(tok))
-        jax.block_until_ready(tok)
-        dt = time.time() - t0
-        tput = args.batch * (args.gen - 1) / max(dt, 1e-9)
+def serve(args):
+    cfg = config_from_args(args)
+    if args.trace:
+        requests = load_trace(args.trace, vocab_size=cfg.vocab_size)
+        prompt_len = max(r.prompt_len for r in requests)
+        gen = max(r.max_new_tokens for r in requests)
+    else:
+        n = args.requests or args.batch
+        requests = poisson_requests(
+            n, rate=args.rate, vocab_size=cfg.vocab_size,
+            prompt_len=args.prompt_len, max_new_tokens=args.gen,
+            seed=args.seed)
+        prompt_len, gen = args.prompt_len, args.gen
+    cfg, engine = build_serving_engine(args, cfg, prompt_len=prompt_len,
+                                       gen=gen)
+    engine.warmup()                      # compile outside the TTFT window
+    rep = engine.run(requests)
 
-    print(f"[serve] arch={args.arch} policy={args.policy} skew={args.skew}")
-    print(f"[serve] TTFT {ttft * 1e3:.1f} ms   decode {tput:.1f} tok/s")
-    if diags and "moved_units" in diags:
-        print(f"[serve] prefill schedule: moved={float(np.mean(diags['moved_units'])):.0f} "
-              f"drops={float(np.mean(diags['send_drops']) + np.mean(diags['dest_drops'])):.0f} "
-              f"max_load {float(np.mean(diags['max_load_before'])):.0f}"
-              f"->{float(np.mean(diags['max_load_after'])):.0f}")
-    out = np.concatenate(generated, axis=1)
-    print(f"[serve] generated shape {out.shape}; first row: {out[0][:12]}")
-    return ttft, tput
+    ttft, tpot = rep["ttft"], rep["tpot"]
+    print(f"[serve] arch={args.arch} policy={args.policy} skew={args.skew} "
+          f"slots={args.batch} requests={rep['n_requests']} rate={args.rate}")
+    print(f"[serve] TTFT p50 {ttft['p50'] * 1e3:.1f} ms  "
+          f"p99 {ttft['p99'] * 1e3:.1f} ms   "
+          f"TPOT p50 {tpot['p50'] * 1e3:.2f} ms   "
+          f"decode {rep['throughput_tok_s']:.1f} tok/s "
+          f"(occupancy {rep['mean_occupancy']:.2f}/{args.batch})")
+    moe = rep.get("moe", {})
+    if any(k.endswith("moved_units") for k in moe):
+        for phase in ("prefill", "decode"):
+            if f"{phase}/moved_units" not in moe:
+                continue
+            drops = moe.get(f"{phase}/send_drops", 0.0) \
+                + moe.get(f"{phase}/dest_drops", 0.0)
+            print(f"[serve] {phase} schedule: "
+                  f"moved={moe[f'{phase}/moved_units']:.0f} "
+                  f"drops={drops:.0f} "
+                  f"max_load {moe.get(f'{phase}/max_load_before', 0):.0f}"
+                  f"->{moe.get(f'{phase}/max_load_after', 0):.0f}")
+    print(f"[serve] jit entries {rep['jit_entries']} "
+          f"recompiled_after_warmup={rep.get('recompiled_after_warmup')}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rep, f, indent=2)
+        print(f"[serve] report -> {args.out}")
+    return rep
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="decode slots (concurrent requests)")
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--skew", type=float, default=0.0)
@@ -104,6 +128,16 @@ def main():
     ap.add_argument("--data-par", type=int, default=0)
     ap.add_argument("--model-par", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    # --- serving-engine knobs (new) ---
+    ap.add_argument("--requests", type=int, default=0,
+                    help="total requests (default: one closed batch)")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="Poisson arrival rate req/s (0 = all at t=0)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="prompt tokens per prefill chunk (0 = auto)")
+    ap.add_argument("--trace", default="",
+                    help="JSON trace file of arrival records")
+    ap.add_argument("--out", default="", help="write the report JSON here")
     serve(ap.parse_args())
 
 

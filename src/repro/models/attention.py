@@ -136,9 +136,11 @@ def full_attention_ref(q, k, v, *, causal, window=0, softcap=0.0, q_offset=0):
 def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
                      cache_len: jnp.ndarray, *, window: int = 0,
                      softcap: float = 0.0) -> jnp.ndarray:
-    """q: [B, 1, H, hd]; caches: [B, S_max, Hkv, hd]; cache_len: scalar int
-    (entries < cache_len are valid; the new token's K/V must already be
-    written at cache_len - 1)."""
+    """q: [B, 1, H, hd]; caches: [B, S_max, Hkv, hd]; cache_len: scalar int or
+    per-sequence [B] vector (entries < cache_len are valid; the new token's
+    K/V must already be written at cache_len - 1). The vector form is what
+    lets a continuous-batching slot pool hold sequences of different lengths
+    in one static-shape decode step."""
     B, _, H, hd = q.shape
     S_max, Hkv = k_cache.shape[1], k_cache.shape[2]
     rep = H // Hkv
@@ -148,10 +150,13 @@ def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
     s = jnp.einsum("bhd,bkhd->bhk", qf, kr.astype(jnp.float32))
     s = _softcap(s, softcap)
     kv_pos = jnp.arange(S_max)
-    mask = kv_pos < cache_len
+    cl = jnp.asarray(cache_len)
+    if cl.ndim == 0:
+        cl = cl[None]                                      # broadcast over B
+    mask = kv_pos[None, :] < cl[:, None]                   # [B|1, S_max]
     if window > 0:
-        mask = mask & (kv_pos >= cache_len - window)
-    s = jnp.where(mask[None, None, :], s, _NEG_INF)
+        mask = mask & (kv_pos[None, :] >= cl[:, None] - window)
+    s = jnp.where(mask[:, None, :], s, _NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhk,bkhd->bhd", p, vr.astype(jnp.float32))
     return out[:, None].astype(q.dtype)
@@ -170,6 +175,7 @@ def attention_block(x: jnp.ndarray, p: Dict[str, jnp.ndarray],
                     kv_source: Optional[jnp.ndarray] = None,
                     attn_chunk: int = 1024,
                     use_pallas: bool = False, interpret: bool = False,
+                    continue_prefill: bool = False,
                     ) -> Tuple[jnp.ndarray, Optional[AttnCache]]:
     """Full attention sub-layer (projections + RoPE + attention + out-proj).
 
@@ -178,6 +184,12 @@ def attention_block(x: jnp.ndarray, p: Dict[str, jnp.ndarray],
         (or ``kv_source`` for cross-attention), returns fresh cache if
         cache_len is not None.
       * decode: cache given, x is [B, 1, d]; writes K/V at cache_len-1.
+        ``q_offset``/``cache_len`` may be per-sequence [B] vectors (slotted
+        continuous batching), in which case K/V lands at each row's own slot.
+      * chunked-prefill continuation (``continue_prefill``): cache given and
+        x is a [B, C] prompt chunk starting at position ``q_offset`` (scalar);
+        writes K/V at [q_offset, q_offset + C) and attends over the full
+        cache — the causal mask hides the unwritten tail.
     """
     B, S, d = x.shape
     window = 0 if (is_global and cfg.global_attn_every) else cfg.sliding_window
@@ -189,12 +201,24 @@ def attention_block(x: jnp.ndarray, p: Dict[str, jnp.ndarray],
     v = jnp.einsum("bsd,dhk->bshk", kv_in, p["wv"])
 
     if cfg.rope_theta > 0 and kv_source is None:
-        q_pos = q_offset + jnp.arange(S)
-        q = apply_rope(q, q_pos, cfg.rope_theta)
-        k_pos = q_offset + jnp.arange(kv_in.shape[1])
-        k = apply_rope(k, k_pos, cfg.rope_theta)
+        qo = jnp.asarray(q_offset)
+        off = qo[..., None] if qo.ndim else qo     # [B, 1] or scalar
+        q = apply_rope(q, off + jnp.arange(S), cfg.rope_theta)
+        k = apply_rope(k, off + jnp.arange(kv_in.shape[1]), cfg.rope_theta)
 
     new_cache = None
+    if cache is not None and S > 1 and continue_prefill:
+        S_max = cache.k.shape[1]
+        start = jnp.asarray(q_offset, jnp.int32)
+        k_cache = jax.lax.dynamic_update_slice(
+            cache.k, k.astype(cache.k.dtype), (0, start, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            cache.v, v.astype(cache.v.dtype), (0, start, 0, 0))
+        out = chunked_attention(q, k_cache, v_cache, causal=causal,
+                                window=window, softcap=softcap,
+                                chunk=attn_chunk, q_offset=q_offset)
+        y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+        return y, AttnCache(k_cache, v_cache)
     if cache is not None and S > 1:
         # prefill with a pre-allocated cache: full causal attention over x,
         # then write the computed K/V into the cache prefix [0, S).
@@ -218,12 +242,19 @@ def attention_block(x: jnp.ndarray, p: Dict[str, jnp.ndarray],
         # constraint is enforced by the overwrite itself.
         S_max = cache.k.shape[1]
         ring = window > 0 and S_max <= window
-        pos = ((cache_len - 1) % S_max) if ring else (cache_len - 1)
-        k_cache = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype),
-                                               (0, pos, 0, 0))
-        v_cache = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
-                                               (0, pos, 0, 0))
-        eff_len = jnp.minimum(cache_len, S_max) if ring else cache_len
+        cl = jnp.asarray(cache_len)
+        pos = ((cl - 1) % S_max) if ring else (cl - 1)
+        if cl.ndim:
+            # per-slot positions: scatter each row's K/V at its own index
+            bidx = jnp.arange(B)
+            k_cache = cache.k.at[bidx, pos].set(k[:, 0].astype(cache.k.dtype))
+            v_cache = cache.v.at[bidx, pos].set(v[:, 0].astype(cache.v.dtype))
+        else:
+            k_cache = jax.lax.dynamic_update_slice(
+                cache.k, k.astype(cache.k.dtype), (0, pos, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(
+                cache.v, v.astype(cache.v.dtype), (0, pos, 0, 0))
+        eff_len = jnp.minimum(cl, S_max) if ring else cl
         out = decode_attention(q, k_cache, v_cache, eff_len,
                                window=0 if ring else window, softcap=softcap)
         new_cache = AttnCache(k_cache, v_cache)

@@ -4,9 +4,11 @@ Returned ``Model`` exposes:
   init(key)                         -> params
   train_loss(params, batch, key)    -> (loss, diags)
   prefill(params, batch)            -> (logits [B, Vp], caches, pos)
+  prefill_chunk(params, tokens, caches, pos) -> chunked-prefill continuation
   decode_step(params, token, caches, pos) -> (logits, caches)
+      (pos may be a per-sequence [B] vector — slotted continuous batching)
   input_specs(shape_kind)           -> pytree of ShapeDtypeStruct (dry-run)
-  init_cache(batch, s_max)          -> decode caches
+  init_cache(batch, s_max)          -> decode caches (the serve slot pool)
 
 The modality frontends are stubs per the assignment: whisper consumes
 precomputed frame embeddings [B, 1500, d]; pixtral consumes precomputed patch
@@ -71,6 +73,7 @@ class Model:
     init: Callable[..., Any] = None
     train_loss: Callable[..., Any] = None
     prefill: Callable[..., Any] = None
+    prefill_chunk: Callable[..., Any] = None
     decode_step: Callable[..., Any] = None
     init_cache: Callable[..., Any] = None
     input_specs: Callable[..., Any] = None
@@ -169,7 +172,8 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
 
     # ------------------------------------------------------------------
     def _backbone(params, h, *, mode, cache=None, cache_len=None,
-                  q_offset=0, spec=None, skew_key=None, enc_out=None):
+                  q_offset=0, spec=None, skew_key=None, enc_out=None,
+                  continue_prefill=False, valid_mask=None):
         h = constrain(h, mode)
         if cfg.family == "hybrid":
             h, new_cache, diags = T.run_hybrid(
@@ -186,7 +190,8 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
                 h, params["stack"], cfg, pcfg, mode=mode, cache=cache,
                 cache_len=cache_len, q_offset=q_offset,
                 moe_spec=spec, mesh=mesh, skew_key=skew_key,
-                constrain=constrain)
+                constrain=constrain, continue_prefill=continue_prefill,
+                valid_mask=valid_mask)
         h = norm(h, params["final_norm"], cfg.norm)
         return h, new_cache, diags
 
@@ -207,9 +212,12 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
         if cfg.rope_theta <= 0 and cfg.ssm is None:  # absolute pos (whisper)
             table = sinusoidal_positions(seq_len + 65, d).astype(h.dtype)
             S = tokens.shape[1]
-            pos_emb = jax.lax.dynamic_slice_in_dim(
-                table, jnp.asarray(offset, jnp.int32), S, axis=0)
-            h = h + pos_emb[None]
+            off = jnp.asarray(offset, jnp.int32)
+            if off.ndim:  # per-sequence offsets (slotted decode)
+                h = h + table[off[:, None] + jnp.arange(S)[None]]
+            else:
+                pos_emb = jax.lax.dynamic_slice_in_dim(table, off, S, axis=0)
+                h = h + pos_emb[None]
         if cfg.name.startswith("gemma"):
             h = h * jnp.asarray(d ** 0.5, h.dtype)
         return h
@@ -278,15 +286,67 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
                              softcap=cfg.final_logit_softcap)
         return logits, out_cache, pos, diags
 
-    def decode_step(params, token, caches, pos, skew_key=None):
-        """token [B, 1] int32; pos = current length BEFORE appending token."""
+    def prefill_chunk(params, tokens, caches, pos, last_index=None,
+                      skew_key=None):
+        """Chunked-prefill continuation for the serving engine.
+
+        tokens [Bc, C] is the next prompt chunk, appended to ``caches`` at
+        position ``pos`` (scalar — all Bc rows share the offset). Returns
+        (logits, caches, pos + C, diags) where logits are taken at
+        ``last_index`` within the chunk (default C - 1); pad the final chunk
+        to C and pass the true last-token index. The caller owns position
+        bookkeeping for partially-filled final chunks.
+        """
+        Bc, C = tokens.shape
+        spec = moe_spec
+        if spec is not None:
+            spec = dataclasses.replace(
+                spec, tokens_local=Bc * C,
+                seq_sharded=(C % mesh_shape.ep_degree == 0
+                             and mesh_shape.ep_degree > 1))
+        h = _embed_tokens(params, tokens, offset=pos)
+        new_pos = pos + C
+        # pad tokens beyond last_index are dead: keep them out of MoE
+        # routing/capacity (their K/V writes are masked by cache_len anyway)
+        vmask = None
+        if cfg.is_moe and last_index is not None:
+            li = jnp.asarray(last_index, jnp.int32)
+            vmask = jnp.arange(C)[None, :] <= (li[..., None] if li.ndim
+                                               else li)
+            vmask = jnp.broadcast_to(vmask, (Bc, C))
+        h, new_stack, diags = _backbone(
+            params, h, mode="prefill", cache=caches["stack"],
+            cache_len=new_pos, q_offset=pos, spec=spec, skew_key=skew_key,
+            continue_prefill=True, valid_mask=vmask)
+        idx = jnp.asarray(C - 1 if last_index is None else last_index,
+                          jnp.int32)
+        if idx.ndim:
+            hl = h[jnp.arange(Bc), idx]
+        else:
+            hl = jax.lax.dynamic_index_in_dim(h, idx, axis=1, keepdims=False)
+        logits = logits_head(hl, _vocab_w(params),
+                             real_vocab=cfg.vocab_size,
+                             softcap=cfg.final_logit_softcap)
+        out = dict(caches)
+        out["stack"] = new_stack
+        return logits, out, new_pos, diags
+
+    def decode_step(params, token, caches, pos, skew_key=None,
+                    active_mask=None):
+        """token [B, 1] int32; pos = current length BEFORE appending token
+        (scalar, or a per-sequence [B] vector for slotted batches).
+        ``active_mask`` [B] bool excludes vacated slots' garbage tokens from
+        MoE routing and capacity (their logits are garbage either way)."""
         h = _embed_tokens(params, token, offset=pos)
         new_pos = pos + 1
+        vmask = None
+        if cfg.is_moe and active_mask is not None:
+            vmask = jnp.asarray(active_mask).reshape(-1, 1)    # [B, 1]
         h, new_stack, diags = _backbone(
             params, h, mode="decode", cache=caches["stack"],
             cache_len=new_pos, q_offset=pos, spec=moe_spec_decode,
             skew_key=skew_key,
-            enc_out=caches.get("cross"))
+            enc_out=caches.get("cross"), valid_mask=vmask)
         logits = logits_head(h[:, -1], _vocab_w(params),
                              real_vocab=cfg.vocab_size,
                              softcap=cfg.final_logit_softcap)
@@ -312,7 +372,8 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
 
     return Model(cfg=cfg, pcfg=pcfg, mesh_shape=mesh_shape, batch=batch,
                  seq_len=seq_len, init=init, train_loss=train_loss,
-                 prefill=prefill, decode_step=decode_step,
+                 prefill=prefill, prefill_chunk=prefill_chunk,
+                 decode_step=decode_step,
                  init_cache=init_cache, input_specs=input_specs,
                  moe_spec=moe_spec)
 

@@ -85,6 +85,8 @@ def _apply_one_layer(x: jnp.ndarray, p: Dict[str, Any], kind: str,
                      mode: str, q_offset, cache, cache_len,
                      moe_spec: Optional[MoEBlockSpec], mesh, skew_key,
                      causal: bool = True, constrain=lambda x, mode="none": x,
+                     continue_prefill: bool = False,
+                     valid_mask=None,
                      ) -> Tuple[jnp.ndarray, Any, Dict[str, jnp.ndarray]]:
     """One layer of any kind. Returns (x, new_cache, diag)."""
     diag: Dict[str, jnp.ndarray] = {}
@@ -100,7 +102,8 @@ def _apply_one_layer(x: jnp.ndarray, p: Dict[str, Any], kind: str,
         h, p["attn"], cfg, causal=causal, is_global=is_global,
         q_offset=q_offset, cache=cache, cache_len=cache_len,
         attn_chunk=pcfg.attn_chunk, use_pallas=pcfg.use_pallas,
-        interpret=jax.default_backend() != "tpu")
+        interpret=jax.default_backend() != "tpu",
+        continue_prefill=continue_prefill)
     if cfg.post_norm:
         h = norm(h, p["post_norm1"], cfg.norm)
     x = x + h
@@ -108,7 +111,7 @@ def _apply_one_layer(x: jnp.ndarray, p: Dict[str, Any], kind: str,
     h = norm(x, p["norm2"], cfg.norm)
     if kind == "moe":
         y, mdiag = moe_block(h, p["moe"], spec=moe_spec, mesh=mesh,
-                             skew_key=skew_key)
+                             skew_key=skew_key, valid_mask=valid_mask)
         if "shared_mlp" in p:
             y = y + mlp(h, p["shared_mlp"],
                         "swiglu" if cfg.act == "swiglu" else cfg.act)
@@ -175,6 +178,7 @@ def run_stack(x: jnp.ndarray, params: Dict[str, Any], cfg: ModelConfig,
               cache_len=None, q_offset=0,
               moe_spec: Optional[MoEBlockSpec] = None, mesh=None,
               skew_key=None, causal: bool = True, constrain=lambda x, mode="none": x,
+              continue_prefill: bool = False, valid_mask=None,
               ) -> Tuple[jnp.ndarray, Any, Dict[str, jnp.ndarray]]:
     """mode: train | prefill | decode | encode. Returns (x, new_cache, diags)."""
     pattern, n_steps, lead = layer_pattern(cfg)
@@ -186,7 +190,7 @@ def run_stack(x: jnp.ndarray, params: Dict[str, Any], cfg: ModelConfig,
             x, params["lead"][i], "dense", cfg, pcfg, mode=mode,
             q_offset=q_offset, cache=c, cache_len=cache_len,
             moe_spec=None, mesh=mesh, skew_key=skew_key, causal=causal,
-            constrain=constrain)
+            constrain=constrain, continue_prefill=continue_prefill)
         new_lead_caches.append(nc)
 
     def step(carry, inp):
@@ -203,7 +207,8 @@ def run_stack(x: jnp.ndarray, params: Dict[str, Any], cfg: ModelConfig,
                 x, p_step[f"sub{j}"], kind, cfg, pcfg, mode=mode,
                 q_offset=q_offset, cache=c, cache_len=cache_len,
                 moe_spec=moe_spec, mesh=mesh, skew_key=sub_key, causal=causal,
-                constrain=constrain)
+                constrain=constrain, continue_prefill=continue_prefill,
+                valid_mask=valid_mask)
             new_caches[f"sub{j}"] = nc
             diags.update({f"{k}": v for k, v in d.items()})
         new_key = (jax.random.fold_in(key, 997) if key is not None else None)

@@ -1,0 +1,14 @@
+"""repro.serve — continuous-batching serving engine (see README.md)."""
+from repro.serve.arrivals import (AdmissionQueue, VirtualClock, WallClock,
+                                  load_trace, poisson_requests,
+                                  trace_requests)
+from repro.serve.engine import EngineConfig, ServeEngine, engine_config_for
+from repro.serve.metrics import RequestRecord, ServeMetrics, percentiles
+from repro.serve.request import Request, RequestState, RequestStatus
+
+__all__ = [
+    "AdmissionQueue", "EngineConfig", "Request", "RequestRecord",
+    "RequestState", "RequestStatus", "ServeEngine", "ServeMetrics",
+    "VirtualClock", "WallClock", "engine_config_for", "load_trace",
+    "percentiles", "poisson_requests", "trace_requests",
+]

@@ -1,0 +1,142 @@
+"""Arrival processes and the admission queue.
+
+Two request sources (the regimes the serving papers evaluate under):
+
+* ``poisson_requests`` — open-loop Poisson arrivals at ``rate`` req/s with
+  synthetic prompts (rate=0 degenerates to "everything arrives at t=0",
+  i.e. the old one-shot batch driver).
+* ``trace_requests`` — trace-driven arrivals from explicit
+  (arrival_time, prompt_len, max_new_tokens) records, e.g. loaded from a
+  JSON file produced by a real serving log.
+
+The engine reads time from a ``Clock``: ``WallClock`` for real serving /
+benchmarks, ``VirtualClock`` for deterministic tests (each ``now()`` call
+advances a fixed dt, so arrival draining always terminates).
+"""
+from __future__ import annotations
+
+import heapq
+import json
+import time
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serve.request import Request
+
+
+# ----------------------------------------------------------------------
+# Clocks
+# ----------------------------------------------------------------------
+class WallClock:
+    """Monotonic wall time, zeroed at construction."""
+
+    def __init__(self):
+        self._t0 = time.perf_counter()
+
+    def now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def wait(self, dt: float) -> None:
+        time.sleep(max(dt, 0.0))
+
+
+class VirtualClock:
+    """Deterministic clock: every ``now()`` advances by ``dt``."""
+
+    def __init__(self, dt: float = 1.0, t0: float = 0.0):
+        self.dt = dt
+        self.t = t0
+
+    def now(self) -> float:
+        self.t += self.dt
+        return self.t
+
+    def wait(self, dt: float) -> None:
+        self.t += max(dt, 0.0)
+
+
+# ----------------------------------------------------------------------
+# Request generators
+# ----------------------------------------------------------------------
+def poisson_requests(n: int, *, rate: float, vocab_size: int,
+                     prompt_len: int, max_new_tokens: int,
+                     seed: int = 0,
+                     prompt_len_range: Optional[Tuple[int, int]] = None,
+                     eos_id: Optional[int] = None) -> List[Request]:
+    """n synthetic requests with exponential inter-arrival times.
+
+    rate <= 0 means a closed batch: all requests arrive at t=0.
+    ``prompt_len_range=(lo, hi)`` draws per-request prompt lengths
+    uniformly; otherwise every prompt has ``prompt_len`` tokens.
+    """
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    out: List[Request] = []
+    for i in range(n):
+        if rate > 0:
+            t += float(rng.exponential(1.0 / rate))
+        if prompt_len_range is not None:
+            lo, hi = prompt_len_range
+            plen = int(rng.integers(lo, hi + 1))
+        else:
+            plen = prompt_len
+        toks = rng.integers(0, vocab_size, (plen,)).astype(np.int32)
+        out.append(Request(rid=i, tokens=toks, max_new_tokens=max_new_tokens,
+                           arrival_time=t, eos_id=eos_id))
+    return out
+
+
+def trace_requests(records: Iterable[dict], *, vocab_size: int,
+                   seed: int = 0) -> List[Request]:
+    """Requests from trace records: dicts with ``arrival_time``,
+    ``prompt_len`` (or explicit ``tokens``), and ``max_new_tokens``."""
+    rng = np.random.default_rng(seed)
+    out: List[Request] = []
+    for i, rec in enumerate(records):
+        if "tokens" in rec:
+            toks = np.asarray(rec["tokens"], np.int32)
+        else:
+            toks = rng.integers(0, vocab_size,
+                                (int(rec["prompt_len"]),)).astype(np.int32)
+        out.append(Request(
+            rid=int(rec.get("rid", i)), tokens=toks,
+            max_new_tokens=int(rec.get("max_new_tokens", 16)),
+            arrival_time=float(rec.get("arrival_time", 0.0)),
+            eos_id=rec.get("eos_id")))
+    return out
+
+
+def load_trace(path: str, *, vocab_size: int) -> List[Request]:
+    """JSON trace file: a list of record dicts (see ``trace_requests``)."""
+    with open(path) as f:
+        return trace_requests(json.load(f), vocab_size=vocab_size)
+
+
+# ----------------------------------------------------------------------
+# Admission queue
+# ----------------------------------------------------------------------
+class AdmissionQueue:
+    """Arrival-time-ordered queue; FIFO among already-arrived requests."""
+
+    def __init__(self, requests: Sequence[Request] = ()):
+        self._heap: List[Tuple[float, int, Request]] = []
+        self._n = 0
+        for r in requests:
+            self.push(r)
+
+    def push(self, req: Request) -> None:
+        heapq.heappush(self._heap, (req.arrival_time, self._n, req))
+        self._n += 1
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def next_arrival(self) -> Optional[float]:
+        return self._heap[0][0] if self._heap else None
+
+    def pop_ready(self, now: float) -> Optional[Request]:
+        """Pop the earliest request whose arrival time has passed."""
+        if self._heap and self._heap[0][0] <= now:
+            return heapq.heappop(self._heap)[2]
+        return None

@@ -1,0 +1,349 @@
+"""Continuous-batching serving engine.
+
+The engine owns a static-shape slot pool (``model.init_cache`` at batch
+``max_slots``) and drives two jitted functions with fixed signatures:
+
+* ``model.prefill_chunk`` on a ``[1, prefill_chunk]`` scratch cache —
+  newcomers' prompts are consumed chunk-by-chunk, interleaved with decode
+  steps, then scattered into their slot (traced slot index);
+* ``model.decode_step`` on the full pool with a per-slot position vector —
+  every occupied slot advances one token per step regardless of how long
+  each sequence already is.
+
+Because every array shape is fixed at engine construction, the jit caches
+hold exactly one entry each across admissions, slot recycling, and EOS —
+``report()["jit_entries"]`` asserts this is so.
+
+Requests enter through an ``AdmissionQueue`` (Poisson or trace-driven
+arrivals); freed slots are immediately re-admitted from the queue. Per-step
+MoE schedule diagnostics (moved_units, drops, max_load) and per-request
+TTFT/TPOT/e2e flow into ``ServeMetrics``.
+
+Scope (v1): decoder-only transformer families (dense and MoE); the mesh may
+shard the model/expert axis but not the batch axis. SSM/hybrid state
+caches, encoder-decoder, and prefix-embedding models are follow-ons.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from collections import deque
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import round_up
+from repro.serve.arrivals import AdmissionQueue, WallClock
+from repro.serve.metrics import ServeMetrics
+from repro.serve.request import Request, RequestState, RequestStatus
+from repro.serve.slots import (discover_batch_axes, min_kv_capacity,
+                               write_slot)
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Static serving shapes — these fix every jitted signature."""
+    max_slots: int = 4          # decode batch width (concurrent requests)
+    max_seq_len: int = 128      # KV pool length (prompt + generation)
+    prefill_chunk: int = 32     # prompt tokens consumed per prefill call
+    chunks_per_step: int = 1    # prefill chunks interleaved per engine step
+    eos_id: Optional[int] = None
+    skew_seed: int = 0          # synthetic router-skew key stream
+
+
+class ServeEngine:
+    def __init__(self, model, params, ecfg: EngineConfig, *, mesh=None,
+                 clock=None):
+        cfg = model.cfg
+        if cfg.family in ("ssm", "hybrid") or cfg.is_encoder_decoder \
+                or cfg.num_prefix_embeddings:
+            raise NotImplementedError(
+                f"serve engine v1 supports decoder-only transformer "
+                f"families; got {cfg.name} ({cfg.family})")
+        extra = 1
+        for ax, n in model.mesh_shape.sizes.items():
+            if ax != "model":
+                extra *= n
+        if extra > 1:
+            raise NotImplementedError(
+                "serve engine v1 shards the model/expert axis only; run "
+                "with data=1 (data-parallel serving is an open item)")
+        if ecfg.prefill_chunk < 1 or ecfg.max_slots < 1:
+            raise ValueError("prefill_chunk and max_slots must be >= 1")
+
+        self.model = model
+        self.params = params
+        self.ecfg = ecfg
+        self.cfg = cfg
+        self.mesh = mesh
+        self.clock = clock or WallClock()
+        self.metrics = ServeMetrics()
+
+        self._skew = bool(cfg.is_moe and cfg.moe.router_skew > 0)
+        self._base_key = jax.random.PRNGKey(ecfg.skew_seed)
+        self._pf_key = jax.random.fold_in(self._base_key, 0)
+        self._dec_key = jax.random.fold_in(self._base_key, 1)
+
+        self._batch_axes = discover_batch_axes(model.init_cache,
+                                               ecfg.max_seq_len)
+        self.kv_capacity = min_kv_capacity(model.init_cache, ecfg.max_seq_len,
+                                           self._batch_axes)
+        with self._ctx():
+            self.pool = model.init_cache(ecfg.max_slots, ecfg.max_seq_len)
+            self._scratch = model.init_cache(1, ecfg.max_seq_len)
+
+        self._prefill_fn = jax.jit(model.prefill_chunk)
+        self._decode_fn = jax.jit(self._decode_impl)
+        self._write_fn = jax.jit(
+            lambda pool, scratch, slot: write_slot(pool, scratch, slot,
+                                                   self._batch_axes))
+
+        B = ecfg.max_slots
+        self.pos = np.zeros((B,), np.int32)      # per-slot sequence length
+        self.tok = np.zeros((B,), np.int32)      # per-slot last token
+        self.active = np.zeros((B,), bool)       # slot in the decode batch
+        self.state_by_slot: List[Optional[RequestState]] = [None] * B
+        self.free_slots: deque = deque(range(B))
+        self.queue = AdmissionQueue()
+        self._pf: Optional[RequestState] = None      # prefill in flight
+        self._pf_queue: deque = deque()              # slot reserved, waiting
+        self.slot_history: List[Tuple[int, int]] = []  # (rid, slot) admits
+        self._step_idx = 0
+        self._chunk_idx = 0
+        self._warm_counts: Optional[Dict[str, int]] = None
+
+    # ------------------------------------------------------------------
+    def _ctx(self):
+        return self.mesh if self.mesh is not None else contextlib.nullcontext()
+
+    def _decode_impl(self, params, tok, pool, pos, key, active):
+        logits, pool, _, diags = self.model.decode_step(
+            params, tok, pool, pos, skew_key=key, active_mask=active)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        return nxt, pool, diags
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        L, C = req.prompt_len, self.ecfg.prefill_chunk
+        if round_up(L, C) > self.kv_capacity:
+            raise ValueError(
+                f"request {req.rid}: prompt of {L} (padded to "
+                f"{round_up(L, C)}) exceeds the per-layer KV capacity "
+                f"{self.kv_capacity}")
+        if L + req.max_new_tokens > self.ecfg.max_seq_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {L} + max_new "
+                f"{req.max_new_tokens} exceeds max_seq_len "
+                f"{self.ecfg.max_seq_len}")
+        self.queue.push(req)
+
+    def has_work(self) -> bool:
+        return bool(len(self.queue) or self._pf is not None
+                    or self._pf_queue or self.active.any())
+
+    # ------------------------------------------------------------------
+    def _admit(self, now: float) -> None:
+        while self.free_slots:
+            req = self.queue.pop_ready(now)
+            if req is None:
+                return
+            slot = self.free_slots.popleft()
+            st = RequestState(req=req, slot=slot, admitted_time=now)
+            self.state_by_slot[slot] = st
+            self.slot_history.append((req.rid, slot))
+            self._pf_queue.append(st)
+
+    def _next_key(self, stream_key, idx: int):
+        if not self._skew:
+            return None
+        return jax.random.fold_in(stream_key, idx)
+
+    def _prefill_work(self, now: float) -> bool:
+        did = False
+        C = self.ecfg.prefill_chunk
+        for _ in range(self.ecfg.chunks_per_step):
+            if self._pf is None:
+                if not self._pf_queue:
+                    break
+                self._pf = self._pf_queue.popleft()
+            st = self._pf
+            start, L = st.prefill_pos, st.req.prompt_len
+            n = min(C, L - start)
+            chunk = np.zeros((1, C), np.int32)
+            chunk[0, :n] = st.req.tokens[start:start + n]
+            key = self._next_key(self._pf_key, self._chunk_idx)
+            self._chunk_idx += 1
+            with self._ctx():
+                logits, self._scratch, _, diags = self._prefill_fn(
+                    self.params, chunk, self._scratch, np.int32(start),
+                    np.int32(n - 1), key)
+            st.prefill_pos += n
+            self.metrics.record_step(diags if self.cfg.is_moe else {}, 0,
+                                     phase="prefill")
+            did = True
+            if st.prefill_done:
+                first = int(np.argmax(np.asarray(logits)[0]))
+                with self._ctx():
+                    self.pool = self._write_fn(self.pool, self._scratch,
+                                               np.int32(st.slot))
+                # stamp AFTER the host sync: TTFT must include the prefill
+                # compute, not just the queueing ahead of it
+                now = self.clock.now()
+                st.first_token_time = now
+                st.output.append(first)
+                eos = st.req.eos_id if st.req.eos_id is not None \
+                    else self.ecfg.eos_id
+                if (eos is not None and first == eos) \
+                        or st.req.max_new_tokens == 1:
+                    self._finish(st, now)
+                else:
+                    st.status = RequestStatus.DECODE
+                    self.pos[st.slot] = L
+                    self.tok[st.slot] = first
+                    self.active[st.slot] = True
+                self._pf = None
+        return did
+
+    def _decode_work(self, now: float) -> bool:
+        if not self.active.any():
+            return False
+        key = self._next_key(self._dec_key, self._step_idx)
+        with self._ctx():
+            nxt, self.pool, diags = self._decode_fn(
+                self.params, self.tok[:, None], self.pool, self.pos, key,
+                self.active.copy())
+        nxt = np.asarray(nxt)
+        now = self.clock.now()       # post-sync: token times include compute
+        self.metrics.record_step(diags if self.cfg.is_moe else {},
+                                 int(self.active.sum()), phase="decode")
+        for s in np.nonzero(self.active)[0]:
+            st = self.state_by_slot[s]
+            self.pos[s] += 1
+            t = int(nxt[s])
+            st.output.append(t)
+            eos = st.req.eos_id if st.req.eos_id is not None \
+                else self.ecfg.eos_id
+            if (eos is not None and t == eos) \
+                    or st.n_generated >= st.req.max_new_tokens:
+                self._finish(st, now)
+            else:
+                self.tok[s] = t
+        return True
+
+    def _finish(self, st: RequestState, now: float) -> None:
+        st.finish_time = now
+        st.status = RequestStatus.FINISHED
+        self.metrics.complete(st)
+        s = st.slot
+        self.active[s] = False
+        self.pos[s] = 0
+        self.tok[s] = 0
+        self.state_by_slot[s] = None
+        self.free_slots.append(s)
+
+    # ------------------------------------------------------------------
+    def reset_metrics(self) -> None:
+        """Fresh metrics for a new measurement window (the engine must be
+        idle); slot state, jit caches, and warmup status are kept."""
+        if self.has_work():
+            raise RuntimeError("cannot reset metrics while work is in flight")
+        self.metrics = ServeMetrics()
+        self.slot_history.clear()
+
+    def warmup(self) -> None:
+        """Compile the three jitted functions on dummy data so the first
+        request's TTFT measures serving latency, not XLA compilation.
+        Touches only inactive slots; call before submitting work."""
+        C = self.ecfg.prefill_chunk
+        chunk = np.zeros((1, C), np.int32)
+        # two passes: the first compiles against the freshly-initialized
+        # cache shardings, the second against jit's steady-state output
+        # shardings (they can differ on multi-device meshes)
+        for i in range(2):
+            key = self._next_key(self._pf_key, 2 ** 31 - 1 - i)
+            with self._ctx():
+                _, self._scratch, _, _ = self._prefill_fn(
+                    self.params, chunk, self._scratch, np.int32(0),
+                    np.int32(C - 1), key)
+                self.pool = self._write_fn(self.pool, self._scratch,
+                                           np.int32(0))
+                key = self._next_key(self._dec_key, 2 ** 31 - 1 - i)
+                nxt, self.pool, _ = self._decode_fn(
+                    self.params, self.tok[:, None], self.pool, self.pos, key,
+                    self.active.copy())
+            jax.block_until_ready(nxt)
+        # multi-device: the first call may trace twice while cache shardings
+        # settle to jit's steady state; anything beyond this is a regression
+        self._warm_counts = self._jit_counts()
+
+    def step(self) -> None:
+        """One scheduler tick: admit, prefill chunk(s), decode the batch."""
+        now = self.clock.now()
+        self._admit(now)
+        did = self._prefill_work(now)
+        did = self._decode_work(now) or did
+        self._step_idx += 1
+        if not did:
+            nxt = self.queue.next_arrival()
+            if nxt is not None:
+                self.clock.wait(min(max(nxt - now, 0.0), 0.01))
+
+    def run(self, requests: Sequence[Request] = (), *,
+            max_steps: int = 1_000_000) -> Dict[str, Any]:
+        for r in requests:
+            self.submit(r)
+        steps = 0
+        while self.has_work():
+            self.step()
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError(f"serve engine exceeded {max_steps} steps "
+                                   f"with work remaining")
+        return self.report()
+
+    def report(self) -> Dict[str, Any]:
+        rep = self.metrics.report()
+        rep["engine"] = {
+            "max_slots": self.ecfg.max_slots,
+            "max_seq_len": self.ecfg.max_seq_len,
+            "prefill_chunk": self.ecfg.prefill_chunk,
+            "kv_capacity": self.kv_capacity,
+            "steps": self._step_idx,
+        }
+        rep["jit_entries"] = self._jit_counts()
+        if self._warm_counts is not None:
+            rep["recompiled_after_warmup"] = \
+                rep["jit_entries"] != self._warm_counts
+        return rep
+
+    def _jit_counts(self) -> Dict[str, int]:
+        return {
+            "prefill_chunk": self._prefill_fn._cache_size(),
+            "decode": self._decode_fn._cache_size(),
+            "write_slot": self._write_fn._cache_size(),
+        }
+
+
+# ----------------------------------------------------------------------
+def engine_config_for(cfg, *, max_slots: int, prompt_len: int,
+                      max_new_tokens: int, prefill_chunk: int = 0,
+                      eos_id: Optional[int] = None,
+                      skew_seed: int = 0) -> EngineConfig:
+    """Derive serving shapes from a workload: pool length covers prompt +
+    generation, the prefill chunk divides the (padded) prompt, and the
+    padded prompt fits every layer's KV capacity (sliding-window layers
+    clamp their cache to the window)."""
+    chunk = prefill_chunk or min(max(prompt_len, 1), 32)
+    window = cfg.sliding_window or 0
+    pad = round_up(prompt_len, chunk)
+    if window and pad > window:
+        raise ValueError(
+            f"padded prompt {pad} exceeds the sliding window {window}; "
+            f"chunked prefill must fit the window-clamped KV cache")
+    return EngineConfig(
+        max_slots=max_slots,
+        max_seq_len=max(prompt_len + max_new_tokens, pad),
+        prefill_chunk=chunk, eos_id=eos_id, skew_seed=skew_seed)

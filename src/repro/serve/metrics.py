@@ -1,0 +1,131 @@
+"""Serving metrics: per-request latency accounting plus per-step MoE
+schedule diagnostics.
+
+Per request (the paper's §5 serving metrics):
+  * TTFT — first_token_time - arrival_time (queueing + prefill)
+  * TPOT — mean inter-token time over the decode phase
+  * e2e  — finish_time - arrival_time
+
+Per step, the engine feeds in the HarMoEny schedule diagnostics emitted by
+the MoE block (moved_units, send/dest drops, max load before/after) and the
+number of occupied decode slots, so batch-occupancy and load-balance
+trajectories can be plotted against arrival rate and skew.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.serve.request import RequestState
+
+
+def percentiles(xs, ps=(50, 90, 99)) -> Dict[str, float]:
+    xs = np.asarray(list(xs), np.float64)
+    if xs.size == 0:
+        return {f"p{p}": float("nan") for p in ps} | {"mean": float("nan")}
+    out = {f"p{p}": float(np.percentile(xs, p)) for p in ps}
+    out["mean"] = float(xs.mean())
+    return out
+
+
+@dataclass
+class RequestRecord:
+    """Immutable latency record for one finished request."""
+    rid: int
+    prompt_len: int
+    n_generated: int
+    arrival_time: float
+    admitted_time: float
+    first_token_time: float
+    finish_time: float
+
+    @property
+    def ttft(self) -> float:
+        return self.first_token_time - self.arrival_time
+
+    @property
+    def tpot(self) -> float:
+        if self.n_generated <= 1:
+            return 0.0
+        return (self.finish_time - self.first_token_time) \
+            / (self.n_generated - 1)
+
+    @property
+    def e2e(self) -> float:
+        return self.finish_time - self.arrival_time
+
+    def asdict(self) -> Dict[str, float]:
+        return {
+            "rid": self.rid, "prompt_len": self.prompt_len,
+            "n_generated": self.n_generated,
+            "arrival_time": self.arrival_time,
+            "queue_delay": self.admitted_time - self.arrival_time,
+            "ttft": self.ttft, "tpot": self.tpot, "e2e": self.e2e,
+        }
+
+
+class ServeMetrics:
+    """Accumulates request records and per-step diagnostics."""
+
+    def __init__(self):
+        self.requests: List[RequestRecord] = []
+        self.decode_steps: int = 0
+        self.prefill_chunks: int = 0
+        self.occupancy: List[int] = []          # active slots per decode step
+        self.moe_diags: Dict[str, List[float]] = {}
+        self._t_first_arrival: Optional[float] = None
+        self._t_last_finish: float = 0.0
+
+    # ------------------------------------------------------------------
+    def record_step(self, diags: Dict[str, Any], n_active: int,
+                    phase: str = "decode") -> None:
+        if phase == "decode":
+            self.decode_steps += 1
+            self.occupancy.append(n_active)
+        else:
+            self.prefill_chunks += 1
+        for k, v in (diags or {}).items():
+            self.moe_diags.setdefault(f"{phase}/{k}", []).append(float(v))
+
+    def complete(self, st: RequestState) -> RequestRecord:
+        rec = RequestRecord(
+            rid=st.req.rid, prompt_len=st.req.prompt_len,
+            n_generated=st.n_generated,
+            arrival_time=st.req.arrival_time,
+            admitted_time=st.admitted_time,
+            first_token_time=st.first_token_time,
+            finish_time=st.finish_time)
+        self.requests.append(rec)
+        if self._t_first_arrival is None \
+                or rec.arrival_time < self._t_first_arrival:
+            self._t_first_arrival = rec.arrival_time
+        self._t_last_finish = max(self._t_last_finish, rec.finish_time)
+        return rec
+
+    # ------------------------------------------------------------------
+    def report(self) -> Dict[str, Any]:
+        recs = self.requests
+        total_new = sum(r.n_generated for r in recs)
+        span = (self._t_last_finish - self._t_first_arrival) \
+            if recs and self._t_first_arrival is not None else 0.0
+        rep: Dict[str, Any] = {
+            "n_requests": len(recs),
+            "total_new_tokens": total_new,
+            "ttft": percentiles(r.ttft for r in recs),
+            "tpot": percentiles(r.tpot for r in recs if r.n_generated > 1),
+            "e2e": percentiles(r.e2e for r in recs),
+            "queue_delay": percentiles(
+                r.admitted_time - r.arrival_time for r in recs),
+            "throughput_tok_s": total_new / span if span > 0 else float("nan"),
+            "decode_steps": self.decode_steps,
+            "prefill_chunks": self.prefill_chunks,
+            "mean_occupancy": (float(np.mean(self.occupancy))
+                               if self.occupancy else 0.0),
+            "requests": [r.asdict() for r in recs],
+        }
+        if self.moe_diags:
+            rep["moe"] = {k: float(np.mean(v))
+                          for k, v in self.moe_diags.items()}
+        return rep

@@ -1,0 +1,69 @@
+"""Request abstractions for the continuous-batching serving engine.
+
+A ``Request`` is what a client submits: prompt tokens plus generation
+limits and an arrival time (assigned by the arrival process). The engine
+wraps each admitted request in a ``RequestState`` that tracks its slot,
+progress, and the timestamps the metrics layer turns into TTFT/TPOT.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+
+class RequestStatus(enum.Enum):
+    QUEUED = "queued"        # waiting for a free slot
+    PREFILL = "prefill"      # slot reserved, prompt chunks being consumed
+    DECODE = "decode"        # in the decode batch, emitting tokens
+    FINISHED = "finished"    # EOS or max_new_tokens reached
+
+
+@dataclass
+class Request:
+    """One generation request.
+
+    ``tokens`` is the prompt as int32 token ids; ``max_new_tokens`` bounds
+    generation (the first token produced by prefill counts toward it);
+    ``arrival_time`` is seconds on the engine clock (0 = already waiting).
+    """
+    rid: int
+    tokens: np.ndarray
+    max_new_tokens: int = 16
+    arrival_time: float = 0.0
+    eos_id: Optional[int] = None
+
+    def __post_init__(self):
+        self.tokens = np.asarray(self.tokens, np.int32).reshape(-1)
+        if self.tokens.size == 0:
+            raise ValueError(f"request {self.rid}: empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError(f"request {self.rid}: max_new_tokens < 1")
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.tokens.shape[0])
+
+
+@dataclass
+class RequestState:
+    """Engine-side bookkeeping for one admitted request."""
+    req: Request
+    slot: int
+    status: RequestStatus = RequestStatus.PREFILL
+    prefill_pos: int = 0                 # prompt tokens consumed so far
+    output: List[int] = field(default_factory=list)
+    # --- timestamps on the engine clock ---
+    admitted_time: float = 0.0           # slot reserved / prefill started
+    first_token_time: float = 0.0        # last prefill chunk done (TTFT point)
+    finish_time: float = 0.0
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.output)
+
+    @property
+    def prefill_done(self) -> bool:
+        return self.prefill_pos >= self.req.prompt_len

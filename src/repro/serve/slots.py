@@ -1,0 +1,66 @@
+"""Slotted KV pool: ``model.init_cache`` reinterpreted as a slab of
+per-request slots.
+
+The pool is one static-shape cache pytree of batch ``n_slots``; each row is
+a slot that a request occupies from admission until EOS/max-len, after which
+it is recycled for a queued request. Prefill runs against a batch-1 scratch
+cache (same per-layer shapes) and the finished prefix is scattered into the
+slot with ``write_slot`` — a traced-index ``dynamic_update_slice``, so slot
+recycling never triggers recompilation.
+
+Cache layouts differ per leaf (scan-stacked blocks put batch at axis 1,
+unscanned lead layers at axis 0), so the batch axis of every leaf is
+discovered structurally: ``init_cache`` is shape-evaluated at two batch
+sizes and the differing axis is the batch axis.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def discover_batch_axes(init_cache: Callable[[int, int], Any],
+                        s_max: int) -> Any:
+    """Pytree of per-leaf batch-axis indices for ``init_cache`` outputs."""
+    a = jax.eval_shape(lambda: init_cache(2, s_max))
+    b = jax.eval_shape(lambda: init_cache(3, s_max))
+
+    def axis(la, lb):
+        diffs = [i for i, (x, y) in enumerate(zip(la.shape, lb.shape))
+                 if x != y]
+        if len(diffs) != 1:
+            raise ValueError(
+                f"cannot identify batch axis for cache leaf {la.shape} "
+                f"vs {lb.shape}")
+        return diffs[0]
+
+    return jax.tree.map(axis, a, b)
+
+
+def min_kv_capacity(init_cache: Callable[[int, int], Any], s_max: int,
+                    batch_axes: Any) -> int:
+    """Smallest per-layer KV length in the pool (sliding-window layers clamp
+    their cache to the window, so prefill writes must fit the minimum)."""
+    shapes = jax.eval_shape(lambda: init_cache(1, s_max))
+    caps = []
+    jax.tree.map(
+        lambda leaf, ax: caps.append(leaf.shape[ax + 1]), shapes, batch_axes)
+    return min(caps)
+
+
+def write_slot(pool: Any, scratch: Any, slot: jnp.ndarray,
+               batch_axes: Any) -> Any:
+    """Scatter the batch-1 ``scratch`` cache into row ``slot`` of ``pool``.
+
+    ``slot`` is a traced int32 scalar — one compilation serves every slot.
+    """
+    def upd(p, sc, ax):
+        pm = jnp.moveaxis(p, ax, 0)
+        sm = jnp.moveaxis(sc, ax, 0).astype(pm.dtype)
+        pm = jax.lax.dynamic_update_slice(
+            pm, sm, (slot,) + (0,) * (pm.ndim - 1))
+        return jnp.moveaxis(pm, 0, ax)
+
+    return jax.tree.map(upd, pool, scratch, batch_axes)

@@ -1,0 +1,67 @@
+"""Minimal stand-in for the slice of the `hypothesis` API this suite uses.
+
+When the real `hypothesis` package is unavailable, property tests fall back
+to deterministic seeded sampling: ``@given`` re-runs the test body for
+``max_examples`` draws from the strategies (``integers``, ``sampled_from``,
+``booleans``). No shrinking, no example database — just enough randomized
+coverage that the tier-1 suite runs green without optional deps.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+
+_SEED = 0x5EED
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def _integers(lo: int, hi: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(lo, hi))
+
+
+def _sampled_from(options) -> _Strategy:
+    opts = list(options)
+    return _Strategy(lambda rng: opts[rng.randrange(len(opts))])
+
+
+def _booleans() -> _Strategy:
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+strategies = types.SimpleNamespace(
+    integers=_integers, sampled_from=_sampled_from, booleans=_booleans)
+
+
+def settings(max_examples: int = 10, deadline=None, **_kw):
+    """Records max_examples on the (possibly already @given-wrapped) test."""
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_shim_max_examples",
+                        getattr(fn, "_shim_max_examples", 10))
+            rng = random.Random(_SEED)
+            for i in range(n):
+                drawn = [s.draw(rng) for s in strats]
+                try:
+                    fn(*args, *drawn, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example #{i}: args={drawn}") from e
+        # hide the strategy-fed params from pytest's fixture resolution
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep; deterministic fallback sampler
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.models.attention import (AttnCache, chunked_attention,
                                     decode_attention, full_attention_ref)

@@ -8,6 +8,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint.checkpointer import Checkpointer
+from repro.launch.mesh import make_mesh
 
 
 def _tree():
@@ -65,8 +66,7 @@ def test_keep_k_gc(tmp_path):
 def test_elastic_reshard_on_restore(tmp_path):
     """A checkpoint written replicated restores onto a different sharding —
     the mesh-change (elastic restart) path."""
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     ck = Checkpointer(str(tmp_path))
     t = _tree()
     ck.save(7, t, blocking=True)

@@ -3,7 +3,10 @@ all_to_all to identity, isolating the index bookkeeping)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep; deterministic fallback sampler
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core import dispatch as D
 from repro.core.scheduler import initial_assign

@@ -27,10 +27,10 @@ def test_moe_block_oracle_on_2x4_mesh():
     _run("""
     import numpy as np, jax, jax.numpy as jnp
     from repro.configs.base import MoEConfig
+    from repro.launch.mesh import make_mesh
     from repro.core.moe_layer import MoEBlockSpec, moe_block, init_moe_params
     from repro.core.router import route_topk
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     B, S, d, f, E, k = 4, 16, 32, 64, 8, 2
     moe = MoEConfig(num_experts=E, num_experts_per_tok=k, d_ff_expert=f,
                     policy="harmoeny", capacity_factor=2.0, num_foreign_slots=4)
@@ -68,9 +68,9 @@ def test_skew_balances_load_across_ranks():
     _run("""
     import numpy as np, jax, jax.numpy as jnp
     from repro.configs.base import MoEConfig
+    from repro.launch.mesh import make_mesh
     from repro.core.moe_layer import MoEBlockSpec, moe_block, init_moe_params
-    mesh = jax.make_mesh((1, 8), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    mesh = make_mesh((1, 8), ("data", "model"))
     B, S, d, f, E, k = 2, 256, 16, 32, 16, 1
     moe = MoEConfig(num_experts=E, num_experts_per_tok=k, d_ff_expert=f,
                     policy="harmoeny", router_skew=0.9, q_tokens=2,
@@ -97,10 +97,10 @@ def test_round_robin_drops_under_skew_harmoeny_does_not():
     _run("""
     import jax, jax.numpy as jnp
     from repro.configs.base import MoEConfig
+    from repro.launch.mesh import make_mesh
     from repro.core.moe_layer import MoEBlockSpec, moe_block, init_moe_params
     import dataclasses
-    mesh = jax.make_mesh((1, 8), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    mesh = make_mesh((1, 8), ("data", "model"))
     B, S, d, f, E, k = 2, 256, 16, 32, 16, 1
     base = MoEConfig(num_experts=E, num_experts_per_tok=k, d_ff_expert=f,
                      router_skew=0.9, q_tokens=2, capacity_factor=1.25,
@@ -129,9 +129,9 @@ def test_seq_sharded_island_matches_replicated():
     _run("""
     import dataclasses, numpy as np, jax, jax.numpy as jnp
     from repro.configs.base import MoEConfig
+    from repro.launch.mesh import make_mesh
     from repro.core.moe_layer import MoEBlockSpec, moe_block, init_moe_params
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     B, S, d, f, E, k = 4, 16, 32, 64, 8, 2
     moe = MoEConfig(num_experts=E, num_experts_per_tok=k, d_ff_expert=f,
                     capacity_factor=2.0, num_foreign_slots=4)
@@ -156,9 +156,10 @@ def test_compressed_psum_grad_agreement():
     _run("""
     import numpy as np, jax, jax.numpy as jnp
     from repro.optim.compress import compressed_psum
+    from repro.launch.mesh import make_mesh
+    from repro.core.compat import shard_map
     P = jax.sharding.PartitionSpec
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("data",))
     g_global = jax.random.normal(jax.random.PRNGKey(0), (8, 128))
     def f(g):
         grads = {"w": g[0]}
@@ -166,7 +167,7 @@ def test_compressed_psum_grad_agreement():
         out, new_err = compressed_psum(grads, err, jax.random.PRNGKey(1),
                                        axis_name="data")
         return out["w"][None]
-    got = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("data", None),
+    got = jax.jit(shard_map(f, mesh=mesh, in_specs=P("data", None),
                                 out_specs=P("data", None),
                                 check_vma=False))(g_global)
     want = np.asarray(g_global).mean(axis=0)

@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep; deterministic fallback sampler
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.models.losses import chunked_softmax_xent, logits_head
 from repro.optim.adamw import adamw_init, adamw_update

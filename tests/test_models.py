@@ -13,13 +13,13 @@ import pytest
 from repro.configs import REGISTRY, SHAPES, get_config, iter_cells, shape_applicable
 from repro.configs.base import ParallelConfig
 from repro.models.model import MeshShape, build_model
+from repro.launch.mesh import make_mesh
 
 ARCHS = sorted(REGISTRY)
 
 
 def _mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def _batch_for(cfg, B, S, train=True):

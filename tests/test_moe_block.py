@@ -12,11 +12,11 @@ from repro.configs.base import MoEConfig
 from repro.core.moe_layer import MoEBlockSpec, init_moe_params, moe_block
 from repro.core.router import route_topk
 from repro.core.topology import make_topology
+from repro.launch.mesh import make_mesh
 
 
 def _mesh11():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def _dense_oracle(x, params, E, k, act="silu"):

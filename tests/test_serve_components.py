@@ -1,0 +1,139 @@
+"""Unit tests for the serve subsystem's non-model components: arrival
+processes, the admission queue, latency metrics, and the slot pool's
+structural batch-axis discovery / scatter."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve.arrivals import (AdmissionQueue, VirtualClock,
+                                  poisson_requests, trace_requests)
+from repro.serve.metrics import RequestRecord, ServeMetrics, percentiles
+from repro.serve.request import Request, RequestState
+from repro.serve.slots import (discover_batch_axes, min_kv_capacity,
+                               write_slot)
+
+
+# ----------------------------------------------------------------------
+# arrivals
+# ----------------------------------------------------------------------
+def test_poisson_arrivals_monotone_and_rate_scaled():
+    reqs = poisson_requests(200, rate=50.0, vocab_size=64, prompt_len=8,
+                            max_new_tokens=4, seed=0)
+    ts = [r.arrival_time for r in reqs]
+    assert all(b >= a for a, b in zip(ts, ts[1:]))
+    # mean inter-arrival ~ 1/rate (law of large numbers, loose bound)
+    gaps = np.diff(ts)
+    assert 0.5 / 50.0 < gaps.mean() < 2.0 / 50.0
+    # rate=0 => closed batch at t=0
+    batch = poisson_requests(5, rate=0.0, vocab_size=64, prompt_len=8,
+                             max_new_tokens=4)
+    assert all(r.arrival_time == 0.0 for r in batch)
+
+
+def test_admission_queue_fifo_among_arrived():
+    reqs = [Request(rid=i, tokens=np.ones(4, np.int32), arrival_time=t)
+            for i, t in enumerate([0.0, 2.0, 0.0])]
+    q = AdmissionQueue(reqs)
+    assert q.pop_ready(0.0).rid == 0     # FIFO among the two t=0 arrivals
+    assert q.pop_ready(0.0).rid == 2
+    assert q.pop_ready(1.0) is None      # rid=1 hasn't arrived yet
+    assert q.next_arrival() == 2.0
+    assert q.pop_ready(2.5).rid == 1
+    assert len(q) == 0
+
+
+def test_trace_requests_roundtrip():
+    recs = [{"arrival_time": 0.5, "prompt_len": 6, "max_new_tokens": 3},
+            {"arrival_time": 1.5, "tokens": [1, 2, 3], "rid": 9}]
+    reqs = trace_requests(recs, vocab_size=64)
+    assert reqs[0].prompt_len == 6 and reqs[0].arrival_time == 0.5
+    assert reqs[1].rid == 9 and list(reqs[1].tokens) == [1, 2, 3]
+
+
+def test_virtual_clock_advances():
+    c = VirtualClock(0.25)
+    assert c.now() == 0.25 and c.now() == 0.5
+    c.wait(1.0)
+    assert c.now() == pytest.approx(1.75)
+
+
+def test_request_validation_rejects_empty():
+    with pytest.raises(ValueError):
+        Request(rid=0, tokens=np.zeros((0,), np.int32))
+    with pytest.raises(ValueError):
+        Request(rid=0, tokens=np.ones(4, np.int32), max_new_tokens=0)
+
+
+# ----------------------------------------------------------------------
+# metrics
+# ----------------------------------------------------------------------
+def test_percentiles_and_report():
+    assert percentiles([1.0, 1.0, 1.0])["p50"] == 1.0
+    assert np.isnan(percentiles([])["p99"])
+
+    m = ServeMetrics()
+    st = RequestState(
+        req=Request(rid=1, tokens=np.ones(4, np.int32), max_new_tokens=4,
+                    arrival_time=1.0),
+        slot=0, admitted_time=2.0, first_token_time=3.0, finish_time=6.0)
+    st.output.extend([5, 6, 7, 8])
+    rec = m.complete(st)
+    assert rec.ttft == 2.0
+    assert rec.tpot == pytest.approx(1.0)        # 3 intervals over 3s
+    assert rec.e2e == 5.0
+    m.record_step({"moved_units": 3.0}, 2, phase="decode")
+    m.record_step({"moved_units": 1.0}, 2, phase="decode")
+    rep = m.report()
+    assert rep["moe"]["decode/moved_units"] == 2.0
+    assert rep["decode_steps"] == 2 and rep["mean_occupancy"] == 2.0
+    assert rep["throughput_tok_s"] == pytest.approx(4 / 5.0)
+
+
+def test_tpot_degenerate_single_token():
+    rec = RequestRecord(rid=0, prompt_len=4, n_generated=1, arrival_time=0.0,
+                        admitted_time=0.0, first_token_time=1.0,
+                        finish_time=1.0)
+    assert rec.tpot == 0.0
+
+
+# ----------------------------------------------------------------------
+# slot pool
+# ----------------------------------------------------------------------
+def _fake_init_cache(b, s_max):
+    """Mimics the real cache layout: scan-stacked blocks (batch at axis 1)
+    plus unscanned lead layers (batch at axis 0)."""
+    return {
+        "stack": {
+            "blocks": {"sub0": (jnp.zeros((3, b, s_max, 2, 4)),
+                                jnp.zeros((3, b, s_max, 2, 4)))},
+            "lead": [jnp.zeros((b, min(s_max, 6), 2, 4))],
+        },
+    }
+
+
+def test_discover_batch_axes_and_capacity():
+    axes = discover_batch_axes(_fake_init_cache, 16)
+    assert axes["stack"]["blocks"]["sub0"] == (1, 1)
+    assert axes["stack"]["lead"] == [0]
+    # lead layer clamps its KV length to 6 (sliding-window analogue)
+    assert min_kv_capacity(_fake_init_cache, 16, axes) == 6
+
+
+def test_write_slot_scatters_one_row():
+    axes = discover_batch_axes(_fake_init_cache, 8)
+    pool = jax.tree.map(lambda l: l, _fake_init_cache(4, 8))
+    scratch = jax.tree.map(jnp.ones_like, _fake_init_cache(1, 8))
+    out = jax.jit(lambda p, s, i: write_slot(p, s, i, axes))(
+        pool, scratch, jnp.int32(2))
+    k = np.asarray(out["stack"]["blocks"]["sub0"][0])
+    assert (k[:, 2] == 1).all() and (k[:, [0, 1, 3]] == 0).all()
+    lead = np.asarray(out["stack"]["lead"][0])
+    assert (lead[2] == 1).all() and (lead[[0, 1, 3]] == 0).all()
+
+
+def test_discover_batch_axes_rejects_ambiguous():
+    def bad(b, s):
+        return {"x": jnp.zeros((4, 4))}          # batch never appears
+    with pytest.raises(ValueError):
+        discover_batch_axes(bad, 8)

@@ -1,0 +1,244 @@
+"""Serving-engine integration tests on tiny CPU models.
+
+Covers the ISSUE-mandated invariants: chunked prefill + slotted decode
+reproduce the one-shot driver token-for-token; finished slots are recycled
+by queued requests with ZERO recompilation (jit cache stays at one entry per
+function); TTFT/TPOT metrics are arithmetically consistent on a
+deterministic clock; the MoE path threads per-step skew keys and surfaces
+HarMoEny schedule diagnostics.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig, MoEConfig, ParallelConfig
+from repro.launch.mesh import make_host_mesh
+from repro.models.model import MeshShape, build_model
+from repro.serve import (Request, ServeEngine, VirtualClock,
+                         engine_config_for, poisson_requests)
+
+TINY = ModelConfig(name="tiny", family="dense", num_layers=2, d_model=32,
+                   num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=64,
+                   head_dim=16, dtype="float32")
+
+
+def _model(cfg, batch, seq_len):
+    m = build_model(cfg, ParallelConfig(attn_chunk=8, loss_chunk=8),
+                    batch=batch, seq_len=seq_len)
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+def _engine(cfg, model, params, *, slots, prompt_len, max_new, chunk):
+    ecfg = engine_config_for(cfg, max_slots=slots, prompt_len=prompt_len,
+                             max_new_tokens=max_new, prefill_chunk=chunk)
+    return ServeEngine(model, params, ecfg, clock=VirtualClock(0.5))
+
+
+def _reference_tokens(model, params, prompt, gen, s_max):
+    """One-shot prefill + lockstep greedy decode (the old serve driver)."""
+    logits, caches, pos, _ = model.prefill(
+        params, {"tokens": jnp.asarray(prompt[None])}, s_max=s_max)
+    out = [int(jnp.argmax(logits, -1)[0])]
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    for _ in range(gen - 1):
+        logits, caches, pos, _ = model.decode_step(params, tok, caches, pos)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        out.append(int(tok[0, 0]))
+    return out
+
+
+def test_engine_matches_one_shot_driver():
+    """Chunked prefill + slotted decode == one-shot prefill + decode,
+    token for token (partial final chunk included: 10 = 4 + 4 + 2)."""
+    L, gen = 10, 6
+    model, params = _model(TINY, 1, L)
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, TINY.vocab_size, (L,)).astype(np.int32)
+
+    eng = _engine(TINY, model, params, slots=1, prompt_len=L, max_new=gen,
+                  chunk=4)
+    rep = eng.run([Request(rid=0, tokens=prompt, max_new_tokens=gen)])
+    got = rep["requests"][0]
+    ref = _reference_tokens(model, params, prompt, gen,
+                            eng.ecfg.max_seq_len)
+    st_outputs = [r for r in eng.metrics.requests if r.rid == 0]
+    assert got["n_generated"] == gen == len(ref)
+    # recover the engine's emitted tokens from the completed state record
+    assert rep["n_requests"] == 1
+    # engine stores outputs on RequestState; re-run to capture them directly
+    eng2 = _engine(TINY, model, params, slots=1, prompt_len=L, max_new=gen,
+                   chunk=4)
+    outputs = {}
+    orig = eng2._finish
+
+    def capture(st, now):
+        outputs[st.req.rid] = list(st.output)
+        orig(st, now)
+
+    eng2._finish = capture
+    eng2.run([Request(rid=0, tokens=prompt, max_new_tokens=gen)])
+    assert outputs[0] == ref
+
+
+def test_slot_recycling_and_zero_recompilation():
+    """6 requests through 2 slots: every slot is reused, all requests finish,
+    and each jitted function compiled exactly once."""
+    L, gen, slots = 8, 4, 2
+    model, params = _model(TINY, slots, L)
+    eng = _engine(TINY, model, params, slots=slots, prompt_len=L,
+                  max_new=gen, chunk=4)
+    reqs = poisson_requests(6, rate=0.0, vocab_size=TINY.vocab_size,
+                            prompt_len=L, max_new_tokens=gen, seed=0)
+    rep = eng.run(reqs)
+    assert rep["n_requests"] == 6
+    assert rep["total_new_tokens"] == 6 * gen
+    used = [s for _, s in eng.slot_history]
+    assert sorted(set(used)) == [0, 1]          # both slots exercised
+    assert len(used) == 6                        # every request got a slot
+    assert max(np.bincount(used)) >= 2           # recycling happened
+    assert rep["jit_entries"] == {"prefill_chunk": 1, "decode": 1,
+                                  "write_slot": 1}, rep["jit_entries"]
+
+
+def test_mixed_lengths_decode_together():
+    """Two requests of different prompt lengths share one decode batch and
+    each still reproduces its single-request token stream (per-slot
+    position vectors)."""
+    model, params = _model(TINY, 2, 12)
+    rng = np.random.default_rng(7)
+    pa = rng.integers(0, TINY.vocab_size, (12,)).astype(np.int32)
+    pb = rng.integers(0, TINY.vocab_size, (5,)).astype(np.int32)
+    gen = 5
+
+    def run_engine(reqs, slots):
+        eng = _engine(TINY, model, params, slots=slots, prompt_len=12,
+                      max_new=gen, chunk=4)
+        outputs = {}
+        orig = eng._finish
+
+        def capture(st, now):
+            outputs[st.req.rid] = list(st.output)
+            orig(st, now)
+
+        eng._finish = capture
+        eng.run(reqs)
+        return outputs
+
+    together = run_engine(
+        [Request(rid=0, tokens=pa, max_new_tokens=gen),
+         Request(rid=1, tokens=pb, max_new_tokens=gen)], slots=2)
+    solo_a = run_engine([Request(rid=0, tokens=pa, max_new_tokens=gen)],
+                        slots=2)
+    solo_b = run_engine([Request(rid=1, tokens=pb, max_new_tokens=gen)],
+                        slots=2)
+    assert together[0] == solo_a[0]
+    assert together[1] == solo_b[1]
+
+
+def test_ttft_tpot_metrics_consistent():
+    """On a deterministic clock the recorded latency identities hold."""
+    L, gen = 8, 5
+    model, params = _model(TINY, 2, L)
+    eng = _engine(TINY, model, params, slots=2, prompt_len=L, max_new=gen,
+                  chunk=4)
+    reqs = poisson_requests(4, rate=2.0, vocab_size=TINY.vocab_size,
+                            prompt_len=L, max_new_tokens=gen, seed=5)
+    rep = eng.run(reqs)
+    assert rep["n_requests"] == 4
+    for rec in eng.metrics.requests:
+        assert rec.first_token_time >= rec.admitted_time >= rec.arrival_time
+        assert rec.finish_time >= rec.first_token_time
+        assert rec.ttft >= 0 and rec.tpot > 0
+        # e2e decomposes exactly into TTFT + (n-1) * TPOT
+        assert rec.e2e == pytest.approx(
+            rec.ttft + rec.tpot * (rec.n_generated - 1))
+        assert rec.n_generated == gen
+    assert rep["ttft"]["p50"] <= rep["ttft"]["p99"]
+
+
+def test_eos_frees_slot_early():
+    """A request hitting EOS mid-stream finishes and frees its slot."""
+    L, gen = 8, 16
+    model, params = _model(TINY, 1, L)
+    eng = _engine(TINY, model, params, slots=1, prompt_len=L, max_new=gen,
+                  chunk=4)
+    # pick the EOS id from a dry run: the 2nd emitted token
+    probe = _reference_tokens(model, params,
+                              np.arange(L).astype(np.int32), 3,
+                              eng.ecfg.max_seq_len)
+    eos = probe[1]
+    rep = eng.run([Request(rid=0, tokens=np.arange(L).astype(np.int32),
+                           max_new_tokens=gen, eos_id=eos)])
+    rec = rep["requests"][0]
+    assert rec["n_generated"] == 2               # stopped at the EOS token
+    assert not eng.has_work()
+    assert list(eng.free_slots) == [0]
+
+
+def test_request_validation():
+    L = 8
+    model, params = _model(TINY, 1, L)
+    eng = _engine(TINY, model, params, slots=1, prompt_len=L, max_new=4,
+                  chunk=4)
+    with pytest.raises(ValueError, match="exceeds"):
+        eng.submit(Request(rid=0, tokens=np.zeros(64, np.int32),
+                           max_new_tokens=4))
+    with pytest.raises(ValueError, match="max_new"):
+        eng.submit(Request(rid=1, tokens=np.zeros((L,), np.int32),
+                           max_new_tokens=1000))
+
+
+def test_moe_engine_diagnostics_and_skew_keys():
+    """Reduced-family MoE model: the engine threads a fresh skew key into
+    every decode step (the old driver's bug) and HarMoEny schedule
+    diagnostics land in the report."""
+    cfg = ModelConfig(
+        name="tiny-moe", family="moe", num_layers=2, d_model=32,
+        num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=64, head_dim=16,
+        dtype="float32",
+        moe=MoEConfig(num_experts=4, num_experts_per_tok=2, d_ff_expert=32,
+                      policy="harmoeny", router_skew=0.9,
+                      num_foreign_slots=1))
+    mesh = make_host_mesh(1, 1)
+    ms = MeshShape(tuple(zip(mesh.axis_names, mesh.devices.shape)))
+    model = build_model(cfg, ParallelConfig(attn_chunk=8, loss_chunk=8),
+                        batch=2, seq_len=8, mesh_shape=ms, mesh=mesh)
+    with mesh:
+        params = model.init(jax.random.PRNGKey(0))
+    ecfg = engine_config_for(cfg, max_slots=2, prompt_len=8,
+                             max_new_tokens=3, prefill_chunk=4)
+    eng = ServeEngine(model, params, ecfg, mesh=mesh,
+                      clock=VirtualClock(0.5))
+    assert eng._skew                              # keys will be threaded
+    keys = []
+    orig = eng._next_key
+
+    def spy(stream, idx):
+        k = orig(stream, idx)
+        keys.append(None if k is None else np.asarray(k).tolist())
+        return k
+
+    eng._next_key = spy
+    rep = eng.run(poisson_requests(3, rate=0.0, vocab_size=cfg.vocab_size,
+                                   prompt_len=8, max_new_tokens=3, seed=2))
+    assert rep["n_requests"] == 3
+    assert "moe" in rep and any("moved_units" in k for k in rep["moe"])
+    # inactive slots are masked out of routing: per-step expert load can
+    # never exceed the active tokens' unit count (<= 2 slots * top-2)
+    assert max(eng.metrics.moe_diags["decode/max_load_before"]) <= 4
+    # every threaded key is distinct — no step reuses the skew stream
+    as_tuples = [tuple(k) for k in keys if k is not None]
+    assert len(as_tuples) == len(set(as_tuples)) and as_tuples
+    assert rep["jit_entries"]["decode"] == 1
+
+
+def test_engine_rejects_unsupported_families():
+    cfg = get_config("mamba2-2.7b").reduced()
+    model, params = _model(cfg, 1, 8)
+    with pytest.raises(NotImplementedError):
+        _engine(cfg, model, params, slots=1, prompt_len=8, max_new=2,
+                chunk=4)
