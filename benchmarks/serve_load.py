@@ -32,7 +32,10 @@ ARCH = "mixtral-8x7b"
 MODEL_PAR = 2
 PROMPT_LEN, GEN, SLOTS, N_REQ = 32, 8, 4, 12
 PREFILL_CHUNK = 16
-RATES = [0.0, 50.0]            # req/s; 0 = closed batch
+# req/s; 0 = closed batch, 5 ~ inter-arrival on the order of the service
+# time (true open-loop interleaving), 50 = overload (arrivals finish in
+# ~0.24s, so slot packing converges back to the closed-batch schedule)
+RATES = [0.0, 5.0, 50.0]
 SKEWS = [0.0, 0.9]
 POLICIES = ["harmoeny", "round_robin"]
 

@@ -29,9 +29,19 @@ from repro.serve.request import Request
 # Clocks
 # ----------------------------------------------------------------------
 class WallClock:
-    """Monotonic wall time, zeroed at construction."""
+    """Monotonic wall time, zeroed at construction.
+
+    ``reset()`` re-zeroes the clock; the engine calls it at the start of
+    each measurement window so request arrival times (which start at 0)
+    are relative to the window, not to engine construction — otherwise
+    TTFT would absorb jit compilation and previous runs' wall time, and
+    every open-loop arrival would already be in the past.
+    """
 
     def __init__(self):
+        self._t0 = time.perf_counter()
+
+    def reset(self) -> None:
         self._t0 = time.perf_counter()
 
     def now(self) -> float:
@@ -46,7 +56,11 @@ class VirtualClock:
 
     def __init__(self, dt: float = 1.0, t0: float = 0.0):
         self.dt = dt
+        self.t0 = t0
         self.t = t0
+
+    def reset(self) -> None:
+        self.t = self.t0
 
     def now(self) -> float:
         self.t += self.dt

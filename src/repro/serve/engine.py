@@ -39,8 +39,8 @@ from repro.configs.base import round_up
 from repro.serve.arrivals import AdmissionQueue, WallClock
 from repro.serve.metrics import ServeMetrics
 from repro.serve.request import Request, RequestState, RequestStatus
-from repro.serve.slots import (discover_batch_axes, min_kv_capacity,
-                               write_slot)
+from repro.serve.slots import (discover_batch_axes, discover_seq_axes,
+                               min_kv_capacity, write_slot)
 
 
 @dataclass(frozen=True)
@@ -71,8 +71,10 @@ class ServeEngine:
             raise NotImplementedError(
                 "serve engine v1 shards the model/expert axis only; run "
                 "with data=1 (data-parallel serving is an open item)")
-        if ecfg.prefill_chunk < 1 or ecfg.max_slots < 1:
-            raise ValueError("prefill_chunk and max_slots must be >= 1")
+        if ecfg.prefill_chunk < 1 or ecfg.max_slots < 1 \
+                or ecfg.chunks_per_step < 1:
+            raise ValueError(
+                "prefill_chunk, max_slots, and chunks_per_step must be >= 1")
 
         self.model = model
         self.params = params
@@ -89,8 +91,10 @@ class ServeEngine:
 
         self._batch_axes = discover_batch_axes(model.init_cache,
                                                ecfg.max_seq_len)
+        self._seq_axes = discover_seq_axes(model.init_cache,
+                                           ecfg.max_seq_len)
         self.kv_capacity = min_kv_capacity(model.init_cache, ecfg.max_seq_len,
-                                           self._batch_axes)
+                                           self._seq_axes)
         with self._ctx():
             self.pool = model.init_cache(ecfg.max_slots, ecfg.max_seq_len)
             self._scratch = model.init_cache(1, ecfg.max_seq_len)
@@ -141,8 +145,14 @@ class ServeEngine:
         self.queue.push(req)
 
     def has_work(self) -> bool:
-        return bool(len(self.queue) or self._pf is not None
-                    or self._pf_queue or self.active.any())
+        return bool(len(self.queue) or self._in_flight())
+
+    def _in_flight(self) -> bool:
+        """Admitted work whose timestamps already live on the current clock
+        (queued-but-unadmitted requests carry none — their arrival_time is
+        relative to the measurement window, not the clock origin)."""
+        return bool(self._pf is not None or self._pf_queue
+                    or self.active.any())
 
     # ------------------------------------------------------------------
     def _admit(self, now: float) -> None:
@@ -246,17 +256,28 @@ class ServeEngine:
 
     # ------------------------------------------------------------------
     def reset_metrics(self) -> None:
-        """Fresh metrics for a new measurement window (the engine must be
-        idle); slot state, jit caches, and warmup status are kept."""
-        if self.has_work():
+        """Fresh metrics AND a re-zeroed clock for a new measurement window;
+        slot state, jit caches, and warmup status are kept. Queued (not yet
+        admitted) requests are fine — like ``run()``'s rebase, only their
+        window-relative arrival times carry over — but admitted work holds
+        timestamps on the current clock, so the engine must have nothing in
+        flight."""
+        if self._in_flight():
             raise RuntimeError("cannot reset metrics while work is in flight")
         self.metrics = ServeMetrics()
         self.slot_history.clear()
+        self.clock.reset()
 
     def warmup(self) -> None:
         """Compile the three jitted functions on dummy data so the first
         request's TTFT measures serving latency, not XLA compilation.
-        Touches only inactive slots; call before submitting work."""
+        Overwrites pool slot 0 and the scratch cache, so the engine must
+        be idle (enforced) — call before submitting work."""
+        if self.has_work() or any(st is not None for st in self.state_by_slot):
+            raise RuntimeError(
+                "warmup() overwrites pool slot 0 and the scratch cache; it "
+                "must run on an idle engine (no queued or in-flight "
+                "requests, no occupied slots)")
         C = self.ecfg.prefill_chunk
         chunk = np.zeros((1, C), np.int32)
         # two passes: the first compiles against the freshly-initialized
@@ -293,6 +314,23 @@ class ServeEngine:
 
     def run(self, requests: Sequence[Request] = (), *,
             max_steps: int = 1_000_000) -> Dict[str, Any]:
+        """Drive the engine until all work drains.
+
+        At the start of a fresh measurement window — nothing in flight and
+        no metrics recorded yet — the clock is rebased to 0 so that arrival
+        times (which start at 0) are measured from this call, not from
+        engine construction: warmup/compile time and prior windows' wall
+        time stay out of TTFT/e2e/queue_delay, and open-loop Poisson
+        arrivals stay in the future rather than all already arrived.
+        Requests submitted via ``submit()`` before this call don't block
+        the rebase (their arrival times are window-relative); in-flight
+        work or already-recorded metrics do, since their timestamps live on
+        the current timebase — accumulating several ``run()`` calls into
+        one window therefore keeps one continuous clock, and the caller
+        owns any arrival-time offsets for the later batches.
+        """
+        if not self._in_flight() and self.metrics.empty:
+            self.clock.reset()
         for r in requests:
             self.submit(r)
         steps = 0

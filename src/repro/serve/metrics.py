@@ -78,6 +78,11 @@ class ServeMetrics:
         self._t_first_arrival: Optional[float] = None
         self._t_last_finish: float = 0.0
 
+    @property
+    def empty(self) -> bool:
+        """No timestamps recorded yet — the measurement window is fresh."""
+        return not (self.requests or self.decode_steps or self.prefill_chunks)
+
     # ------------------------------------------------------------------
     def record_step(self, diags: Dict[str, Any], n_active: int,
                     phase: str = "decode") -> None:

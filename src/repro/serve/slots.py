@@ -9,9 +9,11 @@ slot with ``write_slot`` — a traced-index ``dynamic_update_slice``, so slot
 recycling never triggers recompilation.
 
 Cache layouts differ per leaf (scan-stacked blocks put batch at axis 1,
-unscanned lead layers at axis 0), so the batch axis of every leaf is
-discovered structurally: ``init_cache`` is shape-evaluated at two batch
-sizes and the differing axis is the batch axis.
+unscanned lead layers at axis 0), so the batch axis AND the KV-length axis
+of every leaf are discovered structurally: ``init_cache`` is
+shape-evaluated at two batch sizes (resp. two ``s_max`` values) and the
+differing axis is the one sought — neither is assumed adjacent to the
+other.
 """
 from __future__ import annotations
 
@@ -21,6 +23,11 @@ import jax
 import jax.numpy as jnp
 
 
+def _differing_axes(la, lb) -> list:
+    """Axis indices where two shape-evaluated leaves disagree."""
+    return [i for i, (x, y) in enumerate(zip(la.shape, lb.shape)) if x != y]
+
+
 def discover_batch_axes(init_cache: Callable[[int, int], Any],
                         s_max: int) -> Any:
     """Pytree of per-leaf batch-axis indices for ``init_cache`` outputs."""
@@ -28,8 +35,7 @@ def discover_batch_axes(init_cache: Callable[[int, int], Any],
     b = jax.eval_shape(lambda: init_cache(3, s_max))
 
     def axis(la, lb):
-        diffs = [i for i, (x, y) in enumerate(zip(la.shape, lb.shape))
-                 if x != y]
+        diffs = _differing_axes(la, lb)
         if len(diffs) != 1:
             raise ValueError(
                 f"cannot identify batch axis for cache leaf {la.shape} "
@@ -39,14 +45,50 @@ def discover_batch_axes(init_cache: Callable[[int, int], Any],
     return jax.tree.map(axis, a, b)
 
 
+def discover_seq_axes(init_cache: Callable[[int, int], Any],
+                      s_max: int) -> Any:
+    """Pytree of per-leaf KV-length-axis indices for ``init_cache`` outputs,
+    found structurally like the batch axis (never assumed adjacent to it):
+    shape-evaluate at two ``s_max`` values and take the differing axis.
+
+    Sliding-window layers clamp their cache to ``min(s_max, window)``, so a
+    leaf that is s_max-invariant at (s_max, s_max + 1) is probed again at
+    (1, 2), below any window. A leaf whose shape depends on ``s_max`` at
+    neither probe (e.g. an SSM state) has no KV-length axis and is marked
+    ``-1`` (a real -1 sentinel, not ``None``, which jax pytrees treat as an
+    empty subtree).
+    """
+    probes = [(s_max, s_max + 1), (1, 2)]
+    trees = [jax.eval_shape(lambda s=s: init_cache(1, s))
+             for pair in probes for s in pair]
+
+    def axis(la_hi, lb_hi, la_lo, lb_lo):
+        for la, lb in ((la_hi, lb_hi), (la_lo, lb_lo)):
+            diffs = _differing_axes(la, lb)
+            if len(diffs) == 1:
+                return diffs[0]
+            if len(diffs) > 1:
+                raise ValueError(
+                    f"cannot identify KV-length axis for cache leaf "
+                    f"{la.shape} vs {lb.shape}")
+        return -1
+
+    return jax.tree.map(axis, *trees)
+
+
 def min_kv_capacity(init_cache: Callable[[int, int], Any], s_max: int,
-                    batch_axes: Any) -> int:
+                    seq_axes: Any) -> int:
     """Smallest per-layer KV length in the pool (sliding-window layers clamp
-    their cache to the window, so prefill writes must fit the minimum)."""
+    their cache to the window, so prefill writes must fit the minimum).
+    Leaves without a KV-length axis (marked ``-1``) impose no capacity."""
     shapes = jax.eval_shape(lambda: init_cache(1, s_max))
     caps = []
     jax.tree.map(
-        lambda leaf, ax: caps.append(leaf.shape[ax + 1]), shapes, batch_axes)
+        lambda leaf, ax: caps.append(leaf.shape[ax]) if ax >= 0 else None,
+        shapes, seq_axes)
+    if not caps:
+        raise ValueError("no cache leaf depends on s_max; cannot size the "
+                         "KV pool")
     return min(caps)
 
 

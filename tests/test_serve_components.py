@@ -6,12 +6,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.serve.arrivals import (AdmissionQueue, VirtualClock,
+from repro.serve.arrivals import (AdmissionQueue, VirtualClock, WallClock,
                                   poisson_requests, trace_requests)
 from repro.serve.metrics import RequestRecord, ServeMetrics, percentiles
 from repro.serve.request import Request, RequestState
-from repro.serve.slots import (discover_batch_axes, min_kv_capacity,
-                               write_slot)
+from repro.serve.slots import (discover_batch_axes, discover_seq_axes,
+                               min_kv_capacity, write_slot)
 
 
 # ----------------------------------------------------------------------
@@ -56,6 +56,24 @@ def test_virtual_clock_advances():
     assert c.now() == 0.25 and c.now() == 0.5
     c.wait(1.0)
     assert c.now() == pytest.approx(1.75)
+
+
+def test_clocks_reset_to_zero():
+    """Both clocks rebase to their origin so a measurement window can start
+    at t=0 regardless of time burned before it (warmup, previous runs)."""
+    v = VirtualClock(0.5)
+    v.wait(100.0)
+    v.reset()
+    assert v.now() == 0.5
+
+    w = WallClock()
+    w.wait(0.05)
+    before = w.now()
+    assert before >= 0.05
+    w.reset()
+    # post-reset reading restarts from 0: strictly below the pre-reset
+    # elapsed time (loose bound — immune to CI scheduling hiccups)
+    assert w.now() < before
 
 
 def test_request_validation_rejects_empty():
@@ -116,8 +134,33 @@ def test_discover_batch_axes_and_capacity():
     axes = discover_batch_axes(_fake_init_cache, 16)
     assert axes["stack"]["blocks"]["sub0"] == (1, 1)
     assert axes["stack"]["lead"] == [0]
+    seq = discover_seq_axes(_fake_init_cache, 16)
+    assert seq["stack"]["blocks"]["sub0"] == (2, 2)
+    # window-clamped leaf: s_max-invariant at (16, 17), found at (1, 2)
+    assert seq["stack"]["lead"] == [1]
     # lead layer clamps its KV length to 6 (sliding-window analogue)
-    assert min_kv_capacity(_fake_init_cache, 16, axes) == 6
+    assert min_kv_capacity(_fake_init_cache, 16, seq) == 6
+
+
+def test_seq_axis_not_adjacent_to_batch():
+    """The KV-length axis is discovered structurally, never assumed to sit
+    right after the batch axis; seq-independent leaves (SSM-state analogue)
+    impose no capacity."""
+    def init_cache(b, s):
+        return {
+            "kv": jnp.zeros((3, b, 2, s, 4)),    # batch at 1, seq at 3
+            "state": jnp.zeros((b, 8)),          # no seq axis at all
+        }
+
+    seq = discover_seq_axes(init_cache, 16)
+    assert seq["kv"] == 3
+    assert seq["state"] == -1
+    assert min_kv_capacity(init_cache, 16, seq) == 16
+
+    def no_seq(b, s):
+        return {"state": jnp.zeros((b, 8))}
+    with pytest.raises(ValueError, match="s_max"):
+        min_kv_capacity(no_seq, 16, discover_seq_axes(no_seq, 16))
 
 
 def test_write_slot_scatters_one_row():

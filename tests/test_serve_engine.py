@@ -160,6 +160,76 @@ def test_ttft_tpot_metrics_consistent():
     assert rep["ttft"]["p50"] <= rep["ttft"]["p99"]
 
 
+def test_run_rebases_clock_on_reuse():
+    """Regression: the engine clock is zeroed at construction, but request
+    arrival times start at 0 — without a rebase at run() start, warmup and
+    previous runs' time leaks into TTFT/queue_delay and every open-loop
+    arrival is already in the past (rate cells degenerate to closed batch).
+    """
+    L, gen = 8, 3
+    model, params = _model(TINY, 2, L)
+    clock = VirtualClock(0.5)
+    ecfg = engine_config_for(TINY, max_slots=2, prompt_len=L,
+                             max_new_tokens=gen, prefill_chunk=4)
+    eng = ServeEngine(model, params, ecfg, clock=clock)
+    eng.warmup()
+    clock.wait(1000.0)                      # time burned before measuring
+    rep = eng.run(poisson_requests(2, rate=0.0, vocab_size=TINY.vocab_size,
+                                   prompt_len=L, max_new_tokens=gen, seed=0))
+    # run() rebased the clock: warmup + idle time do not leak into latency
+    assert all(r["ttft"] < 1000.0 and r["e2e"] < 1000.0
+               for r in rep["requests"])
+
+    clock.wait(500.0)                       # idle drift between runs
+    eng.reset_metrics()
+    reqs = poisson_requests(4, rate=1.0, vocab_size=TINY.vocab_size,
+                            prompt_len=L, max_new_tokens=gen, seed=1)
+    assert max(r.arrival_time for r in reqs) > 0.0
+    rep = eng.run(reqs)
+    for rec in rep["requests"]:
+        # timestamps restart near 0: no leakage of the inter-run 500s
+        assert rec["ttft"] < 500.0
+        assert rec["e2e"] < 500.0
+    # open-loop arrivals stayed in the future at run start: the last request
+    # was admitted on the rebased timeline, after its (positive) arrival
+    last = max(eng.metrics.requests, key=lambda r: r.arrival_time)
+    assert 500.0 > last.admitted_time >= last.arrival_time > 0.0
+
+    # submit()-then-run() rebases too: queued-but-unadmitted requests carry
+    # no clock-derived timestamps, so they must not block the rebase
+    eng.reset_metrics()
+    clock.wait(800.0)
+    eng.submit(Request(rid=99, tokens=np.zeros(L, np.int32),
+                       max_new_tokens=gen))
+    rep = eng.run()
+    assert rep["requests"][0]["ttft"] < 800.0
+
+    # consecutive run()s WITHOUT reset_metrics() accumulate into one window
+    # on one continuous clock — no rebase once timestamps exist, else the
+    # overlapping timelines would inflate throughput
+    t_mid = clock.t
+    eng.run([Request(rid=100, tokens=np.zeros(L, np.int32),
+                     max_new_tokens=gen)])
+    rec2 = next(r for r in eng.metrics.requests if r.rid == 100)
+    assert rec2.first_token_time > t_mid
+
+
+def test_warmup_requires_idle_engine():
+    """warmup() overwrites pool slot 0 and the scratch cache, so it must
+    refuse to run while requests are queued or occupy slots."""
+    L = 8
+    model, params = _model(TINY, 1, L)
+    eng = _engine(TINY, model, params, slots=1, prompt_len=L, max_new=2,
+                  chunk=4)
+    eng.submit(Request(rid=0, tokens=np.zeros(L, np.int32),
+                       max_new_tokens=2))
+    eng.reset_metrics()      # queued-only work holds no clock timestamps
+    with pytest.raises(RuntimeError, match="idle"):
+        eng.warmup()
+    eng.run()                                # drain, engine idle again
+    eng.warmup()                             # now fine
+
+
 def test_eos_frees_slot_early():
     """A request hitting EOS mid-stream finishes and frees its slot."""
     L, gen = 8, 16
@@ -182,6 +252,11 @@ def test_eos_frees_slot_early():
 def test_request_validation():
     L = 8
     model, params = _model(TINY, 1, L)
+    with pytest.raises(ValueError, match="chunks_per_step"):
+        ecfg = engine_config_for(TINY, max_slots=1, prompt_len=L,
+                                 max_new_tokens=4, prefill_chunk=4)
+        ServeEngine(model, params,
+                    dataclasses.replace(ecfg, chunks_per_step=0))
     eng = _engine(TINY, model, params, slots=1, prompt_len=L, max_new=4,
                   chunk=4)
     with pytest.raises(ValueError, match="exceeds"):
