@@ -1,10 +1,17 @@
-"""Serving load benchmark: arrival rate × router skew × policy sweep.
+"""Serving load benchmark: arrival rate × router skew × policy sweep, plus
+a paged-vs-slab KV capacity comparison at equal memory.
 
 Runs the repro.serve continuous-batching engine on a reduced Mixtral-family
 MoE over 2 CPU-emulated devices (model/expert-parallel) and emits a
-machine-readable ``BENCH_serve.json`` — per-cell TTFT/TPOT percentiles,
-decode tokens/s, occupancy, and HarMoEny schedule diagnostics — so future
-PRs can regress against the serving-perf trajectory.
+machine-readable ``BENCH_serve.json``:
+
+* ``results`` — per-cell TTFT/TPOT percentiles, decode tokens/s, occupancy,
+  KV utilization / effective concurrency, and HarMoEny schedule
+  diagnostics, for the paged engine across rate × skew × policy;
+* ``capacity`` — slab vs paged engines given the SAME physical KV token
+  budget on a mixed-prompt-length workload: the paged pool's block-level
+  allocation sustains strictly more concurrent decodes than the slab
+  pool's worst-case slots.
 
   PYTHONPATH=src python benchmarks/serve_load.py [--out BENCH_serve.json]
 """
@@ -32,6 +39,7 @@ ARCH = "mixtral-8x7b"
 MODEL_PAR = 2
 PROMPT_LEN, GEN, SLOTS, N_REQ = 32, 8, 4, 12
 PREFILL_CHUNK = 16
+KV_BLOCK = 8
 # req/s; 0 = closed batch, 5 ~ inter-arrival on the order of the service
 # time (true open-loop interleaving), 50 = overload (arrivals finish in
 # ~0.24s, so slot packing converges back to the closed-batch schedule)
@@ -40,7 +48,9 @@ SKEWS = [0.0, 0.9]
 POLICIES = ["harmoeny", "round_robin"]
 
 
-def build_engine(skew: float, policy: str, skew_seed: int):
+def build_engine(skew: float, policy: str, skew_seed: int, *,
+                 slots: int = SLOTS, paged: bool = True,
+                 num_kv_blocks: int = 0):
     cfg = get_config(ARCH).reduced()
     moe = dataclasses.replace(cfg.moe, policy=policy)
     if skew > 0:
@@ -49,26 +59,49 @@ def build_engine(skew: float, policy: str, skew_seed: int):
     mesh = make_host_mesh(data=1, model=MODEL_PAR)
     ms = MeshShape(tuple(zip(mesh.axis_names, mesh.devices.shape)))
     model = build_model(cfg, ParallelConfig(attn_chunk=PROMPT_LEN),
-                        batch=SLOTS, seq_len=PROMPT_LEN,
+                        batch=slots, seq_len=PROMPT_LEN,
                         mesh_shape=ms, mesh=mesh)
     with mesh:
         params = model.init(jax.random.PRNGKey(0))
     engine = ServeEngine(
         model, params,
-        engine_config_for(cfg, max_slots=SLOTS, prompt_len=PROMPT_LEN,
+        engine_config_for(cfg, max_slots=slots, prompt_len=PROMPT_LEN,
                           max_new_tokens=GEN, prefill_chunk=PREFILL_CHUNK,
-                          skew_seed=skew_seed),
+                          skew_seed=skew_seed, paged=paged,
+                          kv_block_size=KV_BLOCK,
+                          num_kv_blocks=num_kv_blocks),
         mesh=mesh)
     engine.warmup()
     return cfg, engine
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default=os.path.join(
-        os.path.dirname(__file__), "..", "BENCH_serve.json"))
-    args = ap.parse_args()
+def _cell(rep, **extra):
+    moe = rep.get("moe", {})
+    return {
+        **extra,
+        "n_requests": rep["n_requests"],
+        "ttft_p50_ms": rep["ttft"]["p50"] * 1e3,
+        "ttft_p99_ms": rep["ttft"]["p99"] * 1e3,
+        "tpot_p50_ms": rep["tpot"]["p50"] * 1e3,
+        "tpot_p99_ms": rep["tpot"]["p99"] * 1e3,
+        "e2e_p50_ms": rep["e2e"]["p50"] * 1e3,
+        "tok_s": rep["throughput_tok_s"],
+        "mean_occupancy": rep["mean_occupancy"],
+        "max_concurrency": rep["max_occupancy"],
+        "kv_utilization": rep.get("kv_utilization"),
+        "preemptions": rep["preemptions"],
+        "decode_steps": rep["decode_steps"],
+        "prefill_chunks": rep["prefill_chunks"],
+        "recompiled_after_warmup": rep.get("recompiled_after_warmup"),
+        "moved_units": moe.get("prefill/moved_units", 0.0),
+        "drops": (moe.get("prefill/send_drops", 0.0)
+                  + moe.get("prefill/dest_drops", 0.0)),
+        "max_load_before": moe.get("prefill/max_load_before", 0.0),
+        "max_load_after": moe.get("prefill/max_load_after", 0.0),
+    }
 
+
+def sweep():
     results = []
     for skew in SKEWS:
         for policy in POLICIES:
@@ -79,33 +112,70 @@ def main():
                     N_REQ, rate=rate, vocab_size=cfg.vocab_size,
                     prompt_len=PROMPT_LEN, max_new_tokens=GEN, seed=0)
                 rep = engine.run(reqs)
-                moe = rep.get("moe", {})
-                cell = {
-                    "rate": rate, "skew": skew, "policy": policy,
-                    "n_requests": rep["n_requests"],
-                    "ttft_p50_ms": rep["ttft"]["p50"] * 1e3,
-                    "ttft_p99_ms": rep["ttft"]["p99"] * 1e3,
-                    "tpot_p50_ms": rep["tpot"]["p50"] * 1e3,
-                    "tpot_p99_ms": rep["tpot"]["p99"] * 1e3,
-                    "e2e_p50_ms": rep["e2e"]["p50"] * 1e3,
-                    "tok_s": rep["throughput_tok_s"],
-                    "mean_occupancy": rep["mean_occupancy"],
-                    "decode_steps": rep["decode_steps"],
-                    "prefill_chunks": rep["prefill_chunks"],
-                    "recompiled_after_warmup":
-                        rep.get("recompiled_after_warmup"),
-                    "moved_units": moe.get("prefill/moved_units", 0.0),
-                    "drops": (moe.get("prefill/send_drops", 0.0)
-                              + moe.get("prefill/dest_drops", 0.0)),
-                    "max_load_before": moe.get("prefill/max_load_before",
-                                               0.0),
-                    "max_load_after": moe.get("prefill/max_load_after", 0.0),
-                }
+                cell = _cell(rep, rate=rate, skew=skew, policy=policy)
                 results.append(cell)
-                print(f"[bench] skew={skew} policy={policy:11s} rate={rate:5.0f} "
+                print(f"[bench] skew={skew} policy={policy:11s} "
+                      f"rate={rate:5.0f} "
                       f"ttft_p50={cell['ttft_p50_ms']:8.1f}ms "
                       f"tpot_p50={cell['tpot_p50_ms']:6.2f}ms "
-                      f"tok/s={cell['tok_s']:6.1f}")
+                      f"tok/s={cell['tok_s']:6.1f} "
+                      f"kv_util={cell['kv_utilization']:.2f}")
+    return results
+
+
+def capacity_compare():
+    """Slab vs paged at the same KV token budget, mixed prompt lengths.
+
+    The slab pool reserves ``max_seq_len`` per slot, capping concurrency at
+    SLOTS; the paged pool spends the identical token budget block-by-block
+    and decodes more requests at once.
+    """
+    cells = []
+    n_req = 16
+    # slab budget: SLOTS x max_seq_len tokens per layer; the paged pool
+    # spends one block of it on the reserved null block, so its USABLE
+    # budget is one block smaller — physical memory is truly equal
+    cfg, slab = build_engine(0.9, "harmoeny", skew_seed=1, paged=False)
+    budget = SLOTS * slab.ecfg.max_seq_len
+    _, paged = build_engine(0.9, "harmoeny", skew_seed=1, slots=2 * SLOTS,
+                            paged=True,
+                            num_kv_blocks=budget // KV_BLOCK - 1)
+    for rate in (0.0, 50.0):
+        for name, engine in (("slab", slab), ("paged", paged)):
+            engine.reset_metrics()
+            reqs = poisson_requests(
+                n_req, rate=rate, vocab_size=cfg.vocab_size,
+                prompt_len=PROMPT_LEN, max_new_tokens=GEN, seed=3,
+                prompt_len_range=(8, PROMPT_LEN))
+            rep = engine.run(reqs)
+            cell = _cell(rep, pool=name, rate=rate, skew=0.9,
+                         policy="harmoeny",
+                         kv_budget_tokens=budget,
+                         slots=engine.ecfg.max_slots)
+            cells.append(cell)
+            print(f"[bench] capacity pool={name:5s} rate={rate:5.0f} "
+                  f"max_conc={cell['max_concurrency']} "
+                  f"mean_occ={cell['mean_occupancy']:.2f} "
+                  f"decode_steps={cell['decode_steps']} "
+                  f"tok/s={cell['tok_s']:6.1f}")
+    by = {(c["pool"], c["rate"]): c for c in cells}
+    gains = {f"rate_{int(r)}":
+             by[("paged", r)]["max_concurrency"]
+             - by[("slab", r)]["max_concurrency"] for r in (0.0, 50.0)}
+    more = all(g > 0 for g in gains.values())
+    print(f"[bench] paged concurrency gain at equal memory: {gains} "
+          f"(strictly more: {more})")
+    return cells, gains, more
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_serve.json"))
+    args = ap.parse_args()
+
+    results = sweep()
+    capacity, gains, more = capacity_compare()
 
     out = {
         "meta": {
@@ -114,16 +184,23 @@ def main():
             "slots": SLOTS, "n_requests": N_REQ,
             "prompt_len": PROMPT_LEN, "gen": GEN,
             "prefill_chunk": PREFILL_CHUNK,
+            "kv_block_size": KV_BLOCK,
+            "pool": "paged",
             "backend": jax.default_backend(),
             "platform": platform.platform(),
             "jax": jax.__version__,
         },
         "results": results,
+        "capacity": {
+            "cells": capacity,
+            "concurrency_gain": gains,
+            "paged_more_concurrent": more,
+        },
     }
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
     print(f"[bench] wrote {os.path.abspath(args.out)} "
-          f"({len(results)} cells)")
+          f"({len(results)} sweep + {len(capacity)} capacity cells)")
 
 
 if __name__ == "__main__":

@@ -6,10 +6,17 @@ cd "$(dirname "$0")/.."
 echo "== tier-1 tests =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 
-echo "== 2-device CPU serve smoke =="
+echo "== 2-device CPU serve smoke (slab) =="
 XLA_FLAGS=--xla_force_host_platform_device_count=2 \
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 python -m repro.launch.serve --arch mixtral-8x7b --reduced --model-par 2 \
     --skew 0.9 --prompt-len 32 --gen 8 --requests 6 --rate 20
+
+echo "== 2-device CPU serve smoke (paged KV + top-k sampling) =="
+XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+python -m repro.launch.serve --arch mixtral-8x7b --reduced --model-par 2 \
+    --skew 0.9 --prompt-len 32 --gen 8 --requests 6 --rate 20 \
+    --paged --kv-block-size 8 --temperature 0.7 --top-k 20
 
 echo "smoke OK"

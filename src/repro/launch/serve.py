@@ -8,9 +8,12 @@ Example (CPU, small MoE, heavy synthetic skew):
 The old one-shot semantics (one closed batch of ``--batch`` prompts,
 lockstep greedy decode) are the default: ``--requests N --rate R`` opens the
 loop with N Poisson arrivals at R req/s, admitted into freed decode slots as
-earlier requests finish. Reports per-request TTFT/TPOT percentiles, decode
-tokens/s, and the HarMoEny schedule diagnostics (moved units, drops, load
-balance) — the paper's §5 metrics.
+earlier requests finish. ``--paged`` swaps the slab KV pool for the paged
+block-table pool (block-aware admission, preemption-by-recompute);
+``--temperature``/``--top-k`` switch greedy decode to truncated sampling.
+Reports per-request TTFT/TPOT percentiles, decode tokens/s, and the
+HarMoEny schedule diagnostics (moved units, drops, load balance) — the
+paper's §5 metrics.
 """
 from __future__ import annotations
 
@@ -62,7 +65,9 @@ def build_serving_engine(args, cfg=None, *, prompt_len=None, gen=None):
     ecfg = engine_config_for(
         cfg, max_slots=args.batch, prompt_len=prompt_len,
         max_new_tokens=gen, prefill_chunk=args.prefill_chunk,
-        skew_seed=args.seed + 1)
+        skew_seed=args.seed + 1, paged=args.paged,
+        kv_block_size=args.kv_block_size, num_kv_blocks=args.kv_blocks,
+        temperature=args.temperature, top_k=args.top_k)
     engine = ServeEngine(model, params, ecfg, mesh=mesh)
     return cfg, engine
 
@@ -105,6 +110,13 @@ def serve(args):
                   f"drops={drops:.0f} "
                   f"max_load {moe.get(f'{phase}/max_load_before', 0):.0f}"
                   f"->{moe.get(f'{phase}/max_load_after', 0):.0f}")
+    if args.paged:
+        util = rep.get("kv_utilization")
+        print(f"[serve] paged KV: blocks={rep['engine']['num_kv_blocks']} "
+              f"x{rep['engine']['kv_block_size']} tokens  "
+              f"utilization={util if util is None else f'{util:.2f}'}  "
+              f"preemptions={rep['preemptions']}  "
+              f"max_concurrency={rep['max_occupancy']}")
     print(f"[serve] jit entries {rep['jit_entries']} "
           f"recompiled_after_warmup={rep.get('recompiled_after_warmup')}")
     if args.out:
@@ -135,6 +147,17 @@ def main():
                     help="Poisson arrival rate req/s (0 = all at t=0)")
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="prompt tokens per prefill chunk (0 = auto)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV pool: block-table attention, block-aware "
+                         "admission, preemption-by-recompute")
+    ap.add_argument("--kv-block-size", type=int, default=16,
+                    help="tokens per physical KV block (paged mode)")
+    ap.add_argument("--kv-blocks", type=int, default=0,
+                    help="usable KV blocks (0 = worst case: slab parity)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="truncate sampling to the top-k logits (0 = full)")
     ap.add_argument("--trace", default="",
                     help="JSON trace file of arrival records")
     ap.add_argument("--out", default="", help="write the report JSON here")

@@ -162,6 +162,29 @@ def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
     return out[:, None].astype(q.dtype)
 
 
+def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
+                           v_pool: jnp.ndarray, block_table: jnp.ndarray,
+                           cache_len: jnp.ndarray, *, block_size: int,
+                           softcap: float = 0.0) -> jnp.ndarray:
+    """Decode attention through a paged KV pool.
+
+    q: [B, 1, H, hd]; k_pool/v_pool: [1, P, Hkv, hd] *physical* pools with
+    P = num_blocks * block_size; block_table: [B, max_blocks_per_slot] int32
+    mapping each row's logical block j to a physical block id; cache_len:
+    per-row [B] valid lengths.  Each row's logical K/V view is gathered
+    through its table row (unallocated entries point at the null block,
+    whose garbage the validity mask hides), then reduced by the same
+    masked-softmax decode attention the slab pool uses.
+    """
+    n_logical = block_table.shape[1]
+    log = jnp.arange(n_logical * block_size)
+    phys = block_table[:, log // block_size] * block_size \
+        + log % block_size                                  # [B, L_max]
+    k = k_pool[0, phys]                                     # [B, L_max, Hkv, hd]
+    v = v_pool[0, phys]
+    return decode_attention(q, k, v, cache_len, softcap=softcap)
+
+
 class AttnCache(NamedTuple):
     k: jnp.ndarray   # [B, S_max, Hkv, hd]
     v: jnp.ndarray
@@ -176,6 +199,8 @@ def attention_block(x: jnp.ndarray, p: Dict[str, jnp.ndarray],
                     attn_chunk: int = 1024,
                     use_pallas: bool = False, interpret: bool = False,
                     continue_prefill: bool = False,
+                    block_table: Optional[jnp.ndarray] = None,
+                    block_size: int = 0,
                     ) -> Tuple[jnp.ndarray, Optional[AttnCache]]:
     """Full attention sub-layer (projections + RoPE + attention + out-proj).
 
@@ -186,6 +211,11 @@ def attention_block(x: jnp.ndarray, p: Dict[str, jnp.ndarray],
       * decode: cache given, x is [B, 1, d]; writes K/V at cache_len-1.
         ``q_offset``/``cache_len`` may be per-sequence [B] vectors (slotted
         continuous batching), in which case K/V lands at each row's own slot.
+      * paged decode (``block_table`` given): cache is a batch-1 *physical*
+        block pool; each row's K/V is written at its block-translated
+        position and attention gathers through the table
+        (``paged_decode_attention``).  Requires window-free attention over
+        the logical range (the serve engine enforces this).
       * chunked-prefill continuation (``continue_prefill``): cache given and
         x is a [B, C] prompt chunk starting at position ``q_offset`` (scalar);
         writes K/V at [q_offset, q_offset + C) and attends over the full
@@ -233,6 +263,21 @@ def attention_block(x: jnp.ndarray, p: Dict[str, jnp.ndarray],
                 v[:, S - S_max:].astype(cache.v.dtype)  # ring: keep the tail
         k_cache = jax.lax.dynamic_update_slice(cache.k, kw, (0, 0, 0, 0))
         v_cache = jax.lax.dynamic_update_slice(cache.v, vw, (0, 0, 0, 0))
+        y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+        return y, AttnCache(k_cache, v_cache)
+    if cache is not None and block_table is not None:
+        # paged decode: translate each row's write position through its
+        # block-table row, scatter into the physical pool, gather-attend.
+        # Inactive rows (cache_len=1, all-null table) write into the null
+        # block — garbage that the validity mask keeps unread.
+        cl = jnp.asarray(cache_len)
+        pos = cl - 1
+        widx = block_table[jnp.arange(B), pos // block_size] * block_size \
+            + pos % block_size
+        k_cache = cache.k.at[0, widx].set(k[:, 0].astype(cache.k.dtype))
+        v_cache = cache.v.at[0, widx].set(v[:, 0].astype(cache.v.dtype))
+        out = paged_decode_attention(q, k_cache, v_cache, block_table, cl,
+                                     block_size=block_size, softcap=softcap)
         y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
         return y, AttnCache(k_cache, v_cache)
     if cache is not None:

@@ -6,9 +6,11 @@ Returned ``Model`` exposes:
   prefill(params, batch)            -> (logits [B, Vp], caches, pos)
   prefill_chunk(params, tokens, caches, pos) -> chunked-prefill continuation
   decode_step(params, token, caches, pos) -> (logits, caches)
-      (pos may be a per-sequence [B] vector — slotted continuous batching)
+      (pos may be a per-sequence [B] vector — slotted continuous batching;
+       block_table= switches to the paged physical pool)
   input_specs(shape_kind)           -> pytree of ShapeDtypeStruct (dry-run)
   init_cache(batch, s_max)          -> decode caches (the serve slot pool)
+  init_paged_cache(num_blocks, block_size) -> paged physical KV pool
 
 The modality frontends are stubs per the assignment: whisper consumes
 precomputed frame embeddings [B, 1500, d]; pixtral consumes precomputed patch
@@ -76,6 +78,7 @@ class Model:
     prefill_chunk: Callable[..., Any] = None
     decode_step: Callable[..., Any] = None
     init_cache: Callable[..., Any] = None
+    init_paged_cache: Callable[..., Any] = None
     input_specs: Callable[..., Any] = None
     moe_spec: Optional[MoEBlockSpec] = None
 
@@ -173,8 +176,12 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
     # ------------------------------------------------------------------
     def _backbone(params, h, *, mode, cache=None, cache_len=None,
                   q_offset=0, spec=None, skew_key=None, enc_out=None,
-                  continue_prefill=False, valid_mask=None):
+                  continue_prefill=False, valid_mask=None,
+                  block_table=None, block_size=0):
         h = constrain(h, mode)
+        if block_table is not None and (cfg.family == "hybrid" or is_encdec):
+            raise NotImplementedError(
+                "paged KV decode supports plain decoder stacks only")
         if cfg.family == "hybrid":
             h, new_cache, diags = T.run_hybrid(
                 h, params["stack"], cfg, pcfg, mode=mode, cache=cache,
@@ -191,7 +198,8 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
                 cache_len=cache_len, q_offset=q_offset,
                 moe_spec=spec, mesh=mesh, skew_key=skew_key,
                 constrain=constrain, continue_prefill=continue_prefill,
-                valid_mask=valid_mask)
+                valid_mask=valid_mask, block_table=block_table,
+                block_size=block_size)
         h = norm(h, params["final_norm"], cfg.norm)
         return h, new_cache, diags
 
@@ -260,6 +268,23 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
                           dtype)
             cache["cross"] = A.AttnCache(z, z)
         return cache
+
+    def init_paged_cache(num_blocks: int, block_size: int,
+                         s_ref: Optional[int] = None, seq_axes: Any = None):
+        """Paged variant of ``init_cache``: a batch-1 *physical* block pool
+        of ``num_blocks * block_size`` KV positions per leaf, addressed
+        through block tables in ``decode_step``.  ``s_ref`` (default the
+        model's ``seq_len``) is the logical length the layout is validated
+        at — every leaf must expose a full, unclamped KV axis there.
+        ``seq_axes`` skips re-discovery when the caller (the serve engine)
+        already holds the per-leaf KV-axis pytree."""
+        from repro.serve.paging import make_paged_pool
+        from repro.serve.slots import discover_seq_axes
+        s = s_ref or seq_len
+        if seq_axes is None:
+            seq_axes = discover_seq_axes(init_cache, s)
+        return make_paged_pool(init_cache, s, seq_axes, num_blocks,
+                               block_size)
 
     def prefill(params, batch_in, s_max: Optional[int] = None):
         tokens = batch_in["tokens"]
@@ -332,11 +357,14 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
         return logits, out, new_pos, diags
 
     def decode_step(params, token, caches, pos, skew_key=None,
-                    active_mask=None):
+                    active_mask=None, block_table=None, block_size=0):
         """token [B, 1] int32; pos = current length BEFORE appending token
         (scalar, or a per-sequence [B] vector for slotted batches).
         ``active_mask`` [B] bool excludes vacated slots' garbage tokens from
-        MoE routing and capacity (their logits are garbage either way)."""
+        MoE routing and capacity (their logits are garbage either way).
+        ``block_table`` [B, max_blocks_per_slot] switches the cache to a
+        paged physical pool (``caches`` from ``init_paged_cache``): K/V
+        writes and attention gathers go through each row's block chain."""
         h = _embed_tokens(params, token, offset=pos)
         new_pos = pos + 1
         vmask = None
@@ -346,7 +374,8 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
             params, h, mode="decode", cache=caches["stack"],
             cache_len=new_pos, q_offset=pos, spec=moe_spec_decode,
             skew_key=skew_key,
-            enc_out=caches.get("cross"), valid_mask=vmask)
+            enc_out=caches.get("cross"), valid_mask=vmask,
+            block_table=block_table, block_size=block_size)
         logits = logits_head(h[:, -1], _vocab_w(params),
                              real_vocab=cfg.vocab_size,
                              softcap=cfg.final_logit_softcap)
@@ -374,7 +403,8 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
                  seq_len=seq_len, init=init, train_loss=train_loss,
                  prefill=prefill, prefill_chunk=prefill_chunk,
                  decode_step=decode_step,
-                 init_cache=init_cache, input_specs=input_specs,
+                 init_cache=init_cache, init_paged_cache=init_paged_cache,
+                 input_specs=input_specs,
                  moe_spec=moe_spec)
 
 

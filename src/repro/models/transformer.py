@@ -86,7 +86,7 @@ def _apply_one_layer(x: jnp.ndarray, p: Dict[str, Any], kind: str,
                      moe_spec: Optional[MoEBlockSpec], mesh, skew_key,
                      causal: bool = True, constrain=lambda x, mode="none": x,
                      continue_prefill: bool = False,
-                     valid_mask=None,
+                     valid_mask=None, block_table=None, block_size: int = 0,
                      ) -> Tuple[jnp.ndarray, Any, Dict[str, jnp.ndarray]]:
     """One layer of any kind. Returns (x, new_cache, diag)."""
     diag: Dict[str, jnp.ndarray] = {}
@@ -103,7 +103,8 @@ def _apply_one_layer(x: jnp.ndarray, p: Dict[str, Any], kind: str,
         q_offset=q_offset, cache=cache, cache_len=cache_len,
         attn_chunk=pcfg.attn_chunk, use_pallas=pcfg.use_pallas,
         interpret=jax.default_backend() != "tpu",
-        continue_prefill=continue_prefill)
+        continue_prefill=continue_prefill,
+        block_table=block_table, block_size=block_size)
     if cfg.post_norm:
         h = norm(h, p["post_norm1"], cfg.norm)
     x = x + h
@@ -179,6 +180,7 @@ def run_stack(x: jnp.ndarray, params: Dict[str, Any], cfg: ModelConfig,
               moe_spec: Optional[MoEBlockSpec] = None, mesh=None,
               skew_key=None, causal: bool = True, constrain=lambda x, mode="none": x,
               continue_prefill: bool = False, valid_mask=None,
+              block_table=None, block_size: int = 0,
               ) -> Tuple[jnp.ndarray, Any, Dict[str, jnp.ndarray]]:
     """mode: train | prefill | decode | encode. Returns (x, new_cache, diags)."""
     pattern, n_steps, lead = layer_pattern(cfg)
@@ -190,7 +192,8 @@ def run_stack(x: jnp.ndarray, params: Dict[str, Any], cfg: ModelConfig,
             x, params["lead"][i], "dense", cfg, pcfg, mode=mode,
             q_offset=q_offset, cache=c, cache_len=cache_len,
             moe_spec=None, mesh=mesh, skew_key=skew_key, causal=causal,
-            constrain=constrain, continue_prefill=continue_prefill)
+            constrain=constrain, continue_prefill=continue_prefill,
+            block_table=block_table, block_size=block_size)
         new_lead_caches.append(nc)
 
     def step(carry, inp):
@@ -208,7 +211,8 @@ def run_stack(x: jnp.ndarray, params: Dict[str, Any], cfg: ModelConfig,
                 q_offset=q_offset, cache=c, cache_len=cache_len,
                 moe_spec=moe_spec, mesh=mesh, skew_key=sub_key, causal=causal,
                 constrain=constrain, continue_prefill=continue_prefill,
-                valid_mask=valid_mask)
+                valid_mask=valid_mask, block_table=block_table,
+                block_size=block_size)
             new_caches[f"sub{j}"] = nc
             diags.update({f"{k}": v for k, v in d.items()})
         new_key = (jax.random.fold_in(key, 997) if key is not None else None)

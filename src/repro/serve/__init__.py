@@ -4,11 +4,16 @@ from repro.serve.arrivals import (AdmissionQueue, VirtualClock, WallClock,
                                   trace_requests)
 from repro.serve.engine import EngineConfig, ServeEngine, engine_config_for
 from repro.serve.metrics import RequestRecord, ServeMetrics, percentiles
+from repro.serve.paging import (BlockAllocator, blocks_for_tokens,
+                                make_paged_pool, write_chunk_blocks)
 from repro.serve.request import Request, RequestState, RequestStatus
+from repro.serve.sampling import sample_np, sample_tokens
 
 __all__ = [
-    "AdmissionQueue", "EngineConfig", "Request", "RequestRecord",
-    "RequestState", "RequestStatus", "ServeEngine", "ServeMetrics",
-    "VirtualClock", "WallClock", "engine_config_for", "load_trace",
-    "percentiles", "poisson_requests", "trace_requests",
+    "AdmissionQueue", "BlockAllocator", "EngineConfig", "Request",
+    "RequestRecord", "RequestState", "RequestStatus", "ServeEngine",
+    "ServeMetrics", "VirtualClock", "WallClock", "blocks_for_tokens",
+    "engine_config_for", "load_trace", "make_paged_pool", "percentiles",
+    "poisson_requests", "sample_np", "sample_tokens", "trace_requests",
+    "write_chunk_blocks",
 ]

@@ -149,6 +149,14 @@ class AdmissionQueue:
     def next_arrival(self) -> Optional[float]:
         return self._heap[0][0] if self._heap else None
 
+    def peek_ready(self, now: float) -> Optional[Request]:
+        """The earliest already-arrived request, left in the queue — the
+        block-aware engine inspects it to size its KV reservation before
+        committing to admission."""
+        if self._heap and self._heap[0][0] <= now:
+            return self._heap[0][2]
+        return None
+
     def pop_ready(self, now: float) -> Optional[Request]:
         """Pop the earliest request whose arrival time has passed."""
         if self._heap and self._heap[0][0] <= now:

@@ -1,44 +1,64 @@
 """Continuous-batching serving engine.
 
-The engine owns a static-shape slot pool (``model.init_cache`` at batch
-``max_slots``) and drives two jitted functions with fixed signatures:
+The engine owns a static-shape KV pool and drives jitted functions with
+fixed signatures:
 
 * ``model.prefill_chunk`` on a ``[1, prefill_chunk]`` scratch cache —
   newcomers' prompts are consumed chunk-by-chunk, interleaved with decode
-  steps, then scattered into their slot (traced slot index);
+  steps;
 * ``model.decode_step`` on the full pool with a per-slot position vector —
   every occupied slot advances one token per step regardless of how long
   each sequence already is.
 
-Because every array shape is fixed at engine construction, the jit caches
-hold exactly one entry each across admissions, slot recycling, and EOS —
+Two pool layouts:
+
+* **slab** (default): ``model.init_cache(max_slots, max_seq_len)`` — each
+  slot owns a worst-case-length row; a finished prefill is scattered into
+  its slot with ``write_slot`` (traced slot index).
+* **paged** (``EngineConfig.paged``): a physical pool of ``num_kv_blocks``
+  fixed-size blocks plus a ``[max_slots, max_blocks_per_slot]`` block table
+  (see ``paging.py``).  Admission is gated on *free blocks* rather than
+  free slots alone, block chains grow incrementally as decode advances,
+  blocks are reclaimed the moment a request finishes, and when the
+  allocator runs dry the youngest block-holding request is preempted and
+  later *recomputed* (its prompt plus committed tokens re-prefilled).
+  Finished prefill chunks are scattered straight into allocated blocks
+  (``write_chunk_blocks``), and decode gathers K/V through the table.
+
+Because every array shape — including the block table — is fixed at engine
+construction, the jit caches hold exactly one entry each across admissions,
+slot recycling, block growth, preemption, and EOS —
 ``report()["jit_entries"]`` asserts this is so.
 
 Requests enter through an ``AdmissionQueue`` (Poisson or trace-driven
-arrivals); freed slots are immediately re-admitted from the queue. Per-step
-MoE schedule diagnostics (moved_units, drops, max_load) and per-request
+arrivals); freed slots are immediately re-admitted from the queue
+(preempted requests first).  Per-step MoE schedule diagnostics
+(moved_units, drops, max_load), KV-block occupancy, and per-request
 TTFT/TPOT/e2e flow into ``ServeMetrics``.
 
 Scope (v1): decoder-only transformer families (dense and MoE); the mesh may
-shard the model/expert axis but not the batch axis. SSM/hybrid state
-caches, encoder-decoder, and prefix-embedding models are follow-ons.
+shard the model/expert axis but not the batch axis.  Paged mode further
+requires every cache leaf to expose a full-length KV axis (no
+window-clamped ring buffers).  SSM/hybrid state caches, encoder-decoder,
+and prefix-embedding models are follow-ons.
 """
 from __future__ import annotations
 
 import contextlib
-import dataclasses
 from collections import deque
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import round_up
 from repro.serve.arrivals import AdmissionQueue, WallClock
 from repro.serve.metrics import ServeMetrics
+from repro.serve.paging import (NULL_BLOCK, BlockAllocator,
+                                blocks_for_tokens, write_chunk_blocks)
 from repro.serve.request import Request, RequestState, RequestStatus
+from repro.serve.sampling import sample_np, sample_tokens
 from repro.serve.slots import (discover_batch_axes, discover_seq_axes,
                                min_kv_capacity, write_slot)
 
@@ -47,11 +67,18 @@ from repro.serve.slots import (discover_batch_axes, discover_seq_axes,
 class EngineConfig:
     """Static serving shapes — these fix every jitted signature."""
     max_slots: int = 4          # decode batch width (concurrent requests)
-    max_seq_len: int = 128      # KV pool length (prompt + generation)
+    max_seq_len: int = 128      # logical KV length (prompt + generation)
     prefill_chunk: int = 32     # prompt tokens consumed per prefill call
     chunks_per_step: int = 1    # prefill chunks interleaved per engine step
     eos_id: Optional[int] = None
-    skew_seed: int = 0          # synthetic router-skew key stream
+    skew_seed: int = 0          # synthetic router-skew + sampling key stream
+    # --- paged KV pool ---
+    paged: bool = False
+    kv_block_size: int = 16     # tokens per physical KV block
+    num_kv_blocks: int = 0      # usable blocks (0 = worst case: slab parity)
+    # --- sampling (0 temperature = greedy) ---
+    temperature: float = 0.0
+    top_k: int = 0              # 0 = full vocab when temperature > 0
 
 
 class ServeEngine:
@@ -75,6 +102,8 @@ class ServeEngine:
                 or ecfg.chunks_per_step < 1:
             raise ValueError(
                 "prefill_chunk, max_slots, and chunks_per_step must be >= 1")
+        if ecfg.temperature < 0 or ecfg.top_k < 0:
+            raise ValueError("temperature and top_k must be >= 0")
 
         self.model = model
         self.params = params
@@ -85,27 +114,67 @@ class ServeEngine:
         self.metrics = ServeMetrics()
 
         self._skew = bool(cfg.is_moe and cfg.moe.router_skew > 0)
+        self._sample = ecfg.temperature > 0
         self._base_key = jax.random.PRNGKey(ecfg.skew_seed)
         self._pf_key = jax.random.fold_in(self._base_key, 0)
         self._dec_key = jax.random.fold_in(self._base_key, 1)
+        self._samp_rng = (np.random.default_rng(ecfg.skew_seed + 101)
+                          if self._sample else None)
 
-        self._batch_axes = discover_batch_axes(model.init_cache,
-                                               ecfg.max_seq_len)
         self._seq_axes = discover_seq_axes(model.init_cache,
                                            ecfg.max_seq_len)
-        self.kv_capacity = min_kv_capacity(model.init_cache, ecfg.max_seq_len,
-                                           self._seq_axes)
-        with self._ctx():
-            self.pool = model.init_cache(ecfg.max_slots, ecfg.max_seq_len)
-            self._scratch = model.init_cache(1, ecfg.max_seq_len)
 
+        self._paged = ecfg.paged
+        B, C = ecfg.max_slots, ecfg.prefill_chunk
+        if self._paged:
+            bs = ecfg.kv_block_size
+            if bs < 1:
+                raise ValueError("kv_block_size must be >= 1")
+            # prefill writes whole padded chunks, so a slot's chain must
+            # cover the chunk-rounded logical length
+            self._s_pad = round_up(ecfg.max_seq_len, C)
+            self.blocks_per_slot = blocks_for_tokens(self._s_pad, bs)
+            usable = ecfg.num_kv_blocks or B * self.blocks_per_slot
+            if usable < self.blocks_per_slot:
+                raise ValueError(
+                    f"num_kv_blocks={usable} cannot hold even one "
+                    f"worst-case request ({self.blocks_per_slot} blocks)")
+            self._alloc = BlockAllocator(usable + 1, bs)   # +1: null block
+            self.block_table = np.full((B, self.blocks_per_slot),
+                                       NULL_BLOCK, np.int32)
+            self.kv_capacity = self._s_pad
+            with self._ctx():
+                # init_paged_cache validates pageability at s_pad (rejects
+                # window-clamped ring buffers and SSM state)
+                self.pool = model.init_paged_cache(
+                    self._alloc.num_blocks, bs, self._s_pad,
+                    seq_axes=self._seq_axes)
+                self._scratch = model.init_cache(1, self._s_pad)
+            self._write_fn = jax.jit(
+                lambda pool, scratch, bt_row, start: write_chunk_blocks(
+                    pool, scratch, bt_row, start, chunk=C, block_size=bs,
+                    seq_axes=self._seq_axes))
+            self._decode_fn = jax.jit(
+                lambda p, t, c, pos, bt, k, a: self._decode_core(
+                    p, t, c, pos, k, a, bt))
+        else:
+            self._alloc = None
+            self.block_table = None
+            self._batch_axes = discover_batch_axes(model.init_cache,
+                                                   ecfg.max_seq_len)
+            self.kv_capacity = min_kv_capacity(
+                model.init_cache, ecfg.max_seq_len, self._seq_axes)
+            with self._ctx():
+                self.pool = model.init_cache(B, ecfg.max_seq_len)
+                self._scratch = model.init_cache(1, ecfg.max_seq_len)
+            self._write_fn = jax.jit(
+                lambda pool, scratch, slot: write_slot(pool, scratch, slot,
+                                                       self._batch_axes))
+            self._decode_fn = jax.jit(
+                lambda p, t, c, pos, k, a: self._decode_core(
+                    p, t, c, pos, k, a, None))
         self._prefill_fn = jax.jit(model.prefill_chunk)
-        self._decode_fn = jax.jit(self._decode_impl)
-        self._write_fn = jax.jit(
-            lambda pool, scratch, slot: write_slot(pool, scratch, slot,
-                                                   self._batch_axes))
 
-        B = ecfg.max_slots
         self.pos = np.zeros((B,), np.int32)      # per-slot sequence length
         self.tok = np.zeros((B,), np.int32)      # per-slot last token
         self.active = np.zeros((B,), bool)       # slot in the decode batch
@@ -114,19 +183,39 @@ class ServeEngine:
         self.queue = AdmissionQueue()
         self._pf: Optional[RequestState] = None      # prefill in flight
         self._pf_queue: deque = deque()              # slot reserved, waiting
+        self._resume: deque = deque()                # preempted, to recompute
         self.slot_history: List[Tuple[int, int]] = []  # (rid, slot) admits
         self._step_idx = 0
         self._chunk_idx = 0
+        self._admit_seq = 0
         self._warm_counts: Optional[Dict[str, int]] = None
 
     # ------------------------------------------------------------------
     def _ctx(self):
         return self.mesh if self.mesh is not None else contextlib.nullcontext()
 
-    def _decode_impl(self, params, tok, pool, pos, key, active):
+    def _eos_id(self, req: Request) -> Optional[int]:
+        """Per-request EOS override, falling back to the engine default."""
+        return req.eos_id if req.eos_id is not None else self.ecfg.eos_id
+
+    def _decode_core(self, params, tok, pool, pos, key, active, bt):
+        skew_key = samp_key = None
+        if self._skew and self._sample:
+            skew_key = jax.random.fold_in(key, 0)
+            samp_key = jax.random.fold_in(key, 1)
+        elif self._skew:
+            skew_key = key
+        elif self._sample:
+            samp_key = key
+        kw: Dict[str, Any] = {}
+        if bt is not None:
+            kw = dict(block_table=bt, block_size=self.ecfg.kv_block_size)
         logits, pool, _, diags = self.model.decode_step(
-            params, tok, pool, pos, skew_key=key, active_mask=active)
-        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+            params, tok, pool, pos, skew_key=skew_key, active_mask=active,
+            **kw)
+        nxt = sample_tokens(logits, samp_key,
+                            temperature=self.ecfg.temperature,
+                            top_k=self.ecfg.top_k)
         return nxt, pool, diags
 
     # ------------------------------------------------------------------
@@ -150,24 +239,140 @@ class ServeEngine:
     def _in_flight(self) -> bool:
         """Admitted work whose timestamps already live on the current clock
         (queued-but-unadmitted requests carry none — their arrival_time is
-        relative to the measurement window, not the clock origin)."""
-        return bool(self._pf is not None or self._pf_queue
+        relative to the measurement window, not the clock origin).
+        Preempted requests hold timestamps too."""
+        return bool(self._pf is not None or self._pf_queue or self._resume
                     or self.active.any())
 
     # ------------------------------------------------------------------
+    # admission (block-aware in paged mode; preempted requests first)
+    # ------------------------------------------------------------------
+    def _prefill_blocks_needed(self, prefill_len: int) -> int:
+        """Chunked prefill writes whole padded chunks, so the chain must
+        cover the chunk-rounded sequence at admission time."""
+        return blocks_for_tokens(
+            round_up(prefill_len, self.ecfg.prefill_chunk),
+            self.ecfg.kv_block_size)
+
+    def _place(self, st: RequestState, now: float) -> None:
+        slot = self.free_slots.popleft()
+        st.slot = slot
+        st.status = RequestStatus.PREFILL
+        st.admit_seq = self._admit_seq
+        self._admit_seq += 1
+        self.state_by_slot[slot] = st
+        self.slot_history.append((st.req.rid, slot))
+        self._pf_queue.append(st)
+        if self._paged:
+            chain = self._alloc.alloc_chain(
+                st.req.rid, self._prefill_blocks_needed(st.prefill_len))
+            assert chain is not None      # gated by the caller
+            # self.block_table[slot] stays all-null until the slot joins
+            # the decode batch: decode steps write every row's (garbage,
+            # for inactive rows) K/V through the table, and a real entry
+            # here would let that garbage clobber the mid-prefill blocks.
+            # Prefill writes go through _bt_row(st) instead.
+
+    def _bt_row(self, st: RequestState) -> np.ndarray:
+        """This request's block-table row, built from its live chain (the
+        engine-visible table row may still be parked on the null block)."""
+        row = np.full((self.blocks_per_slot,), NULL_BLOCK, np.int32)
+        chain = self._alloc.chain(st.req.rid)
+        row[:len(chain)] = chain
+        return row
+
+    def _activate(self, st: RequestState, pos: int, tok: int) -> None:
+        """Move a finished prefill into the decode batch."""
+        s = st.slot
+        st.status = RequestStatus.DECODE
+        self.pos[s] = pos
+        self.tok[s] = tok
+        self.active[s] = True
+        if self._paged:
+            self.block_table[s] = self._bt_row(st)
+
     def _admit(self, now: float) -> None:
         while self.free_slots:
-            req = self.queue.pop_ready(now)
+            if self._resume:
+                st = self._resume[0]
+                if self._paged and self._alloc.free_blocks < \
+                        self._prefill_blocks_needed(st.prefill_len):
+                    return
+                self._resume.popleft()
+                self._place(st, now)
+                continue
+            req = self.queue.peek_ready(now)
             if req is None:
                 return
-            slot = self.free_slots.popleft()
-            st = RequestState(req=req, slot=slot, admitted_time=now)
-            self.state_by_slot[slot] = st
-            self.slot_history.append((req.rid, slot))
-            self._pf_queue.append(st)
+            if self._paged and self._alloc.free_blocks < \
+                    self._prefill_blocks_needed(req.prompt_len):
+                return
+            self.queue.pop_ready(now)
+            self._place(RequestState(req=req, slot=-1, admitted_time=now),
+                        now)
 
+    # ------------------------------------------------------------------
+    # preemption (paged): reclaim the youngest holder's blocks, recompute
+    # ------------------------------------------------------------------
+    def _youngest_holder(self) -> Optional[RequestState]:
+        cands = [st for st in self.state_by_slot if st is not None]
+        return max(cands, key=lambda st: st.admit_seq) if cands else None
+
+    def _preempt(self, st: RequestState) -> None:
+        s = st.slot
+        self._alloc.release(st.req.rid)
+        self.block_table[s, :] = NULL_BLOCK
+        self.active[s] = False
+        self.pos[s] = 0
+        self.tok[s] = 0
+        self.state_by_slot[s] = None
+        self.free_slots.append(s)
+        if self._pf is st:
+            self._pf = None
+        elif st in self._pf_queue:
+            self._pf_queue.remove(st)
+        st.slot = -1
+        st.status = RequestStatus.QUEUED
+        st.prefill_pos = 0
+        st.n_preempted += 1
+        self._resume.append(st)
+        self.metrics.preemptions += 1
+
+    def _grow_chain(self, st: RequestState) -> bool:
+        """Extend ``st``'s block chain by one, preempting younger holders
+        while the allocator is dry.  Returns False if ``st`` itself was the
+        youngest and got preempted to make room."""
+        while True:
+            blk = self._alloc.extend(st.req.rid)
+            if blk is not None:
+                n = len(self._alloc.chain(st.req.rid))
+                self.block_table[st.slot, n - 1] = blk
+                return True
+            victim = self._youngest_holder()
+            if victim is None:
+                raise RuntimeError("KV allocator dry with no block holders")
+            self._preempt(victim)
+            if victim is st:
+                return False
+
+    def _ensure_decode_blocks(self) -> None:
+        """Before a decode step, every active slot needs its chain to cover
+        the write index ``pos[s]`` — grow incrementally, oldest requests
+        first so scarce blocks go to the work closest to finishing."""
+        bs = self.ecfg.kv_block_size
+        order = sorted(np.nonzero(self.active)[0],
+                       key=lambda s: self.state_by_slot[s].admit_seq)
+        for s in order:
+            if not self.active[s]:        # preempted earlier in this pass
+                continue
+            st = self.state_by_slot[s]
+            while len(self._alloc.chain(st.req.rid)) * bs <= self.pos[s]:
+                if not self._grow_chain(st):
+                    break
+
+    # ------------------------------------------------------------------
     def _next_key(self, stream_key, idx: int):
-        if not self._skew:
+        if not (self._skew or self._sample):
             return None
         return jax.random.fold_in(stream_key, idx)
 
@@ -180,62 +385,79 @@ class ServeEngine:
                     break
                 self._pf = self._pf_queue.popleft()
             st = self._pf
-            start, L = st.prefill_pos, st.req.prompt_len
+            seq = st.prefill_tokens
+            start, L = st.prefill_pos, st.prefill_len
             n = min(C, L - start)
             chunk = np.zeros((1, C), np.int32)
-            chunk[0, :n] = st.req.tokens[start:start + n]
+            chunk[0, :n] = seq[start:start + n]
             key = self._next_key(self._pf_key, self._chunk_idx)
             self._chunk_idx += 1
             with self._ctx():
                 logits, self._scratch, _, diags = self._prefill_fn(
                     self.params, chunk, self._scratch, np.int32(start),
                     np.int32(n - 1), key)
+                if self._paged:
+                    # finished chunk -> straight into the allocated blocks
+                    self.pool = self._write_fn(
+                        self.pool, self._scratch, self._bt_row(st),
+                        np.int32(start))
             st.prefill_pos += n
             self.metrics.record_step(diags if self.cfg.is_moe else {}, 0,
                                      phase="prefill")
             did = True
             if st.prefill_done:
-                first = int(np.argmax(np.asarray(logits)[0]))
-                with self._ctx():
-                    self.pool = self._write_fn(self.pool, self._scratch,
-                                               np.int32(st.slot))
+                if st.resumed:
+                    # recompute finished: the re-prefill rebuilt K/V for
+                    # prompt + output[:-1]; the pending last token decodes
+                    # next step.  No TTFT restamp, no logits consumed.
+                    self._activate(st, L, st.output[-1])
+                    self._pf = None
+                    continue
+                first = sample_np(np.asarray(logits)[0], self._samp_rng,
+                                  temperature=self.ecfg.temperature,
+                                  top_k=self.ecfg.top_k)
+                if not self._paged:
+                    with self._ctx():
+                        self.pool = self._write_fn(self.pool, self._scratch,
+                                                   np.int32(st.slot))
                 # stamp AFTER the host sync: TTFT must include the prefill
                 # compute, not just the queueing ahead of it
                 now = self.clock.now()
                 st.first_token_time = now
                 st.output.append(first)
-                eos = st.req.eos_id if st.req.eos_id is not None \
-                    else self.ecfg.eos_id
+                eos = self._eos_id(st.req)
                 if (eos is not None and first == eos) \
-                        or st.req.max_new_tokens == 1:
+                        or st.n_generated >= st.req.max_new_tokens:
                     self._finish(st, now)
                 else:
-                    st.status = RequestStatus.DECODE
-                    self.pos[st.slot] = L
-                    self.tok[st.slot] = first
-                    self.active[st.slot] = True
+                    self._activate(st, L, first)
                 self._pf = None
         return did
 
     def _decode_work(self, now: float) -> bool:
+        if self._paged and self.active.any():
+            self._ensure_decode_blocks()
         if not self.active.any():
             return False
         key = self._next_key(self._dec_key, self._step_idx)
+        bt_args = (self.block_table.copy(),) if self._paged else ()
         with self._ctx():
             nxt, self.pool, diags = self._decode_fn(
-                self.params, self.tok[:, None], self.pool, self.pos, key,
-                self.active.copy())
+                self.params, self.tok[:, None], self.pool, self.pos,
+                *bt_args, key, self.active.copy())
         nxt = np.asarray(nxt)
         now = self.clock.now()       # post-sync: token times include compute
         self.metrics.record_step(diags if self.cfg.is_moe else {},
                                  int(self.active.sum()), phase="decode")
+        if self._paged:
+            self.metrics.record_kv(self._alloc.blocks_in_use,
+                                   self._alloc.usable_blocks)
         for s in np.nonzero(self.active)[0]:
             st = self.state_by_slot[s]
             self.pos[s] += 1
             t = int(nxt[s])
             st.output.append(t)
-            eos = st.req.eos_id if st.req.eos_id is not None \
-                else self.ecfg.eos_id
+            eos = self._eos_id(st.req)
             if (eos is not None and t == eos) \
                     or st.n_generated >= st.req.max_new_tokens:
                 self._finish(st, now)
@@ -253,6 +475,10 @@ class ServeEngine:
         self.tok[s] = 0
         self.state_by_slot[s] = None
         self.free_slots.append(s)
+        if self._paged:
+            # immediate reclamation: blocks return to the free list now
+            self._alloc.release(st.req.rid)
+            self.block_table[s, :] = NULL_BLOCK
 
     # ------------------------------------------------------------------
     def reset_metrics(self) -> None:
@@ -269,10 +495,10 @@ class ServeEngine:
         self.clock.reset()
 
     def warmup(self) -> None:
-        """Compile the three jitted functions on dummy data so the first
-        request's TTFT measures serving latency, not XLA compilation.
-        Overwrites pool slot 0 and the scratch cache, so the engine must
-        be idle (enforced) — call before submitting work."""
+        """Compile the jitted functions on dummy data so the first request's
+        TTFT measures serving latency, not XLA compilation.  Overwrites pool
+        slot 0 (slab) / the null block (paged) and the scratch cache, so the
+        engine must be idle (enforced) — call before submitting work."""
         if self.has_work() or any(st is not None for st in self.state_by_slot):
             raise RuntimeError(
                 "warmup() overwrites pool slot 0 and the scratch cache; it "
@@ -289,12 +515,22 @@ class ServeEngine:
                 _, self._scratch, _, _ = self._prefill_fn(
                     self.params, chunk, self._scratch, np.int32(0),
                     np.int32(C - 1), key)
-                self.pool = self._write_fn(self.pool, self._scratch,
-                                           np.int32(0))
+                if self._paged:
+                    # an all-null table row: every write lands in the
+                    # null block's garbage
+                    self.pool = self._write_fn(
+                        self.pool, self._scratch,
+                        np.full((self.blocks_per_slot,), NULL_BLOCK,
+                                np.int32), np.int32(0))
+                else:
+                    self.pool = self._write_fn(self.pool, self._scratch,
+                                               np.int32(0))
                 key = self._next_key(self._dec_key, 2 ** 31 - 1 - i)
+                bt_args = ((np.full_like(self.block_table, NULL_BLOCK),)
+                           if self._paged else ())
                 nxt, self.pool, _ = self._decode_fn(
-                    self.params, self.tok[:, None], self.pool, self.pos, key,
-                    self.active.copy())
+                    self.params, self.tok[:, None], self.pool, self.pos,
+                    *bt_args, key, self.active.copy())
             jax.block_until_ready(nxt)
         # multi-device: the first call may trace twice while cache shardings
         # settle to jit's steady state; anything beyond this is a regression
@@ -350,7 +586,12 @@ class ServeEngine:
             "prefill_chunk": self.ecfg.prefill_chunk,
             "kv_capacity": self.kv_capacity,
             "steps": self._step_idx,
+            "paged": self._paged,
         }
+        if self._paged:
+            rep["engine"]["kv_block_size"] = self.ecfg.kv_block_size
+            rep["engine"]["num_kv_blocks"] = self._alloc.usable_blocks
+            rep["engine"]["blocks_per_slot"] = self.blocks_per_slot
         rep["jit_entries"] = self._jit_counts()
         if self._warm_counts is not None:
             rep["recompiled_after_warmup"] = \
@@ -361,7 +602,8 @@ class ServeEngine:
         return {
             "prefill_chunk": self._prefill_fn._cache_size(),
             "decode": self._decode_fn._cache_size(),
-            "write_slot": self._write_fn._cache_size(),
+            ("write_blocks" if self._paged else "write_slot"):
+                self._write_fn._cache_size(),
         }
 
 
@@ -369,7 +611,10 @@ class ServeEngine:
 def engine_config_for(cfg, *, max_slots: int, prompt_len: int,
                       max_new_tokens: int, prefill_chunk: int = 0,
                       eos_id: Optional[int] = None,
-                      skew_seed: int = 0) -> EngineConfig:
+                      skew_seed: int = 0, paged: bool = False,
+                      kv_block_size: int = 16, num_kv_blocks: int = 0,
+                      temperature: float = 0.0,
+                      top_k: int = 0) -> EngineConfig:
     """Derive serving shapes from a workload: pool length covers prompt +
     generation, the prefill chunk divides the (padded) prompt, and the
     padded prompt fits every layer's KV capacity (sliding-window layers
@@ -384,4 +629,6 @@ def engine_config_for(cfg, *, max_slots: int, prompt_len: int,
     return EngineConfig(
         max_slots=max_slots,
         max_seq_len=max(prompt_len + max_new_tokens, pad),
-        prefill_chunk=chunk, eos_id=eos_id, skew_seed=skew_seed)
+        prefill_chunk=chunk, eos_id=eos_id, skew_seed=skew_seed,
+        paged=paged, kv_block_size=kv_block_size,
+        num_kv_blocks=num_kv_blocks, temperature=temperature, top_k=top_k)

@@ -10,6 +10,12 @@ Per step, the engine feeds in the HarMoEny schedule diagnostics emitted by
 the MoE block (moved_units, send/dest drops, max load before/after) and the
 number of occupied decode slots, so batch-occupancy and load-balance
 trajectories can be plotted against arrival rate and skew.
+
+The paged engine additionally records per-step KV-block occupancy
+(``record_kv``) and preemption counts, reported as ``kv_blocks_in_use`` /
+``kv_utilization`` / ``preemptions``.  ``report()`` is JSON-safe on an
+empty measurement window: percentile reductions over zero requests come
+back as ``None``, never NaN.
 """
 from __future__ import annotations
 
@@ -28,6 +34,18 @@ def percentiles(xs, ps=(50, 90, 99)) -> Dict[str, float]:
     out = {f"p{p}": float(np.percentile(xs, p)) for p in ps}
     out["mean"] = float(xs.mean())
     return out
+
+
+def _json_safe(x):
+    """Recursively replace non-finite floats with None so an empty window's
+    report serializes under ``json.dumps(..., allow_nan=False)``."""
+    if isinstance(x, dict):
+        return {k: _json_safe(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_json_safe(v) for v in x]
+    if isinstance(x, float) and not np.isfinite(x):
+        return None
+    return x
 
 
 @dataclass
@@ -75,6 +93,9 @@ class ServeMetrics:
         self.prefill_chunks: int = 0
         self.occupancy: List[int] = []          # active slots per decode step
         self.moe_diags: Dict[str, List[float]] = {}
+        self.kv_blocks_in_use: List[int] = []   # per decode step (paged)
+        self.kv_blocks_total: int = 0
+        self.preemptions: int = 0
         self._t_first_arrival: Optional[float] = None
         self._t_last_finish: float = 0.0
 
@@ -93,6 +114,11 @@ class ServeMetrics:
             self.prefill_chunks += 1
         for k, v in (diags or {}).items():
             self.moe_diags.setdefault(f"{phase}/{k}", []).append(float(v))
+
+    def record_kv(self, blocks_in_use: int, blocks_total: int) -> None:
+        """Per-decode-step KV-block occupancy of the paged pool."""
+        self.kv_blocks_in_use.append(int(blocks_in_use))
+        self.kv_blocks_total = int(blocks_total)
 
     def complete(self, st: RequestState) -> RequestRecord:
         rec = RequestRecord(
@@ -128,9 +154,18 @@ class ServeMetrics:
             "prefill_chunks": self.prefill_chunks,
             "mean_occupancy": (float(np.mean(self.occupancy))
                                if self.occupancy else 0.0),
+            "max_occupancy": (int(max(self.occupancy))
+                              if self.occupancy else 0),
+            "preemptions": self.preemptions,
             "requests": [r.asdict() for r in recs],
         }
+        if self.kv_blocks_in_use:
+            used = np.asarray(self.kv_blocks_in_use, np.float64)
+            rep["kv_blocks_in_use"] = {"mean": float(used.mean()),
+                                       "max": int(used.max())}
+            rep["kv_utilization"] = (float(used.mean())
+                                     / max(self.kv_blocks_total, 1))
         if self.moe_diags:
             rep["moe"] = {k: float(np.mean(v))
                           for k, v in self.moe_diags.items()}
-        return rep
+        return _json_safe(rep)

@@ -1,0 +1,170 @@
+"""Paged KV pool: block allocator + block-table plumbing for the engine.
+
+The slab pool (``slots.py``) reserves ``max_seq_len`` KV positions per slot
+for the whole lifetime of a request, so short requests strand memory and
+``max_slots`` is capped by the worst case.  The paged pool decouples the
+two: physical KV memory is a pool of fixed-size blocks (``kv_block_size``
+tokens each), and every request owns a *chain* of blocks that grows as its
+sequence does.  A static-shape block table ``[max_slots,
+max_blocks_per_slot]`` maps each slot's logical block index to a physical
+block id; attention gathers K/V through it (see
+``repro.models.attention.paged_decode_attention``).
+
+Physical block 0 is the *null block*: unallocated table entries point at it,
+so gathers/scatters through a partially-filled table stay in bounds —
+reads from it are masked by the per-row ``cache_len`` validity mask, writes
+to it land in garbage that nothing reads.
+
+Layout discovery is shared with the slab pool: ``discover_seq_axes`` finds
+every cache leaf's KV-length axis structurally, and the same axis indices
+drive both the physical-pool construction and the chunk scatter here —
+scan-stacked blocks and unscanned lead layers need no special cases.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+NULL_BLOCK = 0      # physical block id unallocated table entries point at
+
+
+def blocks_for_tokens(n_tokens: int, block_size: int) -> int:
+    """Blocks needed to hold ``n_tokens`` KV positions."""
+    return -(-n_tokens // block_size)
+
+
+class BlockAllocator:
+    """Free-list allocator over ``num_blocks`` physical KV blocks.
+
+    Block ids are dense ints; id 0 is reserved as the null block and never
+    handed out.  Each request (keyed by rid) owns an ordered chain of
+    blocks — logical block ``j`` of the request lives in physical block
+    ``chain[j]``.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 2:
+            raise ValueError("need at least one usable block past the "
+                             "reserved null block")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free: deque = deque(range(1, num_blocks))
+        self._chains: Dict[int, List[int]] = {}
+
+    @property
+    def usable_blocks(self) -> int:
+        return self.num_blocks - 1
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def blocks_in_use(self) -> int:
+        return self.usable_blocks - len(self._free)
+
+    def chain(self, rid: int) -> Tuple[int, ...]:
+        return tuple(self._chains.get(rid, ()))
+
+    def alloc_chain(self, rid: int, n_blocks: int) -> Optional[List[int]]:
+        """Allocate a fresh ``n_blocks``-long chain for ``rid``; None (and
+        no allocation) if the free list cannot cover it."""
+        if rid in self._chains:
+            raise ValueError(f"rid {rid} already holds a chain")
+        if n_blocks > len(self._free):
+            return None
+        chain = [self._free.popleft() for _ in range(n_blocks)]
+        self._chains[rid] = chain
+        return list(chain)
+
+    def extend(self, rid: int) -> Optional[int]:
+        """Append one block to ``rid``'s chain; None if the pool is dry."""
+        if not self._free:
+            return None
+        blk = self._free.popleft()
+        self._chains.setdefault(rid, []).append(blk)
+        return blk
+
+    def release(self, rid: int) -> int:
+        """Return ``rid``'s chain to the free list; returns #blocks freed."""
+        chain = self._chains.pop(rid, [])
+        self._free.extend(chain)
+        return len(chain)
+
+
+# ----------------------------------------------------------------------
+# Physical pool construction
+# ----------------------------------------------------------------------
+def assert_pageable(init_cache: Callable[[int, int], Any], s_ref: int,
+                    seq_axes: Any) -> None:
+    """Every cache leaf must expose a full-length KV axis at ``s_ref``.
+
+    Leaves clamped below ``s_ref`` (sliding-window ring buffers) or with no
+    KV axis at all (SSM state) evict/step in ways a block table cannot
+    express yet — reject them up front with the offending shape.
+    """
+    shapes = jax.eval_shape(lambda: init_cache(1, s_ref))
+
+    def check(leaf, ax):
+        if ax < 0 or leaf.shape[ax] != s_ref:
+            raise NotImplementedError(
+                f"cache leaf {leaf.shape} is not pageable: its KV-length "
+                f"axis is {'absent' if ax < 0 else 'clamped below'} "
+                f"s_max={s_ref} (window-clamped ring buffers and SSM state "
+                f"need a paged equivalent — ROADMAP follow-on)")
+    jax.tree.map(check, shapes, seq_axes)
+
+
+def make_paged_pool(init_cache: Callable[[int, int], Any], s_ref: int,
+                    seq_axes: Any, num_blocks: int, block_size: int) -> Any:
+    """Physical paged pool: each cache leaf of ``init_cache(1, s_ref)`` with
+    its KV-length axis resized to ``num_blocks * block_size`` positions.
+
+    Built structurally (not via ``init_cache(1, P)``) so window-clamping
+    inside ``init_cache`` can never silently truncate the physical pool.
+    """
+    assert_pageable(init_cache, s_ref, seq_axes)
+    shapes = jax.eval_shape(lambda: init_cache(1, s_ref))
+    P = num_blocks * block_size
+
+    def build(leaf, ax):
+        shape = list(leaf.shape)
+        shape[ax] = P
+        return jnp.zeros(tuple(shape), leaf.dtype)
+    return jax.tree.map(build, shapes, seq_axes)
+
+
+# ----------------------------------------------------------------------
+# Chunk scatter: scratch -> allocated blocks
+# ----------------------------------------------------------------------
+def write_chunk_blocks(pool: Any, scratch: Any, bt_row: jnp.ndarray,
+                       start: jnp.ndarray, *, chunk: int, block_size: int,
+                       seq_axes: Any) -> Any:
+    """Scatter scratch positions ``[start, start + chunk)`` into the paged
+    pool through one slot's block-table row.
+
+    ``bt_row`` is the slot's ``[max_blocks_per_slot]`` int32 table row and
+    ``start`` a traced int32 scalar (a chunk-aligned prefill offset), so one
+    compilation serves every slot, chunk, and block assignment.  The chain
+    behind ``bt_row`` must cover the whole chunk-rounded sequence (the
+    engine allocates ``round_up(prefill_len, chunk)`` tokens of blocks at
+    admission): pad positions past the prompt land in *real* allocated
+    blocks, as garbage the validity mask keeps unread until decode
+    overwrites it.  Only entries still parked on the null block (beyond the
+    chain) write into discarded space.
+    """
+    log = start + jnp.arange(chunk)
+    phys = bt_row[log // block_size] * block_size + log % block_size
+
+    def upd(p, sc, ax):
+        pm = jnp.moveaxis(p, ax, 0)
+        sm = jnp.moveaxis(sc, ax, 0)
+        ck = jax.lax.dynamic_slice_in_dim(sm, start, chunk, axis=0)
+        pm = pm.at[phys].set(ck.astype(pm.dtype))
+        return jnp.moveaxis(pm, 0, ax)
+
+    return jax.tree.map(upd, pool, scratch, seq_axes)

@@ -49,12 +49,21 @@ class Request:
 
 @dataclass
 class RequestState:
-    """Engine-side bookkeeping for one admitted request."""
+    """Engine-side bookkeeping for one admitted request.
+
+    A state preempted by the paged engine (its KV blocks reclaimed) goes
+    back to the scheduler and is later *recomputed*: prefill re-runs over
+    the prompt plus every committed output token except the last, whose
+    K/V was never written — ``prefill_tokens`` is exactly that sequence.
+    For a fresh request (no output yet) it degenerates to the prompt.
+    """
     req: Request
     slot: int
     status: RequestStatus = RequestStatus.PREFILL
-    prefill_pos: int = 0                 # prompt tokens consumed so far
+    prefill_pos: int = 0                 # prefill tokens consumed so far
     output: List[int] = field(default_factory=list)
+    n_preempted: int = 0                 # times evicted for recompute
+    admit_seq: int = 0                   # admission order (preemption age)
     # --- timestamps on the engine clock ---
     admitted_time: float = 0.0           # slot reserved / prefill started
     first_token_time: float = 0.0        # last prefill chunk done (TTFT point)
@@ -65,5 +74,22 @@ class RequestState:
         return len(self.output)
 
     @property
+    def resumed(self) -> bool:
+        """Re-admitted after preemption: decode state must be rebuilt."""
+        return bool(self.output)
+
+    @property
+    def prefill_tokens(self) -> np.ndarray:
+        """Token sequence the (re)prefill consumes."""
+        if not self.output:
+            return self.req.tokens
+        return np.concatenate([self.req.tokens,
+                               np.asarray(self.output[:-1], np.int32)])
+
+    @property
+    def prefill_len(self) -> int:
+        return self.req.prompt_len + max(self.n_generated - 1, 0)
+
+    @property
     def prefill_done(self) -> bool:
-        return self.prefill_pos >= self.req.prompt_len
+        return self.prefill_pos >= self.prefill_len

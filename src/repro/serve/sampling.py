@@ -1,0 +1,55 @@
+"""Static-shape token sampling for the serve engine.
+
+Greedy decoding is the ``temperature == 0`` degenerate case; otherwise
+logits are temperature-scaled and drawn from, optionally truncated to the
+``top_k`` largest via ``jax.lax.top_k``.  Both knobs are static at engine
+construction, so enabling sampling changes *which* single entry each jit
+cache holds, never how many.
+
+``sample_tokens`` is the in-jit path (decode steps, batched, per-step PRNG
+key); ``sample_np`` is its host-side twin used for the single first token a
+finished prefill emits — the prefill logits are already on the host there,
+so a numpy draw avoids touching the prefill jit signature.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def sample_tokens(logits: jnp.ndarray, key, *, temperature: float = 0.0,
+                  top_k: int = 0) -> jnp.ndarray:
+    """logits [B, V] -> int32 [B]. Greedy when ``key`` is None or
+    ``temperature <= 0``; else softmax(logits / temperature) sampling,
+    truncated to the ``top_k`` largest logits when ``top_k > 0``."""
+    if key is None or temperature <= 0:
+        return jnp.argmax(logits, -1).astype(jnp.int32)
+    scaled = logits.astype(jnp.float32) / temperature
+    top_k = min(top_k, logits.shape[-1])    # oversized k = full vocab
+    if top_k > 0:
+        vals, idx = jax.lax.top_k(scaled, top_k)           # [B, k]
+        choice = jax.random.categorical(key, vals, axis=-1)
+        return jnp.take_along_axis(
+            idx, choice[..., None], axis=-1)[..., 0].astype(jnp.int32)
+    return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+
+
+def sample_np(logits_row: np.ndarray, rng: Optional[np.random.Generator], *,
+              temperature: float = 0.0, top_k: int = 0) -> int:
+    """Host-side twin of ``sample_tokens`` for one row of logits."""
+    logits_row = np.asarray(logits_row, np.float64)
+    if rng is None or temperature <= 0:
+        return int(np.argmax(logits_row))
+    x = logits_row / temperature
+    top_k = min(top_k, x.shape[0])          # oversized k = full vocab
+    if top_k > 0:
+        keep = np.argpartition(x, -top_k)[-top_k:]
+        x = x[keep]
+    else:
+        keep = np.arange(x.shape[0])
+    p = np.exp(x - x.max())
+    p /= p.sum()
+    return int(keep[rng.choice(p.shape[0], p=p)])

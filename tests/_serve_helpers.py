@@ -1,0 +1,17 @@
+"""Shared helpers for the serve-engine test suites."""
+
+
+def captured_run(eng, reqs):
+    """Run the engine while capturing each request's emitted token stream
+    (hooked at ``_finish``, before slot state is recycled).  Returns
+    ({rid: [tokens]}, report)."""
+    outputs = {}
+    orig = eng._finish
+
+    def capture(st, now):
+        outputs[st.req.rid] = list(st.output)
+        orig(st, now)
+
+    eng._finish = capture
+    rep = eng.run(reqs)
+    return outputs, rep

@@ -35,9 +35,11 @@ def test_admission_queue_fifo_among_arrived():
     reqs = [Request(rid=i, tokens=np.ones(4, np.int32), arrival_time=t)
             for i, t in enumerate([0.0, 2.0, 0.0])]
     q = AdmissionQueue(reqs)
+    assert q.peek_ready(0.0).rid == 0    # peek does not consume
     assert q.pop_ready(0.0).rid == 0     # FIFO among the two t=0 arrivals
     assert q.pop_ready(0.0).rid == 2
-    assert q.pop_ready(1.0) is None      # rid=1 hasn't arrived yet
+    assert q.peek_ready(1.0) is None     # rid=1 hasn't arrived yet
+    assert q.pop_ready(1.0) is None
     assert q.next_arrival() == 2.0
     assert q.pop_ready(2.5).rid == 1
     assert len(q) == 0
@@ -113,6 +115,51 @@ def test_tpot_degenerate_single_token():
                         admitted_time=0.0, first_token_time=1.0,
                         finish_time=1.0)
     assert rec.tpot == 0.0
+
+
+def test_kv_metrics_and_empty_report_json_safe():
+    import json
+
+    m = ServeMetrics()
+    rep = m.report()                     # empty window: None, never NaN
+    assert rep["ttft"]["p50"] is None and rep["throughput_tok_s"] is None
+    json.dumps(rep, allow_nan=False)
+
+    m.record_step({}, 3, phase="decode")
+    m.record_kv(6, 8)
+    m.record_kv(2, 8)
+    m.preemptions += 1
+    rep = m.report()
+    assert rep["kv_blocks_in_use"] == {"mean": 4.0, "max": 6}
+    assert rep["kv_utilization"] == pytest.approx(0.5)
+    assert rep["preemptions"] == 1 and rep["max_occupancy"] == 3
+
+
+# ----------------------------------------------------------------------
+# sampling
+# ----------------------------------------------------------------------
+def test_sample_tokens_and_np_greedy_paths():
+    import jax
+
+    from repro.serve import sample_np, sample_tokens
+    logits = np.array([[0.0, 3.0, 1.0], [2.0, -1.0, 0.5]], np.float32)
+    # greedy: no key / zero temperature
+    assert list(sample_tokens(jnp.asarray(logits), None)) == [1, 0]
+    assert sample_np(logits[0], None) == 1
+    # top_k=1 at any temperature is still the argmax
+    key = jax.random.PRNGKey(0)
+    out = sample_tokens(jnp.asarray(logits), key, temperature=2.0, top_k=1)
+    assert list(np.asarray(out)) == [1, 0]
+    rng = np.random.default_rng(0)
+    assert sample_np(logits[0], rng, temperature=2.0, top_k=1) == 1
+    # full-vocab sampling stays within the simplex support
+    draws = {int(x) for x in np.asarray(sample_tokens(
+        jnp.asarray(np.tile(logits[0], (64, 1))), key, temperature=5.0))}
+    assert draws <= {0, 1, 2} and len(draws) > 1
+    # oversized top_k clamps to the vocab instead of crashing
+    out = sample_tokens(jnp.asarray(logits), key, temperature=1.0, top_k=99)
+    assert all(0 <= int(t) < 3 for t in np.asarray(out))
+    assert 0 <= sample_np(logits[0], rng, temperature=1.0, top_k=99) < 3
 
 
 # ----------------------------------------------------------------------
