@@ -19,4 +19,15 @@ python -m repro.launch.serve --arch mixtral-8x7b --reduced --model-par 2 \
     --skew 0.9 --prompt-len 32 --gen 8 --requests 6 --rate 20 \
     --paged --kv-block-size 8 --temperature 0.7 --top-k 20
 
+echo "== 2-device CPU serve smoke (prefix-sharing KV cache + top-p) =="
+# --prefill-chunk 16: sharing pads the logical pool by one extra chunk,
+# which must still fit the reduced model's 64-token sliding window
+XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+python -m repro.launch.serve --arch mixtral-8x7b --reduced --model-par 2 \
+    --skew 0.9 --prompt-len 32 --gen 8 --requests 6 --rate 20 \
+    --paged --kv-block-size 8 --prefill-chunk 16 \
+    --prefix-sharing --shared-prefix-len 24 \
+    --temperature 0.7 --top-p 0.9
+
 echo "smoke OK"

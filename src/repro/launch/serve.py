@@ -10,7 +10,10 @@ lockstep greedy decode) are the default: ``--requests N --rate R`` opens the
 loop with N Poisson arrivals at R req/s, admitted into freed decode slots as
 earlier requests finish. ``--paged`` swaps the slab KV pool for the paged
 block-table pool (block-aware admission, preemption-by-recompute);
-``--temperature``/``--top-k`` switch greedy decode to truncated sampling.
+``--paged --prefix-sharing`` additionally serves repeated prompt prefixes
+out of a copy-on-write block cache (``--shared-prefix-len`` makes the
+synthetic prompts actually share one); ``--temperature``/``--top-k``/
+``--top-p`` switch greedy decode to truncated sampling.
 Reports per-request TTFT/TPOT percentiles, decode tokens/s, and the
 HarMoEny schedule diagnostics (moved units, drops, load balance) — the
 paper's §5 metrics.
@@ -67,7 +70,8 @@ def build_serving_engine(args, cfg=None, *, prompt_len=None, gen=None):
         max_new_tokens=gen, prefill_chunk=args.prefill_chunk,
         skew_seed=args.seed + 1, paged=args.paged,
         kv_block_size=args.kv_block_size, num_kv_blocks=args.kv_blocks,
-        temperature=args.temperature, top_k=args.top_k)
+        prefix_sharing=args.prefix_sharing,
+        temperature=args.temperature, top_k=args.top_k, top_p=args.top_p)
     engine = ServeEngine(model, params, ecfg, mesh=mesh)
     return cfg, engine
 
@@ -83,7 +87,7 @@ def serve(args):
         requests = poisson_requests(
             n, rate=args.rate, vocab_size=cfg.vocab_size,
             prompt_len=args.prompt_len, max_new_tokens=args.gen,
-            seed=args.seed)
+            seed=args.seed, shared_prefix_len=args.shared_prefix_len)
         prompt_len, gen = args.prompt_len, args.gen
     cfg, engine = build_serving_engine(args, cfg, prompt_len=prompt_len,
                                        gen=gen)
@@ -117,6 +121,13 @@ def serve(args):
               f"utilization={util if util is None else f'{util:.2f}'}  "
               f"preemptions={rep['preemptions']}  "
               f"max_concurrency={rep['max_occupancy']}")
+    if args.prefix_sharing:
+        hit = rep.get("prefix_hit_rate")
+        print(f"[serve] prefix cache: "
+              f"hit_rate={hit if hit is None else f'{hit:.2f}'}  "
+              f"cow_copies={rep['cow_copies']}  "
+              f"evictions={rep['evictions']}  "
+              f"resume_cached_tokens={rep['resume_cached_tokens']}")
     print(f"[serve] jit entries {rep['jit_entries']} "
           f"recompiled_after_warmup={rep.get('recompiled_after_warmup')}")
     if args.out:
@@ -154,10 +165,19 @@ def main():
                     help="tokens per physical KV block (paged mode)")
     ap.add_argument("--kv-blocks", type=int, default=0,
                     help="usable KV blocks (0 = worst case: slab parity)")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="prefix-sharing KV cache: copy-on-write blocks, "
+                         "radix prefix index, LRU eviction (needs --paged)")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="synthetic prompts share their first K tokens "
+                         "(the system-prompt regime prefix caching targets)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0,
                     help="truncate sampling to the top-k logits (0 = full)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling: keep the smallest token set "
+                         "with cumulative probability >= top-p (1 = off)")
     ap.add_argument("--trace", default="",
                     help="JSON trace file of arrival records")
     ap.add_argument("--out", default="", help="write the report JSON here")

@@ -4,16 +4,18 @@ from repro.serve.arrivals import (AdmissionQueue, VirtualClock, WallClock,
                                   trace_requests)
 from repro.serve.engine import EngineConfig, ServeEngine, engine_config_for
 from repro.serve.metrics import RequestRecord, ServeMetrics, percentiles
-from repro.serve.paging import (BlockAllocator, blocks_for_tokens,
+from repro.serve.paging import (NULL_BLOCK, BlockAllocator, blocks_for_tokens,
+                                copy_block, gather_prefix_blocks,
                                 make_paged_pool, write_chunk_blocks)
 from repro.serve.request import Request, RequestState, RequestStatus
-from repro.serve.sampling import sample_np, sample_tokens
+from repro.serve.sampling import nucleus_mask, sample_np, sample_tokens
 
 __all__ = [
-    "AdmissionQueue", "BlockAllocator", "EngineConfig", "Request",
-    "RequestRecord", "RequestState", "RequestStatus", "ServeEngine",
-    "ServeMetrics", "VirtualClock", "WallClock", "blocks_for_tokens",
-    "engine_config_for", "load_trace", "make_paged_pool", "percentiles",
-    "poisson_requests", "sample_np", "sample_tokens", "trace_requests",
-    "write_chunk_blocks",
+    "AdmissionQueue", "BlockAllocator", "EngineConfig", "NULL_BLOCK",
+    "Request", "RequestRecord", "RequestState", "RequestStatus",
+    "ServeEngine", "ServeMetrics", "VirtualClock", "WallClock",
+    "blocks_for_tokens", "copy_block", "engine_config_for",
+    "gather_prefix_blocks", "load_trace", "make_paged_pool", "nucleus_mask",
+    "percentiles", "poisson_requests", "sample_np", "sample_tokens",
+    "trace_requests", "write_chunk_blocks",
 ]

@@ -77,14 +77,20 @@ def poisson_requests(n: int, *, rate: float, vocab_size: int,
                      prompt_len: int, max_new_tokens: int,
                      seed: int = 0,
                      prompt_len_range: Optional[Tuple[int, int]] = None,
+                     shared_prefix_len: int = 0,
                      eos_id: Optional[int] = None) -> List[Request]:
     """n synthetic requests with exponential inter-arrival times.
 
     rate <= 0 means a closed batch: all requests arrive at t=0.
     ``prompt_len_range=(lo, hi)`` draws per-request prompt lengths
     uniformly; otherwise every prompt has ``prompt_len`` tokens.
+    ``shared_prefix_len=k`` makes the first ``min(k, prompt_len)`` tokens
+    of every prompt identical (one draw shared across the batch) — the
+    system-prompt/few-shot-template regime prefix caching targets.
     """
     rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, vocab_size,
+                          (max(shared_prefix_len, 0),)).astype(np.int32)
     t = 0.0
     out: List[Request] = []
     for i in range(n):
@@ -96,6 +102,9 @@ def poisson_requests(n: int, *, rate: float, vocab_size: int,
         else:
             plen = prompt_len
         toks = rng.integers(0, vocab_size, (plen,)).astype(np.int32)
+        k = min(len(prefix), plen)
+        if k:
+            toks[:k] = prefix[:k]
         out.append(Request(rid=i, tokens=toks, max_new_tokens=max_new_tokens,
                            arrival_time=t, eos_id=eos_id))
     return out

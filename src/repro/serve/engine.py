@@ -24,6 +24,13 @@ Two pool layouts:
   later *recomputed* (its prompt plus committed tokens re-prefilled).
   Finished prefill chunks are scattered straight into allocated blocks
   (``write_chunk_blocks``), and decode gathers K/V through the table.
+  With ``EngineConfig.prefix_sharing`` the pool becomes a prefix-sharing
+  cache: admission maps each request's longest radix-indexed token prefix
+  into its chain with refcount bumps and prefills only the uncached tail
+  (the cached prefix is gathered into the prefill scratch), shared blocks
+  are copy-on-write, and dead indexed blocks are retained on an LRU
+  cached-free list until allocation pressure evicts them (see
+  ``paging.py`` and README "Prefix caching").
 
 Because every array shape — including the block table — is fixed at engine
 construction, the jit caches hold exactly one entry each across admissions,
@@ -56,7 +63,8 @@ from repro.configs.base import round_up
 from repro.serve.arrivals import AdmissionQueue, WallClock
 from repro.serve.metrics import ServeMetrics
 from repro.serve.paging import (NULL_BLOCK, BlockAllocator,
-                                blocks_for_tokens, write_chunk_blocks)
+                                blocks_for_tokens, copy_block,
+                                gather_prefix_blocks, write_chunk_blocks)
 from repro.serve.request import Request, RequestState, RequestStatus
 from repro.serve.sampling import sample_np, sample_tokens
 from repro.serve.slots import (discover_batch_axes, discover_seq_axes,
@@ -76,9 +84,31 @@ class EngineConfig:
     paged: bool = False
     kv_block_size: int = 16     # tokens per physical KV block
     num_kv_blocks: int = 0      # usable blocks (0 = worst case: slab parity)
+    # --- prefix sharing (paged only) ---
+    prefix_sharing: bool = False
     # --- sampling (0 temperature = greedy) ---
     temperature: float = 0.0
     top_k: int = 0              # 0 = full vocab when temperature > 0
+    top_p: float = 1.0          # nucleus truncation (1.0 = disabled)
+
+    def __post_init__(self):
+        if self.prefix_sharing and not self.paged:
+            raise ValueError("prefix_sharing requires the paged KV pool "
+                             "(EngineConfig.paged=True)")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError("top_p must be in (0, 1]")
+
+
+def paged_pool_len(max_seq_len: int, prefill_chunk: int,
+                   prefix_sharing: bool) -> int:
+    """Chunk-padded logical pool length of the paged engine.  Prefix
+    sharing pads one extra chunk: its prefill restarts (a block boundary,
+    or ``prompt_len - 1`` on a full hit) are not chunk-aligned, so the
+    final padded chunk can spill one chunk past the plain bound.  Shared
+    between the engine's ``_s_pad`` and ``engine_config_for``'s
+    sliding-window validation so the two can never drift."""
+    return round_up(max_seq_len, prefill_chunk) \
+        + (prefill_chunk if prefix_sharing else 0)
 
 
 class ServeEngine:
@@ -125,21 +155,24 @@ class ServeEngine:
                                            ecfg.max_seq_len)
 
         self._paged = ecfg.paged
+        self._sharing = ecfg.prefix_sharing
         B, C = ecfg.max_slots, ecfg.prefill_chunk
         if self._paged:
             bs = ecfg.kv_block_size
             if bs < 1:
                 raise ValueError("kv_block_size must be >= 1")
             # prefill writes whole padded chunks, so a slot's chain must
-            # cover the chunk-rounded logical length
-            self._s_pad = round_up(ecfg.max_seq_len, C)
+            # cover the chunk-rounded logical length (one extra chunk with
+            # prefix sharing — see paged_pool_len)
+            self._s_pad = paged_pool_len(ecfg.max_seq_len, C, self._sharing)
             self.blocks_per_slot = blocks_for_tokens(self._s_pad, bs)
             usable = ecfg.num_kv_blocks or B * self.blocks_per_slot
             if usable < self.blocks_per_slot:
                 raise ValueError(
                     f"num_kv_blocks={usable} cannot hold even one "
                     f"worst-case request ({self.blocks_per_slot} blocks)")
-            self._alloc = BlockAllocator(usable + 1, bs)   # +1: null block
+            self._alloc = BlockAllocator(usable + 1, bs,   # +1: null block
+                                         prefix_cache=self._sharing)
             self.block_table = np.full((B, self.blocks_per_slot),
                                        NULL_BLOCK, np.int32)
             self.kv_capacity = self._s_pad
@@ -157,6 +190,15 @@ class ServeEngine:
             self._decode_fn = jax.jit(
                 lambda p, t, c, pos, bt, k, a: self._decode_core(
                     p, t, c, pos, k, a, bt))
+            if self._sharing:
+                self._gather_fn = jax.jit(
+                    lambda pool, scratch, bt_row, n: gather_prefix_blocks(
+                        pool, scratch, bt_row, n, s_pad=self._s_pad,
+                        block_size=bs, seq_axes=self._seq_axes))
+                self._copy_fn = jax.jit(
+                    lambda pool, src, dst: copy_block(
+                        pool, src, dst, block_size=bs,
+                        seq_axes=self._seq_axes))
         else:
             self._alloc = None
             self.block_table = None
@@ -188,6 +230,9 @@ class ServeEngine:
         self._step_idx = 0
         self._chunk_idx = 0
         self._admit_seq = 0
+        # allocator lifetime counters at window start (report() deltas)
+        self._evict0 = 0
+        self._cow0 = 0
         self._warm_counts: Optional[Dict[str, int]] = None
 
     # ------------------------------------------------------------------
@@ -215,7 +260,7 @@ class ServeEngine:
             **kw)
         nxt = sample_tokens(logits, samp_key,
                             temperature=self.ecfg.temperature,
-                            top_k=self.ecfg.top_k)
+                            top_k=self.ecfg.top_k, top_p=self.ecfg.top_p)
         return nxt, pool, diags
 
     # ------------------------------------------------------------------
@@ -247,14 +292,41 @@ class ServeEngine:
     # ------------------------------------------------------------------
     # admission (block-aware in paged mode; preempted requests first)
     # ------------------------------------------------------------------
-    def _prefill_blocks_needed(self, prefill_len: int) -> int:
-        """Chunked prefill writes whole padded chunks, so the chain must
-        cover the chunk-rounded sequence at admission time."""
-        return blocks_for_tokens(
-            round_up(prefill_len, self.ecfg.prefill_chunk),
-            self.ecfg.kv_block_size)
+    def _share_plan(self, tokens, resumed: bool) -> Tuple[int, List[int],
+                                                          int, bool]:
+        """Admission plan for a (re)prefill over ``tokens``:
+        ``(start_pf, shared_blocks, n_fresh, cow_last)``.
 
-    def _place(self, st: RequestState, now: float) -> None:
+        ``shared_blocks`` is the longest indexed prefix at block
+        granularity (empty without prefix sharing) and ``start_pf`` the
+        offset prefill resumes from — normally the end of the shared
+        prefix.  On a *full*-sequence hit a fresh request still needs the
+        last position's logits, so it restarts at ``len - 1``; that write
+        lands inside the last shared block, which must be CoW'd first
+        (``cow_last``).  A resumed request needs no logits (its pending
+        last token is already committed), so a full hit skips prefill
+        entirely.  ``n_fresh`` counts the fresh tail blocks covering the
+        chunk-padded prefill writes."""
+        C, bs = self.ecfg.prefill_chunk, self.ecfg.kv_block_size
+        L = len(tokens)
+        shared = self._alloc.match_prefix(tokens) if self._sharing else []
+        P = len(shared) * bs
+        cow_last = False
+        if P >= L:                         # full hit (only when L % bs == 0)
+            start = L if resumed else L - 1
+            cow_last = not resumed
+        else:
+            start = P
+        cover = start + (round_up(L - start, C) if L > start else 0)
+        n_fresh = max(blocks_for_tokens(cover, bs), len(shared)) \
+            - len(shared)
+        return start, shared, n_fresh, cow_last
+
+    def _can_admit(self, plan) -> bool:
+        start, shared, n_fresh, cow_last = plan
+        return self._alloc.can_allocate(n_fresh + int(cow_last), shared)
+
+    def _place(self, st: RequestState, now: float, plan=None) -> None:
         slot = self.free_slots.popleft()
         st.slot = slot
         st.status = RequestStatus.PREFILL
@@ -262,16 +334,36 @@ class ServeEngine:
         self._admit_seq += 1
         self.state_by_slot[slot] = st
         self.slot_history.append((st.req.rid, slot))
-        self._pf_queue.append(st)
         if self._paged:
-            chain = self._alloc.alloc_chain(
-                st.req.rid, self._prefill_blocks_needed(st.prefill_len))
+            start, shared, n_fresh, cow_last = plan
+            chain = self._alloc.alloc_chain(st.req.rid, n_fresh,
+                                            shared=shared)
             assert chain is not None      # gated by the caller
-            # self.block_table[slot] stays all-null until the slot joins
-            # the decode batch: decode steps write every row's (garbage,
-            # for inactive rows) K/V through the table, and a real entry
-            # here would let that garbage clobber the mid-prefill blocks.
-            # Prefill writes go through _bt_row(st) instead.
+            if cow_last:
+                # full-prompt hit: the last-position recompute writes into
+                # the final shared block — give this chain a private copy
+                ok = self._cow_block(st, len(shared) - 1)
+                assert ok                 # the CoW block was gated too
+            st.prefill_pos = start
+            # nothing to gather when no cached prefix was mapped: prefill
+            # starts at 0 and builds the scratch itself
+            st.prefix_loaded = start == 0
+            if st.n_preempted == 0:
+                st.cached_prefix_tokens = start
+            elif self._sharing:
+                self.metrics.resume_cached_tokens += start
+            if st.resumed and start >= st.prefill_len:
+                # full-sequence hit on recompute: every committed position's
+                # K/V is already cached — no prefill at all, the pending
+                # last token decodes next step
+                self._activate(st, st.prefill_len, st.output[-1])
+                return
+        # self.block_table[slot] stays all-null until the slot joins
+        # the decode batch: decode steps write every row's (garbage,
+        # for inactive rows) K/V through the table, and a real entry
+        # here would let that garbage clobber the mid-prefill blocks.
+        # Prefill writes go through _bt_row(st) instead.
+        self._pf_queue.append(st)
 
     def _bt_row(self, st: RequestState) -> np.ndarray:
         """This request's block-table row, built from its live chain (the
@@ -295,21 +387,25 @@ class ServeEngine:
         while self.free_slots:
             if self._resume:
                 st = self._resume[0]
-                if self._paged and self._alloc.free_blocks < \
-                        self._prefill_blocks_needed(st.prefill_len):
-                    return
+                plan = None
+                if self._paged:
+                    plan = self._share_plan(st.prefill_tokens, st.resumed)
+                    if not self._can_admit(plan):
+                        return
                 self._resume.popleft()
-                self._place(st, now)
+                self._place(st, now, plan)
                 continue
             req = self.queue.peek_ready(now)
             if req is None:
                 return
-            if self._paged and self._alloc.free_blocks < \
-                    self._prefill_blocks_needed(req.prompt_len):
-                return
+            plan = None
+            if self._paged:
+                plan = self._share_plan(req.tokens, False)
+                if not self._can_admit(plan):
+                    return
             self.queue.pop_ready(now)
             self._place(RequestState(req=req, slot=-1, admitted_time=now),
-                        now)
+                        now, plan)
 
     # ------------------------------------------------------------------
     # preemption (paged): reclaim the youngest holder's blocks, recompute
@@ -334,26 +430,53 @@ class ServeEngine:
         st.slot = -1
         st.status = RequestStatus.QUEUED
         st.prefill_pos = 0
+        st.prefix_loaded = False
         st.n_preempted += 1
         self._resume.append(st)
         self.metrics.preemptions += 1
 
-    def _grow_chain(self, st: RequestState) -> bool:
-        """Extend ``st``'s block chain by one, preempting younger holders
-        while the allocator is dry.  Returns False if ``st`` itself was the
-        youngest and got preempted to make room."""
+    def _reclaim_until(self, st: RequestState, op):
+        """Run allocator ``op`` (returns None while the pool is dry),
+        preempting the youngest block holder between attempts.  Returns
+        the op's result, or None if ``st`` itself was preempted to make
+        room."""
         while True:
-            blk = self._alloc.extend(st.req.rid)
-            if blk is not None:
-                n = len(self._alloc.chain(st.req.rid))
-                self.block_table[st.slot, n - 1] = blk
-                return True
+            res = op()
+            if res is not None:
+                return res
             victim = self._youngest_holder()
             if victim is None:
                 raise RuntimeError("KV allocator dry with no block holders")
             self._preempt(victim)
             if victim is st:
-                return False
+                return None
+
+    def _cow_block(self, st: RequestState, j: int) -> bool:
+        """Give ``st`` a private copy of logical block ``j`` before a write
+        would mutate it, preempting younger holders while the pool is dry.
+        Returns False if ``st`` itself was preempted to make room."""
+        res = self._reclaim_until(st, lambda: self._alloc.cow(st.req.rid, j))
+        if res is None:
+            return False
+        old, new = res
+        with self._ctx():
+            self.pool = self._copy_fn(self.pool, np.int32(old),
+                                      np.int32(new))
+        if st.slot >= 0 and self.active[st.slot]:
+            self.block_table[st.slot, j] = new
+        return True
+
+    def _grow_chain(self, st: RequestState) -> bool:
+        """Extend ``st``'s block chain by one, preempting younger holders
+        while the allocator is dry.  Returns False if ``st`` itself was the
+        youngest and got preempted to make room."""
+        blk = self._reclaim_until(st,
+                                  lambda: self._alloc.extend(st.req.rid))
+        if blk is None:
+            return False
+        n = len(self._alloc.chain(st.req.rid))
+        self.block_table[st.slot, n - 1] = blk
+        return True
 
     def _ensure_decode_blocks(self) -> None:
         """Before a decode step, every active slot needs its chain to cover
@@ -366,6 +489,14 @@ class ServeEngine:
             if not self.active[s]:        # preempted earlier in this pass
                 continue
             st = self.state_by_slot[s]
+            if self._sharing:
+                # copy-on-write guard: the block this step writes into must
+                # be private to this chain (a shared block is immutable)
+                j = self.pos[s] // bs
+                chain = self._alloc.chain(st.req.rid)
+                if j < len(chain) and self._alloc.refcount(chain[j]) > 1:
+                    if not self._cow_block(st, j):
+                        continue          # st itself preempted for room
             while len(self._alloc.chain(st.req.rid)) * bs <= self.pos[s]:
                 if not self._grow_chain(st):
                     break
@@ -385,6 +516,15 @@ class ServeEngine:
                     break
                 self._pf = self._pf_queue.popleft()
             st = self._pf
+            if self._sharing and st.prefill_pos > 0 and not st.prefix_loaded:
+                # mid-prompt restart off a cached prefix: the uncached
+                # tail's attention reads the prefix K/V from the scratch,
+                # so gather it out of the shared blocks first
+                with self._ctx():
+                    self._scratch = self._gather_fn(
+                        self.pool, self._scratch, self._bt_row(st),
+                        np.int32(st.prefill_pos))
+                st.prefix_loaded = True
             seq = st.prefill_tokens
             start, L = st.prefill_pos, st.prefill_len
             n = min(C, L - start)
@@ -402,6 +542,11 @@ class ServeEngine:
                         self.pool, self._scratch, self._bt_row(st),
                         np.int32(start))
             st.prefill_pos += n
+            if self._sharing:
+                # every block fully covered by committed K/V joins the
+                # prefix index (keyed on its token-id chain)
+                self._alloc.commit_prefix(st.req.rid,
+                                          seq[:st.prefill_pos])
             self.metrics.record_step(diags if self.cfg.is_moe else {}, 0,
                                      phase="prefill")
             did = True
@@ -415,7 +560,8 @@ class ServeEngine:
                     continue
                 first = sample_np(np.asarray(logits)[0], self._samp_rng,
                                   temperature=self.ecfg.temperature,
-                                  top_k=self.ecfg.top_k)
+                                  top_k=self.ecfg.top_k,
+                                  top_p=self.ecfg.top_p)
                 if not self._paged:
                     with self._ctx():
                         self.pool = self._write_fn(self.pool, self._scratch,
@@ -457,6 +603,12 @@ class ServeEngine:
             self.pos[s] += 1
             t = int(nxt[s])
             st.output.append(t)
+            if self._sharing and self.pos[s] % self.ecfg.kv_block_size == 0:
+                # this step's write just filled a block: index it so later
+                # prompts extending this sequence (e.g. multi-turn) can hit
+                full = np.concatenate([st.req.tokens,
+                                       np.asarray(st.output, np.int32)])
+                self._alloc.commit_prefix(st.req.rid, full[:self.pos[s]])
             eos = self._eos_id(st.req)
             if (eos is not None and t == eos) \
                     or st.n_generated >= st.req.max_new_tokens:
@@ -492,6 +644,9 @@ class ServeEngine:
             raise RuntimeError("cannot reset metrics while work is in flight")
         self.metrics = ServeMetrics()
         self.slot_history.clear()
+        if self._paged:
+            self._evict0 = self._alloc.evictions
+            self._cow0 = self._alloc.cow_copies
         self.clock.reset()
 
     def warmup(self) -> None:
@@ -531,6 +686,17 @@ class ServeEngine:
                 nxt, self.pool, _ = self._decode_fn(
                     self.params, self.tok[:, None], self.pool, self.pos,
                     *bt_args, key, self.active.copy())
+                if self._paged and self._sharing:
+                    # gather through an all-null row (masked to 0 tokens)
+                    # and copy the null block onto itself: both compile
+                    # against garbage nothing reads
+                    self._scratch = self._gather_fn(
+                        self.pool, self._scratch,
+                        np.full((self.blocks_per_slot,), NULL_BLOCK,
+                                np.int32), np.int32(0))
+                    self.pool = self._copy_fn(self.pool,
+                                              np.int32(NULL_BLOCK),
+                                              np.int32(NULL_BLOCK))
             jax.block_until_ready(nxt)
         # multi-device: the first call may trace twice while cache shardings
         # settle to jit's steady state; anything beyond this is a regression
@@ -579,6 +745,9 @@ class ServeEngine:
         return self.report()
 
     def report(self) -> Dict[str, Any]:
+        if self._paged:
+            self.metrics.evictions = self._alloc.evictions - self._evict0
+            self.metrics.cow_copies = self._alloc.cow_copies - self._cow0
         rep = self.metrics.report()
         rep["engine"] = {
             "max_slots": self.ecfg.max_slots,
@@ -592,6 +761,7 @@ class ServeEngine:
             rep["engine"]["kv_block_size"] = self.ecfg.kv_block_size
             rep["engine"]["num_kv_blocks"] = self._alloc.usable_blocks
             rep["engine"]["blocks_per_slot"] = self.blocks_per_slot
+            rep["engine"]["prefix_sharing"] = self._sharing
         rep["jit_entries"] = self._jit_counts()
         if self._warm_counts is not None:
             rep["recompiled_after_warmup"] = \
@@ -599,12 +769,16 @@ class ServeEngine:
         return rep
 
     def _jit_counts(self) -> Dict[str, int]:
-        return {
+        counts = {
             "prefill_chunk": self._prefill_fn._cache_size(),
             "decode": self._decode_fn._cache_size(),
             ("write_blocks" if self._paged else "write_slot"):
                 self._write_fn._cache_size(),
         }
+        if self._paged and self._sharing:
+            counts["gather_prefix"] = self._gather_fn._cache_size()
+            counts["copy_block"] = self._copy_fn._cache_size()
+        return counts
 
 
 # ----------------------------------------------------------------------
@@ -613,12 +787,17 @@ def engine_config_for(cfg, *, max_slots: int, prompt_len: int,
                       eos_id: Optional[int] = None,
                       skew_seed: int = 0, paged: bool = False,
                       kv_block_size: int = 16, num_kv_blocks: int = 0,
+                      prefix_sharing: bool = False,
                       temperature: float = 0.0,
-                      top_k: int = 0) -> EngineConfig:
+                      top_k: int = 0, top_p: float = 1.0) -> EngineConfig:
     """Derive serving shapes from a workload: pool length covers prompt +
     generation, the prefill chunk divides the (padded) prompt, and the
     padded prompt fits every layer's KV capacity (sliding-window layers
-    clamp their cache to the window)."""
+    clamp their cache to the window).  Paged mode needs every layer's KV
+    at the chunk-padded pool length — one chunk longer with prefix
+    sharing, whose prefill restarts are not chunk-aligned — so that too is
+    validated here against the window, with an actionable error instead of
+    the engine's late structural rejection."""
     chunk = prefill_chunk or min(max(prompt_len, 1), 32)
     window = cfg.sliding_window or 0
     pad = round_up(prompt_len, chunk)
@@ -626,9 +805,21 @@ def engine_config_for(cfg, *, max_slots: int, prompt_len: int,
         raise ValueError(
             f"padded prompt {pad} exceeds the sliding window {window}; "
             f"chunked prefill must fit the window-clamped KV cache")
+    max_seq = max(prompt_len + max_new_tokens, pad)
+    if paged and window:
+        s_pad = paged_pool_len(max_seq, chunk, prefix_sharing)
+        if s_pad > window:
+            raise ValueError(
+                f"paged pool needs every layer's KV at the padded length "
+                f"{s_pad}"
+                + (" (prefix sharing pads one extra prefill chunk)"
+                   if prefix_sharing else "")
+                + f", but the sliding window clamps caches to {window}; "
+                f"shrink prompt+generation or prefill_chunk")
     return EngineConfig(
         max_slots=max_slots,
-        max_seq_len=max(prompt_len + max_new_tokens, pad),
+        max_seq_len=max_seq,
         prefill_chunk=chunk, eos_id=eos_id, skew_seed=skew_seed,
         paged=paged, kv_block_size=kv_block_size,
-        num_kv_blocks=num_kv_blocks, temperature=temperature, top_k=top_k)
+        num_kv_blocks=num_kv_blocks, prefix_sharing=prefix_sharing,
+        temperature=temperature, top_k=top_k, top_p=top_p)

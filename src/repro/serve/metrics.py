@@ -58,6 +58,8 @@ class RequestRecord:
     admitted_time: float
     first_token_time: float
     finish_time: float
+    cached_prefix_tokens: int = 0   # prompt tokens served from the prefix
+    #                                 cache at first admission
 
     @property
     def ttft(self) -> float:
@@ -81,6 +83,7 @@ class RequestRecord:
             "arrival_time": self.arrival_time,
             "queue_delay": self.admitted_time - self.arrival_time,
             "ttft": self.ttft, "tpot": self.tpot, "e2e": self.e2e,
+            "cached_prefix_tokens": self.cached_prefix_tokens,
         }
 
 
@@ -96,6 +99,10 @@ class ServeMetrics:
         self.kv_blocks_in_use: List[int] = []   # per decode step (paged)
         self.kv_blocks_total: int = 0
         self.preemptions: int = 0
+        # --- prefix sharing (paged) ---
+        self.cow_copies: int = 0                # copy-on-write block copies
+        self.evictions: int = 0                 # cached prefixes evicted
+        self.resume_cached_tokens: int = 0      # prefill skipped on resume
         self._t_first_arrival: Optional[float] = None
         self._t_last_finish: float = 0.0
 
@@ -127,7 +134,8 @@ class ServeMetrics:
             arrival_time=st.req.arrival_time,
             admitted_time=st.admitted_time,
             first_token_time=st.first_token_time,
-            finish_time=st.finish_time)
+            finish_time=st.finish_time,
+            cached_prefix_tokens=st.cached_prefix_tokens or 0)
         self.requests.append(rec)
         if self._t_first_arrival is None \
                 or rec.arrival_time < self._t_first_arrival:
@@ -139,6 +147,7 @@ class ServeMetrics:
     def report(self) -> Dict[str, Any]:
         recs = self.requests
         total_new = sum(r.n_generated for r in recs)
+        total_prompt = sum(r.prompt_len for r in recs)
         span = (self._t_last_finish - self._t_first_arrival) \
             if recs and self._t_first_arrival is not None else 0.0
         rep: Dict[str, Any] = {
@@ -157,6 +166,14 @@ class ServeMetrics:
             "max_occupancy": (int(max(self.occupancy))
                               if self.occupancy else 0),
             "preemptions": self.preemptions,
+            "cow_copies": self.cow_copies,
+            "evictions": self.evictions,
+            "resume_cached_tokens": self.resume_cached_tokens,
+            # token-level prefix cache hit rate: prompt tokens whose K/V was
+            # mapped from the cache at first admission / all prompt tokens
+            "prefix_hit_rate": (
+                sum(r.cached_prefix_tokens for r in recs) / total_prompt
+                if total_prompt else None),
             "requests": [r.asdict() for r in recs],
         }
         if self.kv_blocks_in_use:

@@ -15,15 +15,27 @@ so gathers/scatters through a partially-filled table stay in bounds —
 reads from it are masked by the per-row ``cache_len`` validity mask, writes
 to it land in garbage that nothing reads.
 
+Prefix sharing (``prefix_cache=True``) turns the allocator copy-on-write:
+every block carries a refcount (number of chains it appears in), full
+blocks are indexed in a radix tree keyed on their token-id chain, and a
+new chain can adopt the longest indexed prefix of its token sequence with
+refcount bumps instead of re-prefilling it.  Releasing a chain decrements
+refcounts; indexed blocks that drop to refcount 0 are *retained* on an LRU
+cached-free list — immediately reusable via a later prefix match, and
+evicted (index entry dropped, block handed out) only when a fresh
+allocation finds the plain free list dry.  A shared block is immutable;
+``cow`` swaps a private copy into one chain so its owner can write.
+
 Layout discovery is shared with the slab pool: ``discover_seq_axes`` finds
 every cache leaf's KV-length axis structurally, and the same axis indices
-drive both the physical-pool construction and the chunk scatter here —
-scan-stacked blocks and unscanned lead layers need no special cases.
+drive the physical-pool construction, the chunk scatter, the prefix
+gather, and the CoW block copy here — scan-stacked blocks and unscanned
+lead layers need no special cases.
 """
 from __future__ import annotations
 
-from collections import deque
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from collections import OrderedDict, deque
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +49,23 @@ def blocks_for_tokens(n_tokens: int, block_size: int) -> int:
     return -(-n_tokens // block_size)
 
 
+class _PrefixNode:
+    """One radix-index node: a full block keyed by (parent node, the
+    ``block_size`` token ids it holds).  The chain of keys from the root is
+    exactly the token prefix whose K/V the block stores."""
+    __slots__ = ("nid", "key", "block", "children")
+
+    def __init__(self, nid: int, key: Tuple[int, Tuple[int, ...]],
+                 block: int):
+        self.nid = nid
+        self.key = key          # (parent_nid, token tuple)
+        self.block = block
+        self.children: set = set()
+
+
+_ROOT = 0               # nid of the (implicit) radix root
+
+
 class BlockAllocator:
     """Free-list allocator over ``num_blocks`` physical KV blocks.
 
@@ -44,16 +73,43 @@ class BlockAllocator:
     handed out.  Each request (keyed by rid) owns an ordered chain of
     blocks — logical block ``j`` of the request lives in physical block
     ``chain[j]``.
+
+    With ``prefix_cache=True`` the allocator additionally keeps per-block
+    refcounts, a radix prefix index over committed full blocks, and an LRU
+    cached-free list of refcount-0 indexed blocks (see the module
+    docstring).  Invariants (fuzzed by ``tests/test_paging_properties.py``):
+
+    * conservation — ``free_blocks + blocks_in_use == usable_blocks``;
+      every usable block is in exactly one of {free list, cached LRU,
+      some chain(s)};
+    * refcount consistency — a block appears in ``k`` chains iff its
+      refcount is ``k`` (a block appears at most once per chain);
+    * null immutability — ``NULL_BLOCK`` is never handed out, never in a
+      chain, never indexed, never freed or evicted.
     """
 
-    def __init__(self, num_blocks: int, block_size: int):
+    def __init__(self, num_blocks: int, block_size: int, *,
+                 prefix_cache: bool = False):
         if num_blocks < 2:
             raise ValueError("need at least one usable block past the "
                              "reserved null block")
         self.num_blocks = num_blocks
         self.block_size = block_size
+        self.prefix_cache = bool(prefix_cache)
         self._free: deque = deque(range(1, num_blocks))
         self._chains: Dict[int, List[int]] = {}
+        self._ref: List[int] = [0] * num_blocks
+        # refcount-0 blocks still holding indexed prefixes, LRU order
+        # (oldest first = next eviction victim)
+        self._cached: "OrderedDict[int, None]" = OrderedDict()
+        # radix prefix index
+        self._nodes: Dict[Tuple[int, Tuple[int, ...]], _PrefixNode] = {}
+        self._by_nid: Dict[int, _PrefixNode] = {}
+        self._by_block: Dict[int, _PrefixNode] = {}
+        self._next_nid = _ROOT + 1
+        # lifetime counters (the engine reports per-window deltas)
+        self.evictions = 0
+        self.cow_copies = 0
 
     @property
     def usable_blocks(self) -> int:
@@ -61,39 +117,216 @@ class BlockAllocator:
 
     @property
     def free_blocks(self) -> int:
-        return len(self._free)
+        """Immediately allocatable blocks: the plain free list plus the
+        cached LRU (evictable on demand)."""
+        return len(self._free) + len(self._cached)
 
     @property
     def blocks_in_use(self) -> int:
-        return self.usable_blocks - len(self._free)
+        return self.usable_blocks - self.free_blocks
+
+    @property
+    def cached_blocks(self) -> int:
+        return len(self._cached)
 
     def chain(self, rid: int) -> Tuple[int, ...]:
         return tuple(self._chains.get(rid, ()))
 
-    def alloc_chain(self, rid: int, n_blocks: int) -> Optional[List[int]]:
-        """Allocate a fresh ``n_blocks``-long chain for ``rid``; None (and
-        no allocation) if the free list cannot cover it."""
+    def refcount(self, blk: int) -> int:
+        return self._ref[blk]
+
+    # ------------------------------------------------------------------
+    # free-list / LRU internals
+    # ------------------------------------------------------------------
+    def _take_free(self) -> Optional[int]:
+        """One allocatable block: plain free list first, then evict the
+        LRU cached prefix block (dropping its index subtree)."""
+        if self._free:
+            return self._free.popleft()
+        if self._cached:
+            blk, _ = self._cached.popitem(last=False)
+            node = self._by_block.get(blk)
+            if node is not None:
+                # blocks orphaned by an earlier subtree drop have no node
+                # left and don't count as a prefix evicted again
+                self._drop_subtree(node)
+                self.evictions += 1
+            return blk
+        return None
+
+    def _drop_subtree(self, node: _PrefixNode) -> None:
+        """Remove ``node`` and every descendant from the index.  Descendant
+        *blocks* are untouched (they may sit in chains or the cached LRU);
+        only their index entries go — with their ancestor evicted they
+        could never be reached by a prefix walk again."""
+        parent = self._by_nid.get(node.key[0])
+        if parent is not None:
+            parent.children.discard(node.nid)
+        stack = [node]
+        while stack:
+            n = stack.pop()
+            stack.extend(self._by_nid[c] for c in n.children
+                         if c in self._by_nid)
+            del self._nodes[n.key]
+            del self._by_nid[n.nid]
+            if self._by_block.get(n.block) is n:
+                del self._by_block[n.block]
+
+    def _retire(self, blk: int) -> None:
+        """A block's refcount just hit 0: retain it on the cached LRU if it
+        still backs an index node, else return it to the free list."""
+        if self.prefix_cache and blk in self._by_block:
+            self._cached[blk] = None          # MRU end
+        else:
+            self._free.append(blk)
+
+    # ------------------------------------------------------------------
+    # chain lifecycle
+    # ------------------------------------------------------------------
+    def can_allocate(self, n_fresh: int, shared: Sequence[int] = ()) -> bool:
+        """Would ``alloc_chain(rid, n_fresh, shared=shared)`` (plus
+        ``n_fresh - len-of-tail`` CoW copies the caller folds in) succeed?
+        Shared blocks currently parked on the cached LRU leave the free
+        pool when mapped, so they reduce what's left for fresh blocks."""
+        avail = self.free_blocks - sum(1 for b in shared if self._ref[b] == 0)
+        return n_fresh <= avail
+
+    def alloc_chain(self, rid: int, n_blocks: int,
+                    shared: Sequence[int] = ()) -> Optional[List[int]]:
+        """Install a chain for ``rid``: the ``shared`` prefix blocks (each
+        refcount-bumped, revived from the cached LRU if parked there)
+        followed by ``n_blocks`` fresh ones.  None (and no allocation) if
+        the free pool cannot cover the fresh tail."""
         if rid in self._chains:
             raise ValueError(f"rid {rid} already holds a chain")
-        if n_blocks > len(self._free):
+        if not self.can_allocate(n_blocks, shared):
             return None
-        chain = [self._free.popleft() for _ in range(n_blocks)]
+        chain: List[int] = []
+        for blk in shared:
+            if blk == NULL_BLOCK:
+                raise ValueError("cannot map the null block into a chain")
+            if self._ref[blk] == 0:
+                del self._cached[blk]         # revived from the LRU
+            self._ref[blk] += 1
+            chain.append(blk)
+        for _ in range(n_blocks):
+            blk = self._take_free()
+            assert blk is not None            # guarded by can_allocate
+            self._ref[blk] = 1
+            chain.append(blk)
         self._chains[rid] = chain
         return list(chain)
 
     def extend(self, rid: int) -> Optional[int]:
         """Append one block to ``rid``'s chain; None if the pool is dry."""
-        if not self._free:
+        blk = self._take_free()
+        if blk is None:
             return None
-        blk = self._free.popleft()
+        self._ref[blk] = 1
         self._chains.setdefault(rid, []).append(blk)
         return blk
 
     def release(self, rid: int) -> int:
-        """Return ``rid``'s chain to the free list; returns #blocks freed."""
+        """Drop ``rid``'s chain: every block's refcount is decremented and
+        refcount-0 blocks return to the free pool — indexed ones onto the
+        cached LRU (tail blocks first, so deep prefix blocks are evicted
+        before the roots they hang off).  Returns #blocks whose refcount
+        hit 0 (shared blocks still held by other chains stay in use)."""
         chain = self._chains.pop(rid, [])
-        self._free.extend(chain)
-        return len(chain)
+        freed = 0
+        for blk in reversed(chain):
+            self._ref[blk] -= 1
+            if self._ref[blk] == 0:
+                self._retire(blk)
+                freed += 1
+        return freed
+
+    # ------------------------------------------------------------------
+    # prefix index
+    # ------------------------------------------------------------------
+    def _block_key(self, parent: int, tokens, j: int) -> Tuple[int, tuple]:
+        bs = self.block_size
+        return (parent, tuple(int(t) for t in tokens[j * bs:(j + 1) * bs]))
+
+    def match_prefix(self, tokens) -> List[int]:
+        """Physical blocks of the longest indexed prefix of ``tokens``, at
+        block granularity.  Pure lookup — no refcounts change (map the
+        result via ``alloc_chain(shared=...)``); matched cached blocks are
+        touched to the LRU's MRU end."""
+        if not self.prefix_cache:
+            return []
+        out: List[int] = []
+        parent = _ROOT
+        for j in range(len(tokens) // self.block_size):
+            node = self._nodes.get(self._block_key(parent, tokens, j))
+            if node is None:
+                break
+            out.append(node.block)
+            parent = node.nid
+        # LRU touch tail-to-root so a prefix root always outlives its
+        # descendants (evicting a root drops the whole subtree's entries)
+        for blk in reversed(out):
+            if blk in self._cached:
+                self._cached.move_to_end(blk)
+        return out
+
+    def commit_prefix(self, rid: int, tokens) -> int:
+        """Index ``rid``'s chain blocks that hold full committed blocks of
+        ``tokens`` (K/V for ``tokens[:k * block_size]`` must already be
+        written).  Idempotent; first writer wins — a block whose key is
+        already indexed (content-equal K/V elsewhere) is left unindexed and
+        simply returns to the free list when its chain dies.  Returns the
+        number of newly indexed blocks."""
+        if not self.prefix_cache:
+            return 0
+        chain = self._chains.get(rid, [])
+        parent = _ROOT
+        new = 0
+        for j in range(min(len(tokens) // self.block_size, len(chain))):
+            key = self._block_key(parent, tokens, j)
+            node = self._nodes.get(key)
+            if node is None:
+                blk = chain[j]
+                if blk in self._by_block:
+                    # already indexed under a different prefix — one block
+                    # backs at most one node; stop the walk here
+                    break
+                node = _PrefixNode(self._next_nid, key, blk)
+                self._next_nid += 1
+                self._nodes[key] = node
+                self._by_nid[node.nid] = node
+                self._by_block[blk] = node
+                p = self._by_nid.get(key[0])
+                if p is not None:
+                    p.children.add(node.nid)
+                new += 1
+            parent = node.nid
+        return new
+
+    # ------------------------------------------------------------------
+    # copy-on-write
+    # ------------------------------------------------------------------
+    def cow(self, rid: int, j: int) -> Optional[Tuple[int, int]]:
+        """Swap a private copy in for logical block ``j`` of ``rid``'s
+        chain: a fresh block replaces it in the chain (refcount 1) and the
+        original's refcount drops.  Returns ``(old, new)`` so the caller
+        can perform the device copy, or None if the pool is dry (nothing
+        changed).  Valid on shared *and* private blocks — CoW of a private
+        indexed block detaches it from the index's content."""
+        chain = self._chains.get(rid)
+        if chain is None or not 0 <= j < len(chain):
+            raise ValueError(f"rid {rid} has no logical block {j}")
+        new = self._take_free()
+        if new is None:
+            return None
+        old = chain[j]
+        self._ref[new] = 1
+        chain[j] = new
+        self._ref[old] -= 1
+        if self._ref[old] == 0:
+            self._retire(old)
+        self.cow_copies += 1
+        return old, new
 
 
 # ----------------------------------------------------------------------
@@ -168,3 +401,50 @@ def write_chunk_blocks(pool: Any, scratch: Any, bt_row: jnp.ndarray,
         return jnp.moveaxis(pm, 0, ax)
 
     return jax.tree.map(upd, pool, scratch, seq_axes)
+
+
+def gather_prefix_blocks(pool: Any, scratch: Any, bt_row: jnp.ndarray,
+                         n_tokens: jnp.ndarray, *, s_pad: int,
+                         block_size: int, seq_axes: Any) -> Any:
+    """Load a cached prefix into the prefill scratch: logical positions
+    ``[0, n_tokens)`` of the chain behind ``bt_row`` are gathered from the
+    paged pool into the scratch cache (positions past ``n_tokens`` keep
+    their current scratch values).  The inverse of ``write_chunk_blocks``,
+    used when prefix sharing lets prefill resume mid-prompt: the uncached
+    tail's attention reads the shared prefix's K/V out of the scratch.
+
+    ``n_tokens`` is a traced int32 scalar — one compilation serves every
+    prefix length.  Table entries past the chain point at the null block;
+    the ``log < n_tokens`` mask keeps that garbage out of the scratch.
+    """
+    log = jnp.arange(s_pad)
+    phys = bt_row[log // block_size] * block_size + log % block_size
+    keep = log < n_tokens
+
+    def upd(sc, p, ax):
+        pm = jnp.moveaxis(p, ax, 0)
+        sm = jnp.moveaxis(sc, ax, 0)
+        g = pm[phys].astype(sm.dtype)
+        shape = (s_pad,) + (1,) * (sm.ndim - 1)
+        sm = jnp.where(keep.reshape(shape), g, sm)
+        return jnp.moveaxis(sm, 0, ax)
+
+    return jax.tree.map(upd, scratch, pool, seq_axes)
+
+
+def copy_block(pool: Any, src: jnp.ndarray, dst: jnp.ndarray, *,
+               block_size: int, seq_axes: Any) -> Any:
+    """Copy physical block ``src``'s KV positions onto block ``dst`` in
+    every pool leaf — the device half of copy-on-write (the allocator's
+    ``cow`` does the bookkeeping half).  ``src``/``dst`` are traced int32
+    scalars, so one compilation serves every copy."""
+
+    def upd(p, ax):
+        pm = jnp.moveaxis(p, ax, 0)
+        blk = jax.lax.dynamic_slice_in_dim(pm, src * block_size, block_size,
+                                           axis=0)
+        pm = jax.lax.dynamic_update_slice(
+            pm, blk, (dst * block_size,) + (0,) * (pm.ndim - 1))
+        return jnp.moveaxis(pm, 0, ax)
+
+    return jax.tree.map(upd, pool, seq_axes)

@@ -64,6 +64,10 @@ class RequestState:
     output: List[int] = field(default_factory=list)
     n_preempted: int = 0                 # times evicted for recompute
     admit_seq: int = 0                   # admission order (preemption age)
+    # --- prefix sharing ---
+    cached_prefix_tokens: Optional[int] = None  # prefill skipped at first
+    #                                             admission via a cache hit
+    prefix_loaded: bool = False          # cached prefix gathered to scratch
     # --- timestamps on the engine clock ---
     admitted_time: float = 0.0           # slot reserved / prefill started
     first_token_time: float = 0.0        # last prefill chunk done (TTFT point)

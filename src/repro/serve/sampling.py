@@ -2,9 +2,12 @@
 
 Greedy decoding is the ``temperature == 0`` degenerate case; otherwise
 logits are temperature-scaled and drawn from, optionally truncated to the
-``top_k`` largest via ``jax.lax.top_k``.  Both knobs are static at engine
-construction, so enabling sampling changes *which* single entry each jit
-cache holds, never how many.
+``top_k`` largest via ``jax.lax.top_k`` and/or to the nucleus — the
+smallest set of tokens whose cumulative probability reaches ``top_p``.
+All three knobs are static at engine construction, so enabling sampling
+changes *which* single entry each jit cache holds, never how many.
+``top_p >= 1`` bypasses the nucleus path entirely, so draws are bit-exact
+with the pre-top-p sampler there (greedy-equivalent composition).
 
 ``sample_tokens`` is the in-jit path (decode steps, batched, per-step PRNG
 key); ``sample_np`` is its host-side twin used for the single first token a
@@ -20,15 +23,37 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def nucleus_mask(sorted_probs: jnp.ndarray, top_p: float) -> jnp.ndarray:
+    """Boolean keep-mask over probabilities sorted descending along the
+    last axis: True for the smallest prefix whose cumulative probability
+    reaches ``top_p``.  The top token is always kept (its exclusive
+    cumulative probability is 0 < top_p)."""
+    cum = jnp.cumsum(sorted_probs, axis=-1)
+    return (cum - sorted_probs) < top_p
+
+
 def sample_tokens(logits: jnp.ndarray, key, *, temperature: float = 0.0,
-                  top_k: int = 0) -> jnp.ndarray:
+                  top_k: int = 0, top_p: float = 1.0) -> jnp.ndarray:
     """logits [B, V] -> int32 [B]. Greedy when ``key`` is None or
     ``temperature <= 0``; else softmax(logits / temperature) sampling,
-    truncated to the ``top_k`` largest logits when ``top_k > 0``."""
+    truncated to the ``top_k`` largest logits when ``top_k > 0`` and to
+    the ``top_p`` nucleus (within the top-k candidates) when
+    ``top_p < 1``."""
     if key is None or temperature <= 0:
         return jnp.argmax(logits, -1).astype(jnp.int32)
     scaled = logits.astype(jnp.float32) / temperature
-    top_k = min(top_k, logits.shape[-1])    # oversized k = full vocab
+    V = logits.shape[-1]
+    top_k = min(top_k, V)                   # oversized k = full vocab
+    if top_p < 1.0:
+        # sort (full vocab, or the top-k slice — lax.top_k is descending),
+        # mask everything past the nucleus, sample in sorted space, and
+        # map the choice back through the sort order
+        vals, idx = jax.lax.top_k(scaled, top_k if top_k > 0 else V)
+        keep = nucleus_mask(jax.nn.softmax(vals, axis=-1), top_p)
+        vals = jnp.where(keep, vals, -jnp.inf)
+        choice = jax.random.categorical(key, vals, axis=-1)
+        return jnp.take_along_axis(
+            idx, choice[..., None], axis=-1)[..., 0].astype(jnp.int32)
     if top_k > 0:
         vals, idx = jax.lax.top_k(scaled, top_k)           # [B, k]
         choice = jax.random.categorical(key, vals, axis=-1)
@@ -38,7 +63,8 @@ def sample_tokens(logits: jnp.ndarray, key, *, temperature: float = 0.0,
 
 
 def sample_np(logits_row: np.ndarray, rng: Optional[np.random.Generator], *,
-              temperature: float = 0.0, top_k: int = 0) -> int:
+              temperature: float = 0.0, top_k: int = 0,
+              top_p: float = 1.0) -> int:
     """Host-side twin of ``sample_tokens`` for one row of logits."""
     logits_row = np.asarray(logits_row, np.float64)
     if rng is None or temperature <= 0:
@@ -50,6 +76,13 @@ def sample_np(logits_row: np.ndarray, rng: Optional[np.random.Generator], *,
         x = x[keep]
     else:
         keep = np.arange(x.shape[0])
+    if top_p < 1.0:
+        order = np.argsort(-x)
+        keep, x = keep[order], x[order]
+        p = np.exp(x - x.max())
+        p /= p.sum()
+        inside = (np.cumsum(p) - p) < top_p
+        keep, x = keep[inside], x[inside]
     p = np.exp(x - x.max())
     p /= p.sum()
     return int(keep[rng.choice(p.shape[0], p=p)])

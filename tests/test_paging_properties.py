@@ -1,0 +1,204 @@
+"""Property-based fuzz of the prefix-sharing block allocator.
+
+Random interleavings of alloc/extend/share/commit/CoW/release (with
+allocation-pressure eviction happening implicitly inside the allocator)
+must preserve, after every single operation:
+
+* conservation — ``free_blocks + blocks_in_use == usable_blocks``, and
+  every usable block sits in exactly one of {plain free list, cached LRU,
+  some chain(s)};
+* refcount consistency — a block appears in ``k`` live chains iff its
+  refcount is ``k``;
+* null-block immutability — block 0 is never handed out, never enters a
+  chain, the free pool, or the prefix index.
+
+Runs under real ``hypothesis`` when installed (derandomized, so CI is
+reproducible) and under ``tests/_hypothesis_shim.py`` otherwise — either
+way the op programs are generated from drawn integer seeds, so coverage is
+identical and deterministic across environments.
+"""
+import random
+from collections import Counter
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                   # pragma: no cover
+    from _hypothesis_shim import given, settings, strategies as st
+
+from repro.serve.paging import NULL_BLOCK, BlockAllocator
+
+
+VOCAB = 3          # tiny vocab => frequent prefix collisions in the index
+
+
+def check_invariants(a: BlockAllocator, live):
+    """``live`` is the reference {rid: [blocks]} mirror built from the
+    allocator's own return values."""
+    # the allocator's chains match the mirror exactly
+    assert set(a._chains) == set(live)
+    for rid, chain in live.items():
+        assert a.chain(rid) == tuple(chain), rid
+    # refcount consistency: in k chains <=> refcount k
+    counts = Counter(b for chain in live.values() for b in chain)
+    for blk in range(1, a.num_blocks):
+        assert a.refcount(blk) == counts.get(blk, 0), blk
+    for chain in live.values():                      # at most once per chain
+        assert len(chain) == len(set(chain))
+    # conservation: free list, cached LRU, and in-use chains partition the
+    # usable blocks
+    free, cached = set(a._free), set(a._cached)
+    in_use = set(counts)
+    assert not free & cached
+    assert not free & in_use
+    assert not cached & in_use
+    assert free | cached | in_use == set(range(1, a.num_blocks))
+    assert a.free_blocks == len(free) + len(cached)
+    assert a.free_blocks + a.blocks_in_use == a.usable_blocks
+    # null-block immutability
+    assert NULL_BLOCK not in counts
+    assert NULL_BLOCK not in free and NULL_BLOCK not in cached
+    assert a.refcount(NULL_BLOCK) == 0
+    assert NULL_BLOCK not in a._by_block
+    # every cached-LRU block's refcount is 0 (eviction only touches dead
+    # blocks) and every indexed block is a real block
+    for blk in cached:
+        assert a.refcount(blk) == 0
+    for blk in a._by_block:
+        assert 1 <= blk < a.num_blocks
+
+
+def run_program(seed: int, *, n_ops: int = 60) -> BlockAllocator:
+    rng = random.Random(seed)
+    num_blocks = rng.randint(4, 20)
+    bs = rng.choice([1, 2, 4])
+    a = BlockAllocator(num_blocks, bs, prefix_cache=True)
+    tok_rng = np.random.default_rng(seed)
+    live = {}          # rid -> expected chain
+    toks = {}          # rid -> token sequence backing the chain
+    next_rid = 0
+
+    for _ in range(n_ops):
+        op = rng.choice(["alloc", "alloc", "extend", "commit", "commit",
+                         "cow", "release"])
+        if op == "alloc":
+            rid = next_rid
+            next_rid += 1
+            n_tok = rng.randint(0, (num_blocks + 1) * bs)
+            seq = tok_rng.integers(0, VOCAB, (n_tok,)).astype(np.int32)
+            shared = a.match_prefix(seq)
+            assert NULL_BLOCK not in shared
+            n_fresh = rng.randint(0, 3)
+            chain = a.alloc_chain(rid, n_fresh, shared=shared)
+            if chain is None:
+                assert not a.can_allocate(n_fresh, shared)
+            else:
+                assert len(chain) == len(shared) + n_fresh
+                assert chain[:len(shared)] == shared
+                assert NULL_BLOCK not in chain
+                live[rid] = chain
+                toks[rid] = seq
+        elif op == "extend" and live:
+            rid = rng.choice(sorted(live))
+            blk = a.extend(rid)
+            if blk is None:
+                assert a.free_blocks == 0
+            else:
+                assert blk != NULL_BLOCK
+                live[rid].append(blk)
+                toks[rid] = np.concatenate(
+                    [toks[rid],
+                     tok_rng.integers(0, VOCAB, (bs,)).astype(np.int32)])
+        elif op == "commit" and live:
+            rid = rng.choice(sorted(live))
+            k = rng.randint(0, len(toks[rid]))
+            a.commit_prefix(rid, toks[rid][:k])
+        elif op == "cow" and live:
+            rid = rng.choice(sorted(live))
+            if live[rid]:
+                j = rng.randrange(len(live[rid]))
+                res = a.cow(rid, j)
+                if res is None:
+                    assert a.free_blocks == 0
+                else:
+                    old, new = res
+                    assert old == live[rid][j]
+                    assert new != NULL_BLOCK and new != old
+                    live[rid][j] = new
+        elif op == "release" and live:
+            rid = rng.choice(sorted(live))
+            held_elsewhere = {b for r2, c in live.items() if r2 != rid
+                              for b in c}
+            freed = a.release(rid)
+            assert freed == sum(1 for b in live[rid]
+                                if b not in held_elsewhere)
+            del live[rid]
+            del toks[rid]
+        check_invariants(a, live)
+
+    # drain: releasing everything returns the pool to fully free
+    for rid in sorted(live):
+        a.release(rid)
+        del live[rid]
+        check_invariants(a, live)
+    assert a.blocks_in_use == 0
+    assert a.free_blocks == a.usable_blocks
+    return a
+
+
+@settings(max_examples=40, deadline=None, derandomize=True)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_allocator_random_interleavings(seed):
+    run_program(seed)
+
+
+def test_allocator_eviction_recycles_cached_prefixes():
+    """Filling the pool after a release forces LRU eviction of retained
+    (indexed, refcount-0) blocks, deepest-first, and the evicted prefixes
+    stop matching."""
+    a = BlockAllocator(5, 2, prefix_cache=True)       # 4 usable
+    seq = np.array([1, 1, 2, 2, 1, 2], np.int32)
+    chain = a.alloc_chain(0, 3)
+    a.commit_prefix(0, seq)
+    a.release(0)
+    assert a.cached_blocks == 3                       # retained, not freed
+    assert a.match_prefix(seq) == chain
+    # one fresh alloc fits without eviction (one plain-free block)
+    b = a.alloc_chain(1, 1)
+    assert a.evictions == 0
+    # the next must evict: tail blocks (deepest prefix) go first
+    c = a.alloc_chain(2, 2)
+    assert a.evictions == 2
+    assert set(c) == set(chain[1:])                   # recycled tail blocks
+    assert a.match_prefix(seq) == chain[:1]           # root still matches
+    a.release(1)
+    a.release(2)
+    assert a.free_blocks == a.usable_blocks
+
+
+def test_allocator_cow_preserves_shared_chain():
+    """CoW swaps a private copy into one chain only; the other holder and
+    the index keep the original block."""
+    a = BlockAllocator(6, 2, prefix_cache=True)
+    seq = np.array([0, 1, 0, 2], np.int32)
+    c0 = a.alloc_chain(0, 2)
+    a.commit_prefix(0, seq)
+    shared = a.match_prefix(seq)
+    assert shared == c0
+    c1 = a.alloc_chain(1, 0, shared=shared)
+    assert a.refcount(c0[0]) == 2
+    old, new = a.cow(1, 1)
+    assert old == c0[1] and new not in c0
+    assert a.chain(0) == tuple(c0)                    # untouched
+    assert a.chain(1) == (c0[0], new)
+    assert a.refcount(old) == 1 and a.refcount(new) == 1
+    assert a.match_prefix(seq) == c0                  # index keeps original
+    assert a.cow_copies == 1
+
+
+def test_allocator_rejects_null_in_shared():
+    a = BlockAllocator(4, 2, prefix_cache=True)
+    with pytest.raises(ValueError, match="null block"):
+        a.alloc_chain(0, 1, shared=[NULL_BLOCK])

@@ -227,3 +227,105 @@ def test_discover_batch_axes_rejects_ambiguous():
         return {"x": jnp.zeros((4, 4))}          # batch never appears
     with pytest.raises(ValueError):
         discover_batch_axes(bad, 8)
+
+
+# ----------------------------------------------------------------------
+# top-p (nucleus) sampling
+# ----------------------------------------------------------------------
+def test_nucleus_mask_keeps_smallest_covering_set():
+    from repro.serve.sampling import nucleus_mask
+    probs = jnp.array([[0.5, 0.3, 0.15, 0.05]])       # sorted descending
+    assert np.asarray(nucleus_mask(probs, 0.4)).tolist() == [[True, False,
+                                                              False, False]]
+    assert np.asarray(nucleus_mask(probs, 0.5 + 1e-6)).tolist() == \
+        [[True, True, False, False]]
+    assert np.asarray(nucleus_mask(probs, 0.91)).tolist() == \
+        [[True, True, True, False]]
+    assert np.asarray(nucleus_mask(probs, 1.0)).all()
+    # the top token survives even a tiny top_p
+    assert np.asarray(nucleus_mask(probs, 1e-9))[0, 0]
+
+
+def test_top_p_restricts_support_and_matches_renormalized_probs():
+    from repro.serve.sampling import sample_tokens
+    # softmax of these logits ~ [0.64, 0.24, 0.09, 0.03, ...]: top_p=0.7
+    # keeps exactly tokens {0, 1}
+    logits = jnp.array([[4.0, 3.0, 2.0, 1.0, 0.0, -50.0]])
+    draws = np.array([
+        int(sample_tokens(logits, jax.random.PRNGKey(i), temperature=1.0,
+                          top_p=0.7)[0]) for i in range(300)])
+    assert set(draws) == {0, 1}
+    # renormalized within the nucleus: P(0)/P(1) = e
+    frac0 = (draws == 0).mean()
+    assert 0.62 < frac0 < 0.84                        # e/(1+e) ~ 0.73
+    # a tiny nucleus degenerates to greedy
+    draws1 = {int(sample_tokens(logits, jax.random.PRNGKey(i),
+                                temperature=1.0, top_p=1e-9)[0])
+              for i in range(20)}
+    assert draws1 == {0}
+
+
+def test_top_p_one_is_draw_exact_with_plain_sampling():
+    """top_p=1.0 bypasses the nucleus path entirely: identical draws to
+    the pre-top-p sampler for the same key, with and without top_k."""
+    from repro.serve.sampling import sample_tokens
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(size=(4, 32)).astype(np.float32))
+    for k in (0, 5):
+        for i in range(10):
+            key = jax.random.PRNGKey(i)
+            a = sample_tokens(logits, key, temperature=0.8, top_k=k)
+            b = sample_tokens(logits, key, temperature=0.8, top_k=k,
+                              top_p=1.0)
+            assert (np.asarray(a) == np.asarray(b)).all()
+    # and temperature=0 stays greedy regardless of top_p
+    g = sample_tokens(logits, jax.random.PRNGKey(0), temperature=0.0,
+                      top_p=0.3)
+    assert (np.asarray(g) == np.asarray(logits).argmax(-1)).all()
+
+
+def test_sample_np_top_p_matches_jit_semantics():
+    from repro.serve.sampling import sample_np
+    logits = np.array([4.0, 3.0, 2.0, 1.0, 0.0, -50.0])
+    rng = np.random.default_rng(1)
+    draws = np.array([sample_np(logits, rng, temperature=1.0, top_p=0.7)
+                      for _ in range(300)])
+    assert set(draws) == {0, 1}
+    assert 0.62 < (draws == 0).mean() < 0.84
+    # top_p=1.0 is draw-exact with the legacy path (same rng stream)
+    a = [sample_np(logits, np.random.default_rng(2), temperature=0.9,
+                   top_k=3) for _ in range(5)]
+    b = [sample_np(logits, np.random.default_rng(2), temperature=0.9,
+                   top_k=3, top_p=1.0) for _ in range(5)]
+    assert a == b
+    # nucleus composes inside the top-k candidates
+    d = {sample_np(logits, rng, temperature=1.0, top_k=4, top_p=0.7)
+         for _ in range(100)}
+    assert d == {0, 1}
+    assert sample_np(logits, rng, temperature=1.0, top_p=1e-9) == 0
+
+
+def test_engine_config_validates_top_p():
+    from repro.serve import EngineConfig
+    with pytest.raises(ValueError, match="top_p"):
+        EngineConfig(top_p=0.0)
+    with pytest.raises(ValueError, match="top_p"):
+        EngineConfig(top_p=1.5)
+    EngineConfig(top_p=0.9)                           # fine
+
+
+def test_poisson_requests_shared_prefix():
+    reqs = poisson_requests(5, rate=0.0, vocab_size=64, prompt_len=12,
+                            max_new_tokens=4, seed=0, shared_prefix_len=8,
+                            prompt_len_range=(6, 12))
+    ref = max(reqs, key=lambda r: r.prompt_len).tokens
+    for r in reqs:
+        k = min(8, r.prompt_len)
+        assert (r.tokens[:k] == ref[:k]).all()
+    # fixed-length batch: prefixes identical, tails still differ somewhere
+    full = poisson_requests(5, rate=0.0, vocab_size=64, prompt_len=12,
+                            max_new_tokens=4, seed=1, shared_prefix_len=8)
+    for r in full[1:]:
+        assert (r.tokens[:8] == full[0].tokens[:8]).all()
+    assert any((a.tokens[8:] != b.tokens[8:]).any()
+               for a in full for b in full if a.rid != b.rid)

@@ -229,15 +229,31 @@ def test_paged_outlives_slab_at_equal_memory():
 
 def test_paged_rejects_window_clamped_cache():
     """A pure-SWA model whose window clamps the cache below the logical
-    length cannot be paged (ring-buffer eviction) — rejected up front."""
+    length cannot be paged (ring-buffer eviction) — engine_config_for
+    rejects the shapes with an actionable error, and a hand-built config
+    that sneaks past it is still structurally rejected by the engine."""
+    from repro.serve import EngineConfig
     cfg = TINY.replace(sliding_window=8)
     model, params = _model(cfg, 1, 16)
+    # max_seq_len 16+8=24 > window 8 -> leaf clamped -> not pageable
+    with pytest.raises(ValueError, match="sliding window"):
+        engine_config_for(cfg, max_slots=1, prompt_len=8,
+                          max_new_tokens=16, prefill_chunk=8,
+                          paged=True, kv_block_size=4)
     with pytest.raises(NotImplementedError, match="pageable"):
-        # max_seq_len 16+8=24 > window 8 -> leaf clamped -> not pageable
         ServeEngine(model, params,
-                    engine_config_for(cfg, max_slots=1, prompt_len=8,
-                                      max_new_tokens=16, prefill_chunk=8,
-                                      paged=True, kv_block_size=4))
+                    EngineConfig(max_slots=1, max_seq_len=24,
+                                 prefill_chunk=8, paged=True,
+                                 kv_block_size=4))
+    # prefix sharing pads one extra chunk: shapes that fit a window
+    # without sharing are rejected with it, up front
+    cfg64 = TINY.replace(sliding_window=64)
+    engine_config_for(cfg64, max_slots=1, prompt_len=56, max_new_tokens=8,
+                      prefill_chunk=8, paged=True, kv_block_size=4)
+    with pytest.raises(ValueError, match="extra prefill chunk"):
+        engine_config_for(cfg64, max_slots=1, prompt_len=56,
+                          max_new_tokens=8, prefill_chunk=8, paged=True,
+                          kv_block_size=4, prefix_sharing=True)
 
 
 def test_paged_mixed_lengths_decode_together():

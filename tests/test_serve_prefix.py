@@ -1,0 +1,278 @@
+"""Prefix-sharing KV cache tests: cache hits skip prefill, streams stay
+token-exact with sharing on vs off (including under preemption, LRU
+eviction, and EOS at a block boundary), shared blocks survive a holder's
+preemption, copy-on-write fires on full-prompt hits and on shared decode
+write targets, and the jit caches stay at one entry each."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.models.model import build_model
+from repro.serve import (EngineConfig, Request, ServeEngine, VirtualClock,
+                         engine_config_for, poisson_requests)
+
+from _serve_helpers import captured_run
+
+TINY = ModelConfig(name="tiny", family="dense", num_layers=2, d_model=32,
+                   num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=64,
+                   head_dim=16, dtype="float32")
+
+
+def _model(cfg, batch, seq_len):
+    m = build_model(cfg, ParallelConfig(attn_chunk=8, loss_chunk=8),
+                    batch=batch, seq_len=seq_len)
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+def _engine(model, params, *, slots, prompt_len, max_new, chunk, **kw):
+    ecfg = engine_config_for(model.cfg, max_slots=slots,
+                             prompt_len=prompt_len, max_new_tokens=max_new,
+                             prefill_chunk=chunk, paged=True,
+                             kv_block_size=4, **kw)
+    return ServeEngine(model, params, ecfg, clock=VirtualClock(0.1))
+
+
+def test_prefix_sharing_requires_paged():
+    with pytest.raises(ValueError, match="prefix_sharing"):
+        EngineConfig(prefix_sharing=True, paged=False)
+    EngineConfig(prefix_sharing=True, paged=True)     # fine
+
+
+def test_prefix_hit_skips_prefill_across_windows():
+    """A repeated prompt re-served from the cache prefills only its
+    uncached tail, and the greedy stream is unchanged."""
+    L, gen = 14, 5                                    # 14 % 4 != 0: partial
+    model, params = _model(TINY, 1, L)
+    eng = _engine(model, params, slots=1, prompt_len=L, max_new=gen,
+                  chunk=4, prefix_sharing=True)
+    rng = np.random.default_rng(0)
+    p = rng.integers(0, TINY.vocab_size, (L,)).astype(np.int32)
+    out1, rep1 = captured_run(eng, [Request(rid=0, tokens=p.copy(),
+                                            max_new_tokens=gen)])
+    assert rep1["prefix_hit_rate"] == 0.0             # cold cache
+    assert rep1["prefill_chunks"] == 4                # ceil(14 / 4)
+    eng.reset_metrics()
+    out2, rep2 = captured_run(eng, [Request(rid=1, tokens=p.copy(),
+                                            max_new_tokens=gen)])
+    # longest block-aligned prefix: 12 of 14 prompt tokens
+    assert rep2["prefix_hit_rate"] == pytest.approx(12 / 14)
+    assert rep2["requests"][0]["cached_prefix_tokens"] == 12
+    assert rep2["prefill_chunks"] == 1                # tail chunk only
+    assert out2[1] == out1[0]
+    assert eng._alloc.blocks_in_use == 0              # all chains released
+
+
+def test_cow_on_full_prompt_hit():
+    """A block-aligned prompt served entirely from the cache still needs
+    its last position's logits: the recompute write lands in the final
+    shared block, which is CoW'd — and the stream stays exact."""
+    L, gen = 16, 5                                    # 16 % 4 == 0: full hit
+    model, params = _model(TINY, 1, L)
+    rng = np.random.default_rng(1)
+    p = rng.integers(0, TINY.vocab_size, (L,)).astype(np.int32)
+
+    def mk(rid):
+        return Request(rid=rid, tokens=p.copy(), max_new_tokens=gen)
+
+    eng = _engine(model, params, slots=1, prompt_len=L, max_new=gen,
+                  chunk=4, prefix_sharing=True)
+    out1, _ = captured_run(eng, [mk(0)])
+    eng.reset_metrics()
+    out2, rep2 = captured_run(eng, [mk(1)])
+    assert rep2["cow_copies"] == 1
+    assert rep2["requests"][0]["cached_prefix_tokens"] == L - 1
+    assert rep2["prefill_chunks"] == 1                # one-token recompute
+    assert out2[1] == out1[0]
+
+
+def test_differential_sharing_on_off():
+    """Token-for-token identical greedy outputs with prefix sharing on vs
+    off over a trace mixing shared prefixes (block-aligned and not),
+    identical full prompts, mixed lengths, a block budget tight enough to
+    preempt, and requests finishing exactly on a block boundary."""
+    gen, bs = 6, 4
+    max_prompt = 16
+    model, params = _model(TINY, 3, max_prompt)
+    rng = np.random.default_rng(2)
+    prefix = rng.integers(0, TINY.vocab_size, (12,)).astype(np.int32)
+    full = rng.integers(0, TINY.vocab_size, (16,)).astype(np.int32)
+    short = rng.integers(0, TINY.vocab_size, (7,)).astype(np.int32)
+
+    def mk():
+        reqs = []
+        # shared 12-token prefix, tails of varying (non-)alignment
+        for i, plen in enumerate([16, 14, 13]):
+            t = np.concatenate(
+                [prefix, np.arange(i, i + plen - 12, dtype=np.int32)])
+            reqs.append(Request(rid=i, tokens=t, max_new_tokens=gen))
+        # identical full prompts (full-hit CoW path); 16 + 6 is not a
+        # block boundary, 16 + 4 is — rid 4 finishes exactly on one
+        reqs.append(Request(rid=3, tokens=full.copy(), max_new_tokens=gen))
+        reqs.append(Request(rid=4, tokens=full.copy(), max_new_tokens=4))
+        # an unrelated short prompt
+        reqs.append(Request(rid=5, tokens=short.copy(), max_new_tokens=gen))
+        return reqs
+
+    reqs_a, reqs_b = mk(), mk()
+    for ra, rb in zip(reqs_a, reqs_b):
+        assert (ra.tokens == rb.tokens).all()
+
+    def run(sharing, reqs):
+        eng = _engine(model, params, slots=3, prompt_len=max_prompt,
+                      max_new=gen, chunk=4, prefix_sharing=sharing,
+                      num_kv_blocks=9)
+        out, rep = captured_run(eng, reqs)
+        assert eng._alloc.blocks_in_use == 0
+        return out, rep
+
+    out_off, rep_off = run(False, reqs_a)
+    out_on, rep_on = run(True, reqs_b)
+    assert rep_on["preemptions"] > 0                  # budget really binds
+    assert rep_on["prefix_hit_rate"] > 0
+    for rid in out_off:
+        assert out_on[rid] == out_off[rid], rid
+
+
+def test_eos_id_finish_at_block_boundary():
+    """An eos_id learned from a solo run, placed so the request finishes
+    exactly when its write fills a block: commit/release ordering at the
+    boundary must not corrupt later cache hits."""
+    L, bs = 8, 4
+    model, params = _model(TINY, 1, L)
+    rng = np.random.default_rng(3)
+    p = rng.integers(0, TINY.vocab_size, (L,)).astype(np.int32)
+    solo = _engine(model, params, slots=1, prompt_len=L, max_new=8, chunk=4,
+                   prefix_sharing=True)
+    out, _ = captured_run(solo, [Request(rid=0, tokens=p.copy(),
+                                         max_new_tokens=8)])
+    # pos after appending out[k] is L + k + 1; k = 3 lands on 12 % 4 == 0
+    eos = out[0][3]
+    eng = _engine(model, params, slots=1, prompt_len=L, max_new=8, chunk=4,
+                  prefix_sharing=True)
+    out1, _ = captured_run(eng, [Request(rid=1, tokens=p.copy(),
+                                         max_new_tokens=8, eos_id=eos)])
+    assert out1[1] == out[0][:4]                      # stopped at the eos
+    eng.reset_metrics()
+    # the boundary-finished sequence's blocks were retained: a rerun of the
+    # same prompt hits the cache and still matches
+    out2, rep2 = captured_run(eng, [Request(rid=2, tokens=p.copy(),
+                                            max_new_tokens=8, eos_id=eos)])
+    assert rep2["prefix_hit_rate"] > 0
+    assert out2[2] == out1[1]
+
+
+def test_preemption_keeps_shared_blocks_alive():
+    """Preempting a request must only free blocks no other chain holds;
+    recompute-on-resume re-matches the cached prefix (satellite: preemption
+    x sharing)."""
+    L, gen = 8, 8
+    model, params = _model(TINY, 3, L)
+    rng = np.random.default_rng(4)
+    prefix = rng.integers(0, TINY.vocab_size, (8,)).astype(np.int32)
+
+    def mk():
+        out = []
+        for i in range(5):
+            t = prefix.copy()
+            if i:                   # same 8-token prompt except last token
+                t[-1] = (t[-1] + i) % TINY.vocab_size
+            out.append(Request(rid=i, tokens=t, max_new_tokens=gen))
+        return out
+
+    solo = _engine(model, params, slots=1, prompt_len=L, max_new=gen,
+                   chunk=4)
+    out_ref, _ = captured_run(solo, mk())
+    # 8 usable blocks for 3 slots of worst-case 4 blocks: forced preemption
+    eng = _engine(model, params, slots=3, prompt_len=L, max_new=gen,
+                  chunk=4, prefix_sharing=True, num_kv_blocks=8)
+    out, rep = captured_run(eng, mk())
+    assert rep["preemptions"] > 0
+    assert rep["resume_cached_tokens"] > 0            # resume re-matched
+    for rid in out_ref:
+        assert out[rid] == out_ref[rid], rid
+    assert eng._alloc.blocks_in_use == 0              # nothing leaked
+
+
+def test_decode_cow_guard_on_shared_write_target():
+    """If the block a decode step would write into is shared, the engine
+    gives the writer a private copy first (copy-on-write guard) and the
+    stream is unchanged."""
+    L, gen = 6, 6                       # pos = 6 lands inside block 1
+    model, params = _model(TINY, 1, L)
+    rng = np.random.default_rng(5)
+    p = rng.integers(0, TINY.vocab_size, (L,)).astype(np.int32)
+
+    def mk(rid):
+        return Request(rid=rid, tokens=p.copy(), max_new_tokens=gen)
+
+    solo = _engine(model, params, slots=1, prompt_len=L, max_new=gen,
+                   chunk=3, prefix_sharing=True)
+    out_ref, _ = captured_run(solo, [mk(0)])
+
+    eng = _engine(model, params, slots=1, prompt_len=L, max_new=gen,
+                  chunk=3, prefix_sharing=True)
+    outputs = {}
+    orig = eng._finish
+    eng._finish = lambda st, now: (outputs.setdefault(st.req.rid,
+                                                      list(st.output)),
+                                   orig(st, now))
+    eng.submit(mk(1))
+    while not eng.active.any():
+        eng.step()
+    # another chain adopts the partially-filled block decode writes into
+    blk = eng._alloc.chain(1)[eng.pos[0] // 4]
+    eng._alloc.alloc_chain(999, 0, shared=[blk])
+    assert eng._alloc.refcount(blk) == 2
+    while eng.has_work():
+        eng.step()
+    assert eng.report()["cow_copies"] >= 1            # guard fired
+    assert eng._alloc.chain(999) == (blk,)            # holder untouched
+    assert outputs[1] == out_ref[0]
+
+
+def test_lru_eviction_under_pressure_stays_exact():
+    """More distinct prompts than the pool can cache: cold prefixes are
+    evicted, allocation never deadlocks, streams match the no-sharing
+    run."""
+    L, gen = 8, 4
+    model, params = _model(TINY, 2, L)
+
+    def mk():
+        return poisson_requests(10, rate=0.0, vocab_size=TINY.vocab_size,
+                                prompt_len=L, max_new_tokens=gen, seed=6)
+
+    def run(sharing):
+        eng = _engine(model, params, slots=2, prompt_len=L, max_new=gen,
+                      chunk=4, prefix_sharing=sharing, num_kv_blocks=8)
+        out, rep = captured_run(eng, mk())
+        return out, rep
+
+    out_off, _ = run(False)
+    out_on, rep_on = run(True)
+    assert rep_on["evictions"] > 0
+    for rid in out_off:
+        assert out_on[rid] == out_off[rid], rid
+
+
+def test_sharing_jit_entries_stable():
+    """Admission off cache hits, CoW, eviction, and slot recycling never
+    add a jit entry: one compilation per function, including the prefix
+    gather and the CoW block copy."""
+    L, gen = 8, 4
+    model, params = _model(TINY, 2, L)
+    eng = _engine(model, params, slots=2, prompt_len=L, max_new=gen,
+                  chunk=4, prefix_sharing=True)
+    eng.warmup()
+    reqs = poisson_requests(6, rate=0.0, vocab_size=TINY.vocab_size,
+                            prompt_len=L, max_new_tokens=gen, seed=7,
+                            shared_prefix_len=L)
+    rep = eng.run(reqs)
+    assert rep["n_requests"] == 6
+    assert rep["prefix_hit_rate"] > 0
+    assert rep["cow_copies"] > 0                      # full-hit CoW ran live
+    assert rep["jit_entries"] == {
+        "prefill_chunk": 1, "decode": 1, "write_blocks": 1,
+        "gather_prefix": 1, "copy_block": 1}, rep["jit_entries"]
+    assert rep["recompiled_after_warmup"] is False
+    assert rep["engine"]["prefix_sharing"] is True
