@@ -17,15 +17,23 @@ machine-readable ``BENCH_serve.json``:
   full prompts) through the paged engine with prefix sharing on vs off at
   the same block budget: sharing serves the common prefix out of the
   copy-on-write block cache, cutting prefill chunks and TTFT p50, with
-  ``prefix_hit_rate``/``cow_copies`` reported per cell.
+  ``prefix_hit_rate``/``cow_copies`` reported per cell;
+* ``decode_attention`` — microbench of the per-step decode-attention
+  primitive, reference block-table gather vs the fused Pallas kernel,
+  sweeping the active sequence length against ``L_max``: the reference
+  materializes every row's full ``[L_max]`` logical K/V view regardless
+  of actual length (constant bytes), the fused kernel touches only the
+  valid blocks (bytes scale with the active length).
 
   PYTHONPATH=src python benchmarks/serve_load.py [--out BENCH_serve.json]
 """
 import argparse
+import functools
 import json
 import os
 import platform
 import sys
+import time
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=2")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -33,6 +41,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import dataclasses                                            # noqa: E402
 
 import jax                                                    # noqa: E402
+import jax.numpy as jnp                                       # noqa: E402
+import numpy as np                                            # noqa: E402
 
 from repro.configs import get_config                          # noqa: E402
 from repro.configs.base import ParallelConfig                 # noqa: E402
@@ -234,6 +244,81 @@ def prefix_compare():
     return cells, reductions, faster
 
 
+def decode_attention_microbench():
+    """Reference gather vs fused kernel, active length swept against L_max.
+
+    The reference (``paged_decode_attention``) gathers each row's full
+    ``[L_max, Hkv, hd]`` logical K/V view and repeats KV heads per q head
+    every decode step, so its memory traffic is constant in the actual
+    sequence length; the fused kernel walks the block table inside the
+    kernel and reads only ``ceil(active / block_size)`` blocks per row.
+    Off-TPU the kernel runs in interpret mode, so its absolute wall time
+    is not meaningful there — the theoretical bytes columns (and the
+    reference timings) carry the comparison; on TPU both time columns are
+    real.  Every cell also cross-checks parity (``max_abs_err``).
+    """
+    from repro.kernels.paged_attention.ops import paged_attention
+    from repro.models.attention import paged_decode_attention
+
+    B, Hkv, rep, hd, bs = 4, 2, 4, 64, 16
+    l_max = 512
+    n_logical = l_max // bs
+    num_blocks = 1 + B * n_logical
+    P = num_blocks * bs
+    key = jax.random.PRNGKey(0)
+    k_pool = jax.random.normal(jax.random.fold_in(key, 1), (1, P, Hkv, hd))
+    v_pool = jax.random.normal(jax.random.fold_in(key, 2), (1, P, Hkv, hd))
+    q = jax.random.normal(jax.random.fold_in(key, 3), (B, 1, Hkv * rep, hd))
+    interpret = jax.default_backend() != "tpu"
+    ref_fn = jax.jit(functools.partial(paged_decode_attention,
+                                       block_size=bs))
+    fused_fn = jax.jit(functools.partial(paged_attention, block_size=bs,
+                                         interpret=interpret))
+    perm = np.random.default_rng(0).permutation(np.arange(1, num_blocks))
+
+    def timed(fn, bt, cl, iters):
+        out = fn(q, k_pool, v_pool, bt, cl)
+        jax.block_until_ready(out)                    # compile + warm
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(q, k_pool, v_pool, bt, cl)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / iters * 1e3, np.asarray(
+            out, np.float32)
+
+    cells = []
+    for active in (32, 128, 512):
+        bt = np.zeros((B, n_logical), np.int32)
+        i = 0
+        for b in range(B):                            # rest stay null
+            nv = active // bs
+            bt[b, :nv] = perm[i:i + nv]
+            i += nv
+        btj = jnp.asarray(bt)
+        cl = jnp.full((B,), active, jnp.int32)
+        ref_ms, ref_out = timed(ref_fn, btj, cl, iters=30)
+        fused_ms, fused_out = timed(fused_fn, btj, cl, iters=5)
+        leaf_bytes = 2 * Hkv * hd * 4                 # K+V, f32
+        cell = {
+            "active_len": active, "l_max": l_max,
+            "gather_ref_ms": ref_ms, "fused_ms": fused_ms,
+            "gather_ref_bytes": B * l_max * leaf_bytes,
+            "fused_bytes": B * active * leaf_bytes,
+            "max_abs_err": float(np.abs(ref_out - fused_out).max()),
+        }
+        cells.append(cell)
+        print(f"[bench] decode_attn active={active:4d}/{l_max} "
+              f"gather_ref={ref_ms:7.3f}ms ({cell['gather_ref_bytes']:>9d} B)"
+              f"  fused={fused_ms:7.3f}ms ({cell['fused_bytes']:>9d} B)  "
+              f"err={cell['max_abs_err']:.2e}")
+    return {
+        "shape": {"batch": B, "kv_heads": Hkv, "gqa_rep": rep, "head_dim": hd,
+                  "block_size": bs, "l_max": l_max},
+        "fused_interpret_mode": interpret,
+        "cells": cells,
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default=os.path.join(
@@ -243,6 +328,7 @@ def main():
     results = sweep()
     capacity, gains, more = capacity_compare()
     prefix_cells, reductions, faster = prefix_compare()
+    decode_attn = decode_attention_microbench()
 
     out = {
         "meta": {
@@ -268,12 +354,14 @@ def main():
             "ttft_p50_reduction_ms": reductions,
             "sharing_faster": faster,
         },
+        "decode_attention": decode_attn,
     }
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
     print(f"[bench] wrote {os.path.abspath(args.out)} "
           f"({len(results)} sweep + {len(capacity)} capacity + "
-          f"{len(prefix_cells)} prefix cells)")
+          f"{len(prefix_cells)} prefix + "
+          f"{len(decode_attn['cells'])} decode-attention cells)")
 
 
 if __name__ == "__main__":

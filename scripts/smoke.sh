@@ -19,6 +19,15 @@ python -m repro.launch.serve --arch mixtral-8x7b --reduced --model-par 2 \
     --skew 0.9 --prompt-len 32 --gen 8 --requests 6 --rate 20 \
     --paged --kv-block-size 8 --temperature 0.7 --top-k 20
 
+echo "== 2-device CPU serve smoke (paged KV + fused Pallas decode attention) =="
+# --fused-attention: the paged-attention kernel runs in interpret mode on
+# CPU; greedy decode here must match the gather-reference cell token-wise
+XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+python -m repro.launch.serve --arch mixtral-8x7b --reduced --model-par 2 \
+    --skew 0.9 --prompt-len 32 --gen 8 --requests 6 --rate 20 \
+    --paged --kv-block-size 8 --fused-attention
+
 echo "== 2-device CPU serve smoke (prefix-sharing KV cache + top-p) =="
 # --prefill-chunk 16: sharing pads the logical pool by one extra chunk,
 # which must still fit the reduced model's 64-token sliding window

@@ -1,3 +1,6 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+# Shipped triads (see README.md): flash_attention (prefill/train),
+# paged_attention (serve decode through the paged KV pool), moe_gmm
+# (grouped expert FFN).

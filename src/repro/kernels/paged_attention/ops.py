@@ -1,0 +1,38 @@
+"""Jitted wrapper used by models/attention.py (layout adaptation)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.paged_attention import \
+    paged_attention_kernel
+
+
+def paged_attention(q: jnp.ndarray, k_pool: jnp.ndarray, v_pool: jnp.ndarray,
+                    block_table: jnp.ndarray, cache_len: jnp.ndarray, *,
+                    block_size: int, softcap: float = 0.0,
+                    interpret: bool = False) -> jnp.ndarray:
+    """Model-layout entry: q [B, 1, H, hd]; k_pool/v_pool [1, P, Hkv, hd]
+    *physical* pools with P = num_blocks * block_size (the serve engine's
+    paged cache leaves); block_table [B, n_blocks] int32; cache_len scalar
+    or per-row [B] -> [B, 1, H, hd].
+
+    The pool's KV axis is viewed as [num_blocks, block_size] (pure
+    reshape, no copy) and q as [B, Hkv, rep, hd] (q head h = g * rep + r,
+    the ``_repeat_kv`` head order), so the kernel can index whole physical
+    blocks and handle GQA in its index maps.
+    """
+    B, _, H, hd = q.shape
+    P, Hkv = k_pool.shape[1], k_pool.shape[2]
+    rep = H // Hkv
+    num_blocks = P // block_size
+    assert num_blocks * block_size == P, (P, block_size)
+    qk = q[:, 0].reshape(B, Hkv, rep, hd)
+    kp = k_pool[0].reshape(num_blocks, block_size, Hkv, hd)
+    vp = v_pool[0].reshape(num_blocks, block_size, Hkv, hd)
+    cl = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32).reshape(-1),
+                          (B,))
+    out = paged_attention_kernel(qk, kp, vp,
+                                 jnp.asarray(block_table, jnp.int32), cl,
+                                 block_size=block_size, softcap=softcap,
+                                 interpret=interpret)
+    return out.reshape(B, 1, H, hd)

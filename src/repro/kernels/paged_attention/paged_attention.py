@@ -1,0 +1,124 @@
+"""Pallas TPU kernel: paged decode attention (fused block-table gather).
+
+One query token per row attends over that row's KV block chain *through
+the block table inside the kernel*: grid (batch, kv_heads, kv block
+tiles); the [B, n_blocks] block table and the [B] valid lengths ride in
+as scalar-prefetch operands, so tile j of row b fetches physical block
+``block_table[b, j]`` straight out of the pool in the K/V BlockSpec
+index_map — the [B, L_max] logical index gather and the per-q-head K/V
+repeat of the XLA reference (``models.attention.paged_decode_attention``)
+never materialize. Running (m, l, acc) live in VMEM scratch across the
+tile dimension (online softmax); tiles at or past a row's valid length
+are skipped with @pl.when (no MXU work — and their pipeline fetch still
+lands on a real block id, because unallocated table entries point at the
+null block, so there is no out-of-bounds traffic either). GQA is handled
+in the q/out index maps like the flash kernel: q is viewed
+[B, Hkv, rep, hd] and each (b, g) program computes all ``rep`` q heads
+of kv head g, so K/V are never repeated.
+
+VMEM budget per step (block_size=16, hd=128, rep=8, bf16):
+q/out 4 kB + k/v 2x4 kB + acc/l/m f32 ~4.2 kB — far under 16 MB, so the
+pipeline double-buffers block fetches freely; per-step compute is one
+[rep, hd] x [hd, bs] and one [rep, bs] x [bs, hd] MXU pass.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.compat import tpu_compiler_params as _tpu_compiler_params
+
+_NEG_INF = -1e30
+
+
+def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+            acc_ref, *, block_size: int, n_blocks: int, softcap: float,
+            scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+
+    # ragged lengths / null-block tail: tiles with no valid position are
+    # skipped entirely (no MXU work, no softmax update)
+    @pl.when(j * block_size < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # [rep, hd]
+        k = k_ref[0, :, 0].astype(jnp.float32)             # [bs, hd]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        kv_pos = j * block_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(kv_pos < length, s, _NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = (acc_ref[...] * corr
+                        + jnp.dot(p.astype(v_ref.dtype), v_ref[0, :, 0],
+                                  preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(j == n_blocks - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_attention_kernel(q: jnp.ndarray, k_pool: jnp.ndarray,
+                           v_pool: jnp.ndarray, block_table: jnp.ndarray,
+                           cache_len: jnp.ndarray, *, block_size: int,
+                           softcap: float = 0.0,
+                           interpret: bool = False) -> jnp.ndarray:
+    """q: [B, Hkv, rep, hd]; k_pool/v_pool: [num_blocks, block_size, Hkv,
+    hd]; block_table: [B, n_blocks] int32 (entries past a row's chain must
+    point at a valid physical block — the pool's null-block convention);
+    cache_len: [B] int32 valid lengths -> [B, Hkv, rep, hd]."""
+    B, Hkv, rep, hd = q.shape
+    n_blocks = block_table.shape[1]
+    assert k_pool.shape[1] == block_size and k_pool.shape[2] == Hkv
+    scale = hd ** -0.5
+    grid = (B, Hkv, n_blocks)
+
+    def q_index(b, g, j, bt, cl):
+        return (b, g, 0, 0)
+
+    def kv_index(b, g, j, bt, cl):
+        return (bt[b, j], 0, g, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2, grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, hd), q_index),
+            pl.BlockSpec((1, block_size, 1, hd), kv_index),
+            pl.BlockSpec((1, block_size, 1, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, hd), q_index),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, hd), jnp.float32),
+        ])
+    fn = pl.pallas_call(
+        functools.partial(_kernel, block_size=block_size, n_blocks=n_blocks,
+                          softcap=softcap, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, rep, hd), q.dtype),
+        compiler_params=_tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret)
+    return fn(block_table.astype(jnp.int32), cache_len.astype(jnp.int32),
+              q, k_pool, v_pool)

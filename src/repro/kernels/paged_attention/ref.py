@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for the paged decode-attention kernel.
+
+Deliberately does what the kernel avoids: gathers each row's full
+[L_max, Hkv, hd] logical K/V view through its block-table row, repeats KV
+heads to the q-head count, and runs a masked softmax over the whole
+logical range — the reference semantics the fused kernel must match
+bit-for-tolerance (it mirrors ``models.attention.paged_decode_attention``,
+which the parity tests also compare against).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def paged_attention_ref(q: jnp.ndarray, k_pool: jnp.ndarray,
+                        v_pool: jnp.ndarray, block_table: jnp.ndarray,
+                        cache_len: jnp.ndarray, *, block_size: int,
+                        softcap: float = 0.0) -> jnp.ndarray:
+    """Same layout contract as ``ops.paged_attention``: q [B, 1, H, hd];
+    k_pool/v_pool [1, P, Hkv, hd] physical pools; block_table
+    [B, n_blocks]; cache_len scalar or [B] -> [B, 1, H, hd]."""
+    B, _, H, hd = q.shape
+    Hkv = k_pool.shape[2]
+    rep = H // Hkv
+    n_blocks = block_table.shape[1]
+    log = jnp.arange(n_blocks * block_size)
+    phys = block_table[:, log // block_size] * block_size + log % block_size
+    k = k_pool[0, phys]                                 # [B, L_max, Hkv, hd]
+    v = v_pool[0, phys]
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qf = (q.astype(jnp.float32) * hd ** -0.5)[:, 0]     # [B, H, hd]
+    s = jnp.einsum("bhd,bkhd->bhk", qf, k.astype(jnp.float32))
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    cl = jnp.broadcast_to(jnp.asarray(cache_len).reshape(-1), (B,))
+    mask = log[None, :] < cl[:, None]
+    s = jnp.where(mask[:, None, :], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhk,bkhd->bhd", p, v.astype(jnp.float32))
+    return out[:, None].astype(q.dtype)

@@ -12,8 +12,10 @@ earlier requests finish. ``--paged`` swaps the slab KV pool for the paged
 block-table pool (block-aware admission, preemption-by-recompute);
 ``--paged --prefix-sharing`` additionally serves repeated prompt prefixes
 out of a copy-on-write block cache (``--shared-prefix-len`` makes the
-synthetic prompts actually share one); ``--temperature``/``--top-k``/
-``--top-p`` switch greedy decode to truncated sampling.
+synthetic prompts actually share one); ``--paged --fused-attention`` swaps
+the reference block-table gather for the fused Pallas decode-attention
+kernel; ``--temperature``/``--top-k``/``--top-p`` switch greedy decode to
+truncated sampling.
 Reports per-request TTFT/TPOT percentiles, decode tokens/s, and the
 HarMoEny schedule diagnostics (moved units, drops, load balance) — the
 paper's §5 metrics.
@@ -71,6 +73,7 @@ def build_serving_engine(args, cfg=None, *, prompt_len=None, gen=None):
         skew_seed=args.seed + 1, paged=args.paged,
         kv_block_size=args.kv_block_size, num_kv_blocks=args.kv_blocks,
         prefix_sharing=args.prefix_sharing,
+        fused_paged_attention=args.fused_attention,
         temperature=args.temperature, top_k=args.top_k, top_p=args.top_p)
     engine = ServeEngine(model, params, ecfg, mesh=mesh)
     return cfg, engine
@@ -120,7 +123,8 @@ def serve(args):
               f"x{rep['engine']['kv_block_size']} tokens  "
               f"utilization={util if util is None else f'{util:.2f}'}  "
               f"preemptions={rep['preemptions']}  "
-              f"max_concurrency={rep['max_occupancy']}")
+              f"max_concurrency={rep['max_occupancy']}  "
+              f"fused_attention={rep['engine']['fused_paged_attention']}")
     if args.prefix_sharing:
         hit = rep.get("prefix_hit_rate")
         print(f"[serve] prefix cache: "
@@ -165,6 +169,10 @@ def main():
                     help="tokens per physical KV block (paged mode)")
     ap.add_argument("--kv-blocks", type=int, default=0,
                     help="usable KV blocks (0 = worst case: slab parity)")
+    ap.add_argument("--fused-attention", action="store_true",
+                    help="fused Pallas paged-attention decode kernel: reads "
+                         "K/V block-wise through the block table inside the "
+                         "kernel (needs --paged; interpret mode off-TPU)")
     ap.add_argument("--prefix-sharing", action="store_true",
                     help="prefix-sharing KV cache: copy-on-write blocks, "
                          "radix prefix index, LRU eviction (needs --paged)")

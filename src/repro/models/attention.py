@@ -213,9 +213,13 @@ def attention_block(x: jnp.ndarray, p: Dict[str, jnp.ndarray],
         continuous batching), in which case K/V lands at each row's own slot.
       * paged decode (``block_table`` given): cache is a batch-1 *physical*
         block pool; each row's K/V is written at its block-translated
-        position and attention gathers through the table
-        (``paged_decode_attention``).  Requires window-free attention over
-        the logical range (the serve engine enforces this).
+        position and attention reads through the table — either the
+        reference gather (``paged_decode_attention``) or, with
+        ``use_pallas``, the fused Pallas kernel
+        (``kernels.paged_attention``) that walks the block table inside
+        the kernel and never materializes the logical view.  Requires
+        window-free attention over the logical range (validated here: a
+        binding sliding window raises).
       * chunked-prefill continuation (``continue_prefill``): cache given and
         x is a [B, C] prompt chunk starting at position ``q_offset`` (scalar);
         writes K/V at [q_offset, q_offset + C) and attends over the full
@@ -259,8 +263,15 @@ def attention_block(x: jnp.ndarray, p: Dict[str, jnp.ndarray],
         kw = k[:, :S_max].astype(cache.k.dtype)
         vw = v[:, :S_max].astype(cache.v.dtype)
         if S >= S_max and window > 0 and S_max <= window:
-            kw, vw = k[:, S - S_max:].astype(cache.k.dtype), \
-                v[:, S - S_max:].astype(cache.v.dtype)  # ring: keep the tail
+            # ring: keep the window tail, each position p at its ring slot
+            # p % S_max — decode writes land at (cache_len - 1) % S_max, so
+            # storing the tail flat at [0, S_max) would leave the ring
+            # rotated by S % S_max and decode would evict a mid-window
+            # token instead of the oldest whenever S % S_max != 0
+            kw = jnp.roll(k[:, S - S_max:], S % S_max,
+                          axis=1).astype(cache.k.dtype)
+            vw = jnp.roll(v[:, S - S_max:], S % S_max,
+                          axis=1).astype(cache.v.dtype)
         k_cache = jax.lax.dynamic_update_slice(cache.k, kw, (0, 0, 0, 0))
         v_cache = jax.lax.dynamic_update_slice(cache.v, vw, (0, 0, 0, 0))
         y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
@@ -270,14 +281,33 @@ def attention_block(x: jnp.ndarray, p: Dict[str, jnp.ndarray],
         # block-table row, scatter into the physical pool, gather-attend.
         # Inactive rows (cache_len=1, all-null table) write into the null
         # block — garbage that the validity mask keeps unread.
+        L_max = block_table.shape[1] * block_size
+        if 0 < window < L_max:
+            # both attention paths below attend window-free over the
+            # logical range; a window >= L_max can never mask anything
+            # (q_pos - kv_pos <= L_max - 1), so only a binding window is
+            # an error — refuse it loudly instead of silently dropping it
+            raise NotImplementedError(
+                f"paged decode attends window-free over the logical KV "
+                f"range (up to {L_max} tokens) and cannot express a "
+                f"binding sliding window of {window} < {L_max}; serve "
+                f"sliding-window layers with the slab ring-buffer cache "
+                f"(paged ring buffers are a ROADMAP follow-on)")
         cl = jnp.asarray(cache_len)
         pos = cl - 1
         widx = block_table[jnp.arange(B), pos // block_size] * block_size \
             + pos % block_size
         k_cache = cache.k.at[0, widx].set(k[:, 0].astype(cache.k.dtype))
         v_cache = cache.v.at[0, widx].set(v[:, 0].astype(cache.v.dtype))
-        out = paged_decode_attention(q, k_cache, v_cache, block_table, cl,
-                                     block_size=block_size, softcap=softcap)
+        if use_pallas:
+            from repro.kernels.paged_attention.ops import paged_attention
+            out = paged_attention(q, k_cache, v_cache, block_table, cl,
+                                  block_size=block_size, softcap=softcap,
+                                  interpret=interpret)
+        else:
+            out = paged_decode_attention(q, k_cache, v_cache, block_table,
+                                         cl, block_size=block_size,
+                                         softcap=softcap)
         y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
         return y, AttnCache(k_cache, v_cache)
     if cache is not None:

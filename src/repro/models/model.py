@@ -177,24 +177,25 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
     def _backbone(params, h, *, mode, cache=None, cache_len=None,
                   q_offset=0, spec=None, skew_key=None, enc_out=None,
                   continue_prefill=False, valid_mask=None,
-                  block_table=None, block_size=0):
+                  block_table=None, block_size=0, pcfg_run=None):
+        pc = pcfg_run if pcfg_run is not None else pcfg
         h = constrain(h, mode)
         if block_table is not None and (cfg.family == "hybrid" or is_encdec):
             raise NotImplementedError(
                 "paged KV decode supports plain decoder stacks only")
         if cfg.family == "hybrid":
             h, new_cache, diags = T.run_hybrid(
-                h, params["stack"], cfg, pcfg, mode=mode, cache=cache,
+                h, params["stack"], cfg, pc, mode=mode, cache=cache,
                 cache_len=cache_len, q_offset=q_offset, mesh=mesh,
                 constrain=constrain)
         elif is_encdec:
             h, new_cache, diags = _run_encdec_decoder(
-                h, params, cfg, pcfg, mode=mode, cache=cache,
+                h, params, cfg, pc, mode=mode, cache=cache,
                 cache_len=cache_len, q_offset=q_offset, enc_out=enc_out,
                 constrain=constrain)
         else:
             h, new_cache, diags = T.run_stack(
-                h, params["stack"], cfg, pcfg, mode=mode, cache=cache,
+                h, params["stack"], cfg, pc, mode=mode, cache=cache,
                 cache_len=cache_len, q_offset=q_offset,
                 moe_spec=spec, mesh=mesh, skew_key=skew_key,
                 constrain=constrain, continue_prefill=continue_prefill,
@@ -357,25 +358,35 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
         return logits, out, new_pos, diags
 
     def decode_step(params, token, caches, pos, skew_key=None,
-                    active_mask=None, block_table=None, block_size=0):
+                    active_mask=None, block_table=None, block_size=0,
+                    fused_attention=None):
         """token [B, 1] int32; pos = current length BEFORE appending token
         (scalar, or a per-sequence [B] vector for slotted batches).
         ``active_mask`` [B] bool excludes vacated slots' garbage tokens from
         MoE routing and capacity (their logits are garbage either way).
         ``block_table`` [B, max_blocks_per_slot] switches the cache to a
         paged physical pool (``caches`` from ``init_paged_cache``): K/V
-        writes and attention gathers go through each row's block chain."""
+        writes and attention gathers go through each row's block chain.
+        ``fused_attention`` (static, paged mode only) overrides
+        ``pcfg.use_pallas`` for this step's attention blocks, letting the
+        serve engine opt into the fused paged-attention kernel without
+        rebuilding the model."""
         h = _embed_tokens(params, token, offset=pos)
         new_pos = pos + 1
         vmask = None
         if cfg.is_moe and active_mask is not None:
             vmask = jnp.asarray(active_mask).reshape(-1, 1)    # [B, 1]
+        pcfg_step = None
+        if fused_attention is not None and block_table is not None:
+            pcfg_step = dataclasses.replace(
+                pcfg, use_pallas=bool(fused_attention))
         h, new_stack, diags = _backbone(
             params, h, mode="decode", cache=caches["stack"],
             cache_len=new_pos, q_offset=pos, spec=moe_spec_decode,
             skew_key=skew_key,
             enc_out=caches.get("cross"), valid_mask=vmask,
-            block_table=block_table, block_size=block_size)
+            block_table=block_table, block_size=block_size,
+            pcfg_run=pcfg_step)
         logits = logits_head(h[:, -1], _vocab_w(params),
                              real_vocab=cfg.vocab_size,
                              softcap=cfg.final_logit_softcap)

@@ -84,6 +84,11 @@ class EngineConfig:
     paged: bool = False
     kv_block_size: int = 16     # tokens per physical KV block
     num_kv_blocks: int = 0      # usable blocks (0 = worst case: slab parity)
+    # fused Pallas paged-attention decode kernel (kernels/paged_attention):
+    # reads K/V block-wise through the block table inside the kernel
+    # instead of gathering each row's [L_max] logical view (paged only;
+    # interpret mode off-TPU)
+    fused_paged_attention: bool = False
     # --- prefix sharing (paged only) ---
     prefix_sharing: bool = False
     # --- sampling (0 temperature = greedy) ---
@@ -95,6 +100,9 @@ class EngineConfig:
         if self.prefix_sharing and not self.paged:
             raise ValueError("prefix_sharing requires the paged KV pool "
                              "(EngineConfig.paged=True)")
+        if self.fused_paged_attention and not self.paged:
+            raise ValueError("fused_paged_attention is the paged decode "
+                             "kernel; it requires EngineConfig.paged=True")
         if not 0.0 < self.top_p <= 1.0:
             raise ValueError("top_p must be in (0, 1]")
 
@@ -166,6 +174,21 @@ class ServeEngine:
             # prefix sharing — see paged_pool_len)
             self._s_pad = paged_pool_len(ecfg.max_seq_len, C, self._sharing)
             self.blocks_per_slot = blocks_for_tokens(self._s_pad, bs)
+            w = cfg.sliding_window or 0
+            if 0 < w < self.blocks_per_slot * bs:
+                # paged decode attends window-free over the logical range;
+                # a window shorter than the block-rounded pool length
+                # (the attention layer's L_max) could bind and be silently
+                # dropped — refuse with the fix spelled out rather than
+                # rely on the structural leaf rejection
+                raise ValueError(
+                    f"paged KV serves window-free attention, but "
+                    f"{cfg.name} has sliding_window={w} < the "
+                    f"block-rounded pool length "
+                    f"{self.blocks_per_slot * bs}: windowed layers would "
+                    f"lose their window. Shrink max_seq_len/prefill_chunk/"
+                    f"kv_block_size so the pool fits the window, or use "
+                    f"the slab ring-buffer pool")
             usable = ecfg.num_kv_blocks or B * self.blocks_per_slot
             if usable < self.blocks_per_slot:
                 raise ValueError(
@@ -255,6 +278,8 @@ class ServeEngine:
         kw: Dict[str, Any] = {}
         if bt is not None:
             kw = dict(block_table=bt, block_size=self.ecfg.kv_block_size)
+            if self.ecfg.fused_paged_attention:
+                kw["fused_attention"] = True
         logits, pool, _, diags = self.model.decode_step(
             params, tok, pool, pos, skew_key=skew_key, active_mask=active,
             **kw)
@@ -762,6 +787,8 @@ class ServeEngine:
             rep["engine"]["num_kv_blocks"] = self._alloc.usable_blocks
             rep["engine"]["blocks_per_slot"] = self.blocks_per_slot
             rep["engine"]["prefix_sharing"] = self._sharing
+            rep["engine"]["fused_paged_attention"] = \
+                self.ecfg.fused_paged_attention
         rep["jit_entries"] = self._jit_counts()
         if self._warm_counts is not None:
             rep["recompiled_after_warmup"] = \
@@ -788,6 +815,7 @@ def engine_config_for(cfg, *, max_slots: int, prompt_len: int,
                       skew_seed: int = 0, paged: bool = False,
                       kv_block_size: int = 16, num_kv_blocks: int = 0,
                       prefix_sharing: bool = False,
+                      fused_paged_attention: bool = False,
                       temperature: float = 0.0,
                       top_k: int = 0, top_p: float = 1.0) -> EngineConfig:
     """Derive serving shapes from a workload: pool length covers prompt +
@@ -808,18 +836,21 @@ def engine_config_for(cfg, *, max_slots: int, prompt_len: int,
     max_seq = max(prompt_len + max_new_tokens, pad)
     if paged and window:
         s_pad = paged_pool_len(max_seq, chunk, prefix_sharing)
-        if s_pad > window:
+        l_max = blocks_for_tokens(s_pad, kv_block_size) * kv_block_size
+        if l_max > window:
             raise ValueError(
-                f"paged pool needs every layer's KV at the padded length "
-                f"{s_pad}"
+                f"paged pool needs every layer's KV window-free at the "
+                f"block-rounded padded length {l_max}"
                 + (" (prefix sharing pads one extra prefill chunk)"
                    if prefix_sharing else "")
                 + f", but the sliding window clamps caches to {window}; "
-                f"shrink prompt+generation or prefill_chunk")
+                f"shrink prompt+generation, prefill_chunk, or "
+                f"kv_block_size")
     return EngineConfig(
         max_slots=max_slots,
         max_seq_len=max_seq,
         prefill_chunk=chunk, eos_id=eos_id, skew_seed=skew_seed,
         paged=paged, kv_block_size=kv_block_size,
         num_kv_blocks=num_kv_blocks, prefix_sharing=prefix_sharing,
+        fused_paged_attention=fused_paged_attention,
         temperature=temperature, top_k=top_k, top_p=top_p)

@@ -71,13 +71,19 @@ def sample_np(logits_row: np.ndarray, rng: Optional[np.random.Generator], *,
         return int(np.argmax(logits_row))
     x = logits_row / temperature
     top_k = min(top_k, x.shape[0])          # oversized k = full vocab
+    # tie-breaking must mirror jax.lax.top_k, which keeps the LOWEST
+    # indices among equal values: np.argpartition selects an arbitrary
+    # subset of a tie straddling the k-th place (and unstable argsort an
+    # arbitrary order inside the nucleus), so the host twin could keep a
+    # different candidate set than the device sampler on tie-heavy logits
+    # (differential-tested in tests/test_sampling_twins.py)
     if top_k > 0:
-        keep = np.argpartition(x, -top_k)[-top_k:]
+        keep = np.argsort(-x, kind="stable")[:top_k]
         x = x[keep]
     else:
         keep = np.arange(x.shape[0])
     if top_p < 1.0:
-        order = np.argsort(-x)
+        order = np.argsort(-x, kind="stable")
         keep, x = keep[order], x[order]
         p = np.exp(x - x.max())
         p /= p.sum()

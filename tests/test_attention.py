@@ -9,8 +9,10 @@ try:
 except ImportError:  # optional dep; deterministic fallback sampler
     from _hypothesis_shim import given, settings, strategies as st
 
-from repro.models.attention import (AttnCache, chunked_attention,
-                                    decode_attention, full_attention_ref)
+from repro.configs.base import ModelConfig
+from repro.models.attention import (AttnCache, attention_block,
+                                    chunked_attention, decode_attention,
+                                    full_attention_ref, init_attention)
 
 
 @pytest.mark.parametrize("window,softcap,causal", [
@@ -53,6 +55,73 @@ def test_decode_matches_full():
         out = decode_attention(q[:, t:t + 1], k, v, jnp.int32(t + 1))
         np.testing.assert_allclose(np.asarray(out)[:, 0],
                                    np.asarray(full)[:, t], atol=2e-5)
+
+
+def _swa_cfg(window):
+    return ModelConfig(name="tiny-swa", family="dense", num_layers=1,
+                       d_model=16, num_heads=2, num_kv_heads=2, d_ff=32,
+                       vocab_size=32, head_dim=8, dtype="float32",
+                       sliding_window=window)
+
+
+@pytest.mark.parametrize("S", [10, 13, 16])
+def test_prefill_ring_rotation(S):
+    """Prefill of S > S_max tokens into a window-sized ring cache, then
+    decode: must match a full-length cache with an explicit window mask.
+
+    Regression: the ring tail used to be stored at indices [0, S_max), but
+    decode writes land at (cache_len - 1) % S_max — whenever S % S_max != 0
+    the ring was rotated relative to the write cursor and decode evicted a
+    mid-window token instead of the oldest one."""
+    W = 8
+    cfg = _swa_cfg(W)
+    p = init_attention(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, n_dec = 1, 2 * W
+    xs = jax.random.normal(jax.random.PRNGKey(1),
+                           (B, S + n_dec, cfg.d_model)) * 0.3
+
+    def run(s_max):
+        hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        cache = AttnCache(jnp.zeros((B, s_max, hkv, hd)),
+                          jnp.zeros((B, s_max, hkv, hd)))
+        outs = []
+        y, cache = attention_block(xs[:, :S], p, cfg, cache=cache,
+                                   cache_len=jnp.int32(S))
+        outs.append(y[:, -1])
+        for t in range(S, S + n_dec):
+            y, cache = attention_block(xs[:, t:t + 1], p, cfg,
+                                       q_offset=jnp.int32(t), cache=cache,
+                                       cache_len=jnp.int32(t + 1))
+            outs.append(y[:, 0])
+        return np.asarray(jnp.stack(outs, axis=1))
+
+    ring, full = run(W), run(S + n_dec)
+    np.testing.assert_allclose(ring, full, atol=3e-5)
+
+
+def test_paged_decode_rejects_binding_window():
+    """The paged decode branch attends window-free; a sliding window that
+    could actually mask something (window < logical range) must raise
+    instead of being silently dropped."""
+    cfg = _swa_cfg(8)
+    p = init_attention(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, bs, n_logical = 2, 4, 4                 # L_max = 16 > window = 8
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    P = (1 + B * n_logical) * bs
+    pool = AttnCache(jnp.zeros((1, P, hkv, hd)), jnp.zeros((1, P, hkv, hd)))
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, 1, cfg.d_model))
+    bt = jnp.ones((B, n_logical), jnp.int32)
+    with pytest.raises(NotImplementedError, match="sliding window"):
+        attention_block(x, p, cfg, q_offset=jnp.zeros((B,), jnp.int32),
+                        cache=pool, cache_len=jnp.ones((B,), jnp.int32),
+                        block_table=bt, block_size=bs)
+    # a window that can never bind (window >= L_max) is dropped exactly
+    cfg_wide = _swa_cfg(bs * n_logical)
+    y, _ = attention_block(x, p, cfg_wide,
+                           q_offset=jnp.zeros((B,), jnp.int32),
+                           cache=pool, cache_len=jnp.ones((B,), jnp.int32),
+                           block_table=bt, block_size=bs)
+    assert y.shape == (B, 1, cfg.d_model)
 
 
 def test_decode_ring_buffer_equivalence():

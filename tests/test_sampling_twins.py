@@ -1,0 +1,82 @@
+"""Differential tests: sample_np (host twin) vs sample_tokens (device).
+
+The two samplers share truncation semantics but not RNGs, so the testable
+contract is the *kept candidate set*: for a given (logits, temperature,
+top_k, top_p) the set of tokens either sampler can ever emit must be
+identical.  Tie-heavy logits and nucleus-boundary ties are exactly where
+the twins used to diverge — np.argpartition keeps an arbitrary subset of
+a tie straddling the k-th place and unstable argsort an arbitrary order
+inside the nucleus, while jax.lax.top_k keeps the lowest indices.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve.sampling import sample_np, sample_tokens
+
+N_DRAWS = 512
+
+
+def _support_jax(logits, **kw):
+    """Tokens the device sampler can emit: N_DRAWS independent draws in
+    one batched call (categorical noise is independent per row)."""
+    batch = jnp.tile(jnp.asarray(logits, jnp.float32)[None], (N_DRAWS, 1))
+    out = sample_tokens(batch, jax.random.PRNGKey(0), **kw)
+    return set(np.asarray(out).tolist())
+
+
+def _support_np(logits, **kw):
+    rng = np.random.default_rng(0)
+    row = np.asarray(logits, np.float64)
+    return {sample_np(row, rng, **kw) for _ in range(N_DRAWS)}
+
+
+def test_top_k_tie_straddling_candidate_sets():
+    """Interleaved exact ties at the top-k boundary: lax.top_k keeps the
+    lowest tied indices; the host twin must keep the same set (argpartition
+    used to keep an arbitrary one)."""
+    logits = np.array([0., 1.] * 4)           # ties at 1.0 on odd indices
+    for k in (2, 3, 4):
+        kw = dict(temperature=1.0, top_k=k)
+        assert _support_jax(logits, **kw) == _support_np(logits, **kw) \
+            == set(range(1, 2 * k, 2))
+
+
+def test_nucleus_boundary_tie_candidate_sets():
+    """A tie group straddling the nucleus boundary: the kept prefix is
+    defined by the descending-stable sort order, so both twins must cut
+    the tie at the same indices."""
+    logits = np.zeros(32)
+    logits[::2] = 1.0                          # 16 tied highs, 16 tied lows
+    kw = dict(temperature=1.0, top_p=0.3)      # cuts inside the tied highs
+    sj, sn = _support_jax(logits, **kw), _support_np(logits, **kw)
+    assert sj == sn
+    # the nucleus holds the first ceil(0.3 / p_high) highs by index order
+    assert sj == {0, 2, 4, 6, 8, 10, 12}
+
+
+def test_top_k_then_nucleus_composition():
+    """top-p applied within the top-k candidates, ties in both stages."""
+    logits = np.array([0., 1.] * 8)
+    kw = dict(temperature=1.0, top_k=6, top_p=0.5)
+    sj, sn = _support_jax(logits, **kw), _support_np(logits, **kw)
+    assert sj == sn
+    assert sj <= {1, 3, 5, 7, 9, 11}           # within the top-k tie set
+
+
+def test_generic_logits_candidate_sets():
+    """No ties: the twins must agree on plain margins too."""
+    rng = np.random.default_rng(3)
+    logits = rng.normal(size=24)
+    for kw in (dict(temperature=0.7, top_k=5),
+               dict(temperature=1.3, top_p=0.8),
+               dict(temperature=1.0, top_k=8, top_p=0.6)):
+        assert _support_jax(logits, **kw) == _support_np(logits, **kw)
+
+
+def test_greedy_tie_break_matches():
+    logits = np.array([1., 3., 3., 0.])
+    assert int(np.asarray(sample_tokens(jnp.asarray(logits)[None],
+                                        None))[0]) == 1
+    assert sample_np(logits, None) == 1

@@ -228,10 +228,12 @@ def test_paged_outlives_slab_at_equal_memory():
 
 
 def test_paged_rejects_window_clamped_cache():
-    """A pure-SWA model whose window clamps the cache below the logical
-    length cannot be paged (ring-buffer eviction) — engine_config_for
-    rejects the shapes with an actionable error, and a hand-built config
-    that sneaks past it is still structurally rejected by the engine."""
+    """A model whose sliding window binds below the padded pool length
+    cannot be paged (the paged decode path is window-free) —
+    engine_config_for rejects the shapes with an actionable error, and a
+    hand-built EngineConfig that sneaks past it is rejected at engine
+    construction with a clear window error (not just the late structural
+    leaf rejection)."""
     from repro.serve import EngineConfig
     cfg = TINY.replace(sliding_window=8)
     model, params = _model(cfg, 1, 16)
@@ -240,11 +242,20 @@ def test_paged_rejects_window_clamped_cache():
         engine_config_for(cfg, max_slots=1, prompt_len=8,
                           max_new_tokens=16, prefill_chunk=8,
                           paged=True, kv_block_size=4)
-    with pytest.raises(NotImplementedError, match="pageable"):
+    with pytest.raises(ValueError, match="window-free"):
         ServeEngine(model, params,
                     EngineConfig(max_slots=1, max_seq_len=24,
                                  prefill_chunk=8, paged=True,
                                  kv_block_size=4))
+    # a window the padded pool fits inside never binds: accepted, and the
+    # engine still serves token streams (window-free == exact there)
+    cfg_wide = TINY.replace(sliding_window=64)
+    model_w, params_w = _model(cfg_wide, 1, 16)
+    eng = ServeEngine(model_w, params_w,
+                      EngineConfig(max_slots=1, max_seq_len=24,
+                                   prefill_chunk=8, paged=True,
+                                   kv_block_size=4))
+    assert eng.blocks_per_slot == 6
     # prefix sharing pads one extra chunk: shapes that fit a window
     # without sharing are rejected with it, up front
     cfg64 = TINY.replace(sliding_window=64)
