@@ -18,6 +18,11 @@ machine-readable ``BENCH_serve.json``:
   the same block budget: sharing serves the common prefix out of the
   copy-on-write block cache, cutting prefill chunks and TTFT p50, with
   ``prefix_hit_rate``/``cow_copies`` reported per cell;
+* ``speculative`` — self-drafting speculative decode (n-gram prompt
+  lookup + static-shape ``[B, k+1]`` verify) on a repetitive-text
+  workload vs the plain-decode baseline, plus an incompressible-random
+  contrast cell: acceptance rate, committed tokens per slot-step, and
+  decode steps per committed token (< 1.0 = the speculative win);
 * ``decode_attention`` — microbench of the per-step decode-attention
   primitive, reference block-table gather vs the fused Pallas kernel,
   sweeping the active sequence length against ``L_max``: the reference
@@ -66,7 +71,9 @@ POLICIES = ["harmoeny", "round_robin"]
 
 def build_engine(skew: float, policy: str, skew_seed: int, *,
                  slots: int = SLOTS, paged: bool = True,
-                 num_kv_blocks: int = 0, prefix_sharing: bool = False):
+                 num_kv_blocks: int = 0, prefix_sharing: bool = False,
+                 gen: int = GEN, prompt_len: int = PROMPT_LEN,
+                 speculative_k: int = 0):
     cfg = get_config(ARCH).reduced()
     moe = dataclasses.replace(cfg.moe, policy=policy)
     if skew > 0:
@@ -81,12 +88,13 @@ def build_engine(skew: float, policy: str, skew_seed: int, *,
         params = model.init(jax.random.PRNGKey(0))
     engine = ServeEngine(
         model, params,
-        engine_config_for(cfg, max_slots=slots, prompt_len=PROMPT_LEN,
-                          max_new_tokens=GEN, prefill_chunk=PREFILL_CHUNK,
+        engine_config_for(cfg, max_slots=slots, prompt_len=prompt_len,
+                          max_new_tokens=gen, prefill_chunk=PREFILL_CHUNK,
                           skew_seed=skew_seed, paged=paged,
                           kv_block_size=KV_BLOCK,
                           num_kv_blocks=num_kv_blocks,
-                          prefix_sharing=prefix_sharing),
+                          prefix_sharing=prefix_sharing,
+                          speculative_k=speculative_k),
         mesh=mesh)
     engine.warmup()
     return cfg, engine
@@ -244,6 +252,78 @@ def prefix_compare():
     return cells, reductions, faster
 
 
+def speculative_compare():
+    """Self-drafting speculative decode on a repetitive-text workload.
+
+    Prompts are a tiled 4-token motif, so the greedy continuation loops
+    and the n-gram prompt-lookup proposer keeps finding its suffix — the
+    regime speculative decoding targets (code, quoting, templated
+    answers).  Each cell decodes the same closed batch with
+    ``speculative_k`` in {0, 2, 4}: k = 0 is the plain-decode baseline
+    (exactly one slot-step per committed token); k > 0 must report
+    acceptance > 0 and per-slot decode steps per committed token < 1.0,
+    with greedy streams token-identical across cells (asserted by
+    ``tests/test_serve_speculative.py``; here the committed token COUNTS
+    are cross-checked).  A contrast cell decodes incompressible random
+    prompts at k = 4 — acceptance collapses and steps/token returns to
+    ~1.0, the honest bound on when speculation pays off.
+    """
+    from repro.serve import Request
+
+    # short prompts + a long decode phase (the speculative regime), sized
+    # so the padded pool (+k) still fits the reduced model's 64-token
+    # sliding window: round_up(16 + 30, 16) + 4 -> 52, block-rounded 56
+    n_req, plen, gen = 8, 16, 30
+    cells = []
+
+    def requests(workload):
+        rng = np.random.default_rng(7)
+        reqs = []
+        for i in range(n_req):
+            if workload == "repetitive":
+                motif = rng.integers(0, 64, (4,)).astype(np.int32)
+                toks = np.tile(motif, -(-plen // 4))[:plen]
+            else:               # incompressible: i.i.d. random prompt
+                toks = rng.integers(0, 64, (plen,)).astype(np.int32)
+            reqs.append(Request(rid=i, tokens=toks, max_new_tokens=gen))
+        return reqs
+
+    for workload, ks in (("repetitive", (0, 2, 4)), ("random", (4,))):
+        for k in ks:
+            cfg, engine = build_engine(0.9, "harmoeny", skew_seed=1,
+                                       gen=gen, prompt_len=plen,
+                                       speculative_k=k)
+            rep = engine.run(requests(workload))
+            sp = rep.get("speculative", {})
+            cell = _cell(rep, workload=workload, speculative_k=k,
+                         skew=0.9, policy="harmoeny",
+                         total_new_tokens=rep["total_new_tokens"],
+                         acceptance_rate=sp.get("acceptance_rate"),
+                         drafted=sp.get("drafted", 0),
+                         accepted=sp.get("accepted", 0),
+                         spec_tokens_per_step=sp.get("tokens_per_step"),
+                         steps_per_committed_token=sp.get(
+                             "steps_per_committed_token"))
+            cells.append(cell)
+            print(f"[bench] speculative workload={workload:10s} k={k} "
+                  f"acc={cell['acceptance_rate']} "
+                  f"steps/token={cell['steps_per_committed_token']} "
+                  f"decode_steps={cell['decode_steps']:3d} "
+                  f"tpot_p50={cell['tpot_p50_ms']:6.2f}ms")
+    by = {(c["workload"], c["speculative_k"]): c for c in cells}
+    # same workload => same greedy stream => identical committed counts
+    tokens_equal = len({by[("repetitive", k)]["total_new_tokens"]
+                        for k in (0, 2, 4)}) == 1
+    steps_per_token = {
+        f"k{k}": by[("repetitive", k)]["steps_per_committed_token"]
+        for k in (2, 4)}
+    wins = all(v is not None and v < 1.0 for v in steps_per_token.values())
+    print(f"[bench] speculative steps/committed token (repetitive): "
+          f"{steps_per_token} (< 1.0: {wins}; token counts equal across "
+          f"k: {tokens_equal})")
+    return cells, steps_per_token, wins, tokens_equal
+
+
 def decode_attention_microbench():
     """Reference gather vs fused kernel, active length swept against L_max.
 
@@ -328,6 +408,8 @@ def main():
     results = sweep()
     capacity, gains, more = capacity_compare()
     prefix_cells, reductions, faster = prefix_compare()
+    spec_cells, spec_spt, spec_wins, spec_tokens_equal = \
+        speculative_compare()
     decode_attn = decode_attention_microbench()
 
     out = {
@@ -354,13 +436,19 @@ def main():
             "ttft_p50_reduction_ms": reductions,
             "sharing_faster": faster,
         },
+        "speculative": {
+            "cells": spec_cells,
+            "steps_per_committed_token": spec_spt,
+            "speculation_wins": spec_wins,
+            "token_counts_equal_across_k": spec_tokens_equal,
+        },
         "decode_attention": decode_attn,
     }
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
     print(f"[bench] wrote {os.path.abspath(args.out)} "
           f"({len(results)} sweep + {len(capacity)} capacity + "
-          f"{len(prefix_cells)} prefix + "
+          f"{len(prefix_cells)} prefix + {len(spec_cells)} speculative + "
           f"{len(decode_attn['cells'])} decode-attention cells)")
 
 

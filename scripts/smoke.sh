@@ -1,42 +1,59 @@
 #!/usr/bin/env bash
 # Tier-1 suite + a 2-device CPU serving smoke (the ISSUE acceptance path).
-set -euo pipefail
+#
+# Fail-fast: -e aborts on the first failing command, -u on unset vars,
+# -o pipefail on any failure inside a pipeline, -E so the ERR trap fires
+# inside the serve() function too; every serve invocation runs under a
+# named CELL so a CI failure attributes to the right cell (the ERR trap
+# prints it) instead of just "smoke.sh exited 1".
+set -Eeuo pipefail
 cd "$(dirname "$0")/.."
+
+CELL="tier-1 tests"
+trap 'echo "smoke FAILED in cell: ${CELL}" >&2' ERR
 
 echo "== tier-1 tests =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 
+serve() {
+    XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.launch.serve --arch mixtral-8x7b --reduced \
+        --model-par 2 --skew 0.9 --prompt-len 32 --gen 8 \
+        --requests 6 --rate 20 "$@"
+}
+
+CELL="slab"
 echo "== 2-device CPU serve smoke (slab) =="
-XLA_FLAGS=--xla_force_host_platform_device_count=2 \
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-python -m repro.launch.serve --arch mixtral-8x7b --reduced --model-par 2 \
-    --skew 0.9 --prompt-len 32 --gen 8 --requests 6 --rate 20
+serve
 
+CELL="paged + top-k sampling"
 echo "== 2-device CPU serve smoke (paged KV + top-k sampling) =="
-XLA_FLAGS=--xla_force_host_platform_device_count=2 \
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-python -m repro.launch.serve --arch mixtral-8x7b --reduced --model-par 2 \
-    --skew 0.9 --prompt-len 32 --gen 8 --requests 6 --rate 20 \
-    --paged --kv-block-size 8 --temperature 0.7 --top-k 20
+serve --paged --kv-block-size 8 --temperature 0.7 --top-k 20
 
+CELL="paged + fused attention"
 echo "== 2-device CPU serve smoke (paged KV + fused Pallas decode attention) =="
 # --fused-attention: the paged-attention kernel runs in interpret mode on
 # CPU; greedy decode here must match the gather-reference cell token-wise
-XLA_FLAGS=--xla_force_host_platform_device_count=2 \
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-python -m repro.launch.serve --arch mixtral-8x7b --reduced --model-par 2 \
-    --skew 0.9 --prompt-len 32 --gen 8 --requests 6 --rate 20 \
-    --paged --kv-block-size 8 --fused-attention
+serve --paged --kv-block-size 8 --fused-attention
 
+CELL="prefix sharing + top-p"
 echo "== 2-device CPU serve smoke (prefix-sharing KV cache + top-p) =="
 # --prefill-chunk 16: sharing pads the logical pool by one extra chunk,
 # which must still fit the reduced model's 64-token sliding window
-XLA_FLAGS=--xla_force_host_platform_device_count=2 \
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-python -m repro.launch.serve --arch mixtral-8x7b --reduced --model-par 2 \
-    --skew 0.9 --prompt-len 32 --gen 8 --requests 6 --rate 20 \
-    --paged --kv-block-size 8 --prefill-chunk 16 \
+serve --paged --kv-block-size 8 --prefill-chunk 16 \
     --prefix-sharing --shared-prefix-len 24 \
     --temperature 0.7 --top-p 0.9
+
+CELL="speculative decode"
+echo "== 2-device CPU serve smoke (paged KV + speculative decode) =="
+# --speculative-k 3: self-drafting verify window; the padded pool grows
+# by k tokens, which must still fit the 64-token sliding window
+serve --paged --kv-block-size 8 --prefill-chunk 16 --speculative-k 3
+
+CELL="speculative + fused multi-query kernel"
+echo "== 2-device CPU serve smoke (speculative + fused multi-query kernel) =="
+serve --paged --kv-block-size 8 --prefill-chunk 16 --speculative-k 3 \
+    --fused-attention
 
 echo "smoke OK"

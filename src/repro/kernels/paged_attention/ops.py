@@ -11,22 +11,29 @@ def paged_attention(q: jnp.ndarray, k_pool: jnp.ndarray, v_pool: jnp.ndarray,
                     block_table: jnp.ndarray, cache_len: jnp.ndarray, *,
                     block_size: int, softcap: float = 0.0,
                     interpret: bool = False) -> jnp.ndarray:
-    """Model-layout entry: q [B, 1, H, hd]; k_pool/v_pool [1, P, Hkv, hd]
-    *physical* pools with P = num_blocks * block_size (the serve engine's
-    paged cache leaves); block_table [B, n_blocks] int32; cache_len scalar
-    or per-row [B] -> [B, 1, H, hd].
+    """Model-layout entry: q [B, S, H, hd] with S >= 1 query positions
+    (S = 1 is plain decode; S = k + 1 is a speculative-verify window,
+    causal within the window); k_pool/v_pool [1, P, Hkv, hd] *physical*
+    pools with P = num_blocks * block_size (the serve engine's paged
+    cache leaves); block_table [B, n_blocks] int32; cache_len scalar or
+    per-row [B] — the total valid length INCLUDING the S window positions
+    (query i sits at absolute position ``cache_len - S + i``)
+    -> [B, S, H, hd].
 
     The pool's KV axis is viewed as [num_blocks, block_size] (pure
-    reshape, no copy) and q as [B, Hkv, rep, hd] (q head h = g * rep + r,
-    the ``_repeat_kv`` head order), so the kernel can index whole physical
-    blocks and handle GQA in its index maps.
+    reshape, no copy) and q as [B, Hkv, S * rep, hd] (query i, q head
+    h = g * rep + r at row i * rep + r — the ``_repeat_kv`` head order per
+    query), so the kernel can index whole physical blocks and handle GQA
+    and the query window in its index maps and mask.
     """
-    B, _, H, hd = q.shape
+    B, S, H, hd = q.shape
     P, Hkv = k_pool.shape[1], k_pool.shape[2]
     rep = H // Hkv
     num_blocks = P // block_size
     assert num_blocks * block_size == P, (P, block_size)
-    qk = q[:, 0].reshape(B, Hkv, rep, hd)
+    # [B, S, Hkv, rep, hd] -> [B, Hkv, S, rep, hd] -> [B, Hkv, S*rep, hd]
+    qk = q.reshape(B, S, Hkv, rep, hd).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, Hkv, S * rep, hd)
     kp = k_pool[0].reshape(num_blocks, block_size, Hkv, hd)
     vp = v_pool[0].reshape(num_blocks, block_size, Hkv, hd)
     cl = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32).reshape(-1),
@@ -34,5 +41,6 @@ def paged_attention(q: jnp.ndarray, k_pool: jnp.ndarray, v_pool: jnp.ndarray,
     out = paged_attention_kernel(qk, kp, vp,
                                  jnp.asarray(block_table, jnp.int32), cl,
                                  block_size=block_size, softcap=softcap,
-                                 interpret=interpret)
-    return out.reshape(B, 1, H, hd)
+                                 q_len=S, interpret=interpret)
+    return out.reshape(B, Hkv, S, rep, hd).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, S, H, hd)

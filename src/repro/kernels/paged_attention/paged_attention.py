@@ -1,6 +1,7 @@
-"""Pallas TPU kernel: paged decode attention (fused block-table gather).
+"""Pallas TPU kernel: paged decode attention (fused block-table gather),
+with multi-query tiles for speculative verify.
 
-One query token per row attends over that row's KV block chain *through
+One row's query token(s) attend over that row's KV block chain *through
 the block table inside the kernel*: grid (batch, kv_heads, kv block
 tiles); the [B, n_blocks] block table and the [B] valid lengths ride in
 as scalar-prefetch operands, so tile j of row b fetches physical block
@@ -13,13 +14,22 @@ are skipped with @pl.when (no MXU work — and their pipeline fetch still
 lands on a real block id, because unallocated table entries point at the
 null block, so there is no out-of-bounds traffic either). GQA is handled
 in the q/out index maps like the flash kernel: q is viewed
-[B, Hkv, rep, hd] and each (b, g) program computes all ``rep`` q heads
-of kv head g, so K/V are never repeated.
+[B, Hkv, q_len * rep, hd] and each (b, g) program computes all q
+positions x ``rep`` q heads of kv head g, so K/V are never repeated.
 
-VMEM budget per step (block_size=16, hd=128, rep=8, bf16):
-q/out 4 kB + k/v 2x4 kB + acc/l/m f32 ~4.2 kB — far under 16 MB, so the
+Multi-query tiles (``q_len > 1``, the speculative-verify window): the
+q block simply grows to ``q_len * rep`` rows walking the SAME block
+chain — query position i (absolute position ``length - q_len + i``)
+is masked causally within the window, ``kv_pos <= length - q_len + i``.
+``q_len == 1`` takes a static branch with the original single-query
+mask (``kv_pos < length``) so the decode path stays bit-identical to
+the pre-multi-query kernel.
+
+VMEM budget per step (block_size=16, hd=128, rep=8, q_len=4, bf16):
+q/out 16 kB + k/v 2x4 kB + acc/l/m f32 ~17 kB — far under 16 MB, so the
 pipeline double-buffers block fetches freely; per-step compute is one
-[rep, hd] x [hd, bs] and one [rep, bs] x [bs, hd] MXU pass.
+[q_len * rep, hd] x [hd, bs] and one [q_len * rep, bs] x [bs, hd] MXU
+pass.
 """
 from __future__ import annotations
 
@@ -37,7 +47,7 @@ _NEG_INF = -1e30
 
 def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
             acc_ref, *, block_size: int, n_blocks: int, softcap: float,
-            scale: float):
+            scale: float, q_len: int, rep: int):
     b = pl.program_id(0)
     j = pl.program_id(2)
 
@@ -50,10 +60,11 @@ def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
     length = len_ref[b]
 
     # ragged lengths / null-block tail: tiles with no valid position are
-    # skipped entirely (no MXU work, no softmax update)
+    # skipped entirely (no MXU work, no softmax update).  The deepest
+    # query attends positions < length, so the bound is q_len-invariant.
     @pl.when(j * block_size < length)
     def _compute():
-        q = q_ref[0, 0].astype(jnp.float32) * scale        # [rep, hd]
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # [q_len*rep, hd]
         k = k_ref[0, :, 0].astype(jnp.float32)             # [bs, hd]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
@@ -61,7 +72,17 @@ def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
             s = softcap * jnp.tanh(s / softcap)
         kv_pos = j * block_size + jax.lax.broadcasted_iota(
             jnp.int32, s.shape, 1)
-        s = jnp.where(kv_pos < length, s, _NEG_INF)
+        if q_len == 1:
+            # single-query decode: the original mask, kept on its own
+            # static branch so this path stays bit-identical
+            s = jnp.where(kv_pos < length, s, _NEG_INF)
+        else:
+            # speculative window: row r holds query i = r // rep at
+            # absolute position length - q_len + i; causal within the
+            # window (reduces to the branch above at q_len == 1)
+            row = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            q_pos = length - q_len + row // rep
+            s = jnp.where(kv_pos <= q_pos, s, _NEG_INF)
         m_prev, l_prev = m_ref[...], l_ref[...]
         m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
         p = jnp.exp(s - m_new)
@@ -81,13 +102,18 @@ def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
 def paged_attention_kernel(q: jnp.ndarray, k_pool: jnp.ndarray,
                            v_pool: jnp.ndarray, block_table: jnp.ndarray,
                            cache_len: jnp.ndarray, *, block_size: int,
-                           softcap: float = 0.0,
+                           softcap: float = 0.0, q_len: int = 1,
                            interpret: bool = False) -> jnp.ndarray:
-    """q: [B, Hkv, rep, hd]; k_pool/v_pool: [num_blocks, block_size, Hkv,
-    hd]; block_table: [B, n_blocks] int32 (entries past a row's chain must
+    """q: [B, Hkv, q_len * rep, hd] (query i, q-head r of kv head g at row
+    ``i * rep + r``); k_pool/v_pool: [num_blocks, block_size, Hkv, hd];
+    block_table: [B, n_blocks] int32 (entries past a row's chain must
     point at a valid physical block — the pool's null-block convention);
-    cache_len: [B] int32 valid lengths -> [B, Hkv, rep, hd]."""
-    B, Hkv, rep, hd = q.shape
+    cache_len: [B] int32 valid lengths INCLUDING the q_len window (query i
+    sits at absolute position ``cache_len - q_len + i``)
+    -> [B, Hkv, q_len * rep, hd]."""
+    B, Hkv, QR, hd = q.shape
+    assert QR % q_len == 0, (QR, q_len)
+    rep = QR // q_len
     n_blocks = block_table.shape[1]
     assert k_pool.shape[1] == block_size and k_pool.shape[2] == Hkv
     scale = hd ** -0.5
@@ -102,21 +128,22 @@ def paged_attention_kernel(q: jnp.ndarray, k_pool: jnp.ndarray,
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2, grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1, rep, hd), q_index),
+            pl.BlockSpec((1, 1, QR, hd), q_index),
             pl.BlockSpec((1, block_size, 1, hd), kv_index),
             pl.BlockSpec((1, block_size, 1, hd), kv_index),
         ],
-        out_specs=pl.BlockSpec((1, 1, rep, hd), q_index),
+        out_specs=pl.BlockSpec((1, 1, QR, hd), q_index),
         scratch_shapes=[
-            pltpu.VMEM((rep, 1), jnp.float32),
-            pltpu.VMEM((rep, 1), jnp.float32),
-            pltpu.VMEM((rep, hd), jnp.float32),
+            pltpu.VMEM((QR, 1), jnp.float32),
+            pltpu.VMEM((QR, 1), jnp.float32),
+            pltpu.VMEM((QR, hd), jnp.float32),
         ])
     fn = pl.pallas_call(
         functools.partial(_kernel, block_size=block_size, n_blocks=n_blocks,
-                          softcap=softcap, scale=scale),
+                          softcap=softcap, scale=scale, q_len=q_len,
+                          rep=rep),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, Hkv, rep, hd), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, QR, hd), q.dtype),
         compiler_params=_tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret)

@@ -5,7 +5,9 @@ Deliberately does what the kernel avoids: gathers each row's full
 heads to the q-head count, and runs a masked softmax over the whole
 logical range — the reference semantics the fused kernel must match
 bit-for-tolerance (it mirrors ``models.attention.paged_decode_attention``,
-which the parity tests also compare against).
+which the parity tests also compare against).  Multi-query windows
+(S > 1, speculative verify) mask causally within the window: query i
+attends kv positions ``<= cache_len - S + i``.
 """
 from __future__ import annotations
 
@@ -19,10 +21,11 @@ def paged_attention_ref(q: jnp.ndarray, k_pool: jnp.ndarray,
                         v_pool: jnp.ndarray, block_table: jnp.ndarray,
                         cache_len: jnp.ndarray, *, block_size: int,
                         softcap: float = 0.0) -> jnp.ndarray:
-    """Same layout contract as ``ops.paged_attention``: q [B, 1, H, hd];
+    """Same layout contract as ``ops.paged_attention``: q [B, S, H, hd];
     k_pool/v_pool [1, P, Hkv, hd] physical pools; block_table
-    [B, n_blocks]; cache_len scalar or [B] -> [B, 1, H, hd]."""
-    B, _, H, hd = q.shape
+    [B, n_blocks]; cache_len scalar or [B], the total valid length
+    including the S window positions -> [B, S, H, hd]."""
+    B, S, H, hd = q.shape
     Hkv = k_pool.shape[2]
     rep = H // Hkv
     n_blocks = block_table.shape[1]
@@ -33,13 +36,14 @@ def paged_attention_ref(q: jnp.ndarray, k_pool: jnp.ndarray,
     if rep > 1:
         k = jnp.repeat(k, rep, axis=2)
         v = jnp.repeat(v, rep, axis=2)
-    qf = (q.astype(jnp.float32) * hd ** -0.5)[:, 0]     # [B, H, hd]
-    s = jnp.einsum("bhd,bkhd->bhk", qf, k.astype(jnp.float32))
+    qf = q.astype(jnp.float32) * hd ** -0.5             # [B, S, H, hd]
+    s = jnp.einsum("bqhd,bkhd->bhqk", qf, k.astype(jnp.float32))
     if softcap > 0:
         s = softcap * jnp.tanh(s / softcap)
     cl = jnp.broadcast_to(jnp.asarray(cache_len).reshape(-1), (B,))
-    mask = log[None, :] < cl[:, None]
-    s = jnp.where(mask[:, None, :], s, _NEG_INF)
+    q_pos = cl[:, None] - S + jnp.arange(S)[None]       # [B, S]
+    mask = log[None, None, :] <= q_pos[:, :, None]      # [B, S, L_max]
+    s = jnp.where(mask[:, None], s, _NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bhk,bkhd->bhd", p, v.astype(jnp.float32))
-    return out[:, None].astype(q.dtype)
+    out = jnp.einsum("bhqk,bkhd->bhqd", p, v.astype(jnp.float32))
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)

@@ -74,6 +74,8 @@ def build_serving_engine(args, cfg=None, *, prompt_len=None, gen=None):
         kv_block_size=args.kv_block_size, num_kv_blocks=args.kv_blocks,
         prefix_sharing=args.prefix_sharing,
         fused_paged_attention=args.fused_attention,
+        speculative_k=args.speculative_k,
+        speculative_policy=args.speculative_policy,
         temperature=args.temperature, top_k=args.top_k, top_p=args.top_p)
     engine = ServeEngine(model, params, ecfg, mesh=mesh)
     return cfg, engine
@@ -132,6 +134,14 @@ def serve(args):
               f"cow_copies={rep['cow_copies']}  "
               f"evictions={rep['evictions']}  "
               f"resume_cached_tokens={rep['resume_cached_tokens']}")
+    if args.speculative_k and "speculative" in rep:
+        sp = rep["speculative"]
+        acc = sp["acceptance_rate"]
+        print(f"[serve] speculative k={args.speculative_k} "
+              f"policy={args.speculative_policy}: "
+              f"acceptance={acc if acc is None else f'{acc:.2f}'}  "
+              f"tokens/step={sp['tokens_per_step']:.2f}  "
+              f"steps/token={sp['steps_per_committed_token']:.2f}")
     print(f"[serve] jit entries {rep['jit_entries']} "
           f"recompiled_after_warmup={rep.get('recompiled_after_warmup')}")
     if args.out:
@@ -173,6 +183,14 @@ def main():
                     help="fused Pallas paged-attention decode kernel: reads "
                          "K/V block-wise through the block table inside the "
                          "kernel (needs --paged; interpret mode off-TPU)")
+    ap.add_argument("--speculative-k", type=int, default=0,
+                    help="speculative decoding: verify up to k self-drafted "
+                         "tokens per decode step in one static [B, k+1] "
+                         "forward (needs --paged; greedy streams stay "
+                         "token-identical)")
+    ap.add_argument("--speculative-policy", default="ngram",
+                    help="draft proposer (ngram = prompt-lookup "
+                         "self-drafting)")
     ap.add_argument("--prefix-sharing", action="store_true",
                     help="prefix-sharing KV cache: copy-on-write blocks, "
                          "radix prefix index, LRU eviction (needs --paged)")

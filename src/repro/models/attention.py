@@ -168,13 +168,17 @@ def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
                            softcap: float = 0.0) -> jnp.ndarray:
     """Decode attention through a paged KV pool.
 
-    q: [B, 1, H, hd]; k_pool/v_pool: [1, P, Hkv, hd] *physical* pools with
-    P = num_blocks * block_size; block_table: [B, max_blocks_per_slot] int32
-    mapping each row's logical block j to a physical block id; cache_len:
-    per-row [B] valid lengths.  Each row's logical K/V view is gathered
+    q: [B, S, H, hd] with S >= 1 query positions (S = 1 is plain decode;
+    S = k + 1 is a speculative-verify window); k_pool/v_pool:
+    [1, P, Hkv, hd] *physical* pools with P = num_blocks * block_size;
+    block_table: [B, max_blocks_per_slot] int32 mapping each row's logical
+    block j to a physical block id; cache_len: per-row [B] valid lengths
+    INCLUDING the S window positions (query i sits at absolute position
+    ``cache_len - S + i``).  Each row's logical K/V view is gathered
     through its table row (unallocated entries point at the null block,
     whose garbage the validity mask hides), then reduced by the same
-    masked-softmax decode attention the slab pool uses.
+    masked-softmax decode attention the slab pool uses — causal within
+    the window when S > 1.
     """
     n_logical = block_table.shape[1]
     log = jnp.arange(n_logical * block_size)
@@ -182,7 +186,24 @@ def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
         + log % block_size                                  # [B, L_max]
     k = k_pool[0, phys]                                     # [B, L_max, Hkv, hd]
     v = v_pool[0, phys]
-    return decode_attention(q, k, v, cache_len, softcap=softcap)
+    S = q.shape[1]
+    if S == 1:
+        return decode_attention(q, k, v, cache_len, softcap=softcap)
+    # multi-query verify window: per-query causal mask inside the window
+    B, _, H, hd = q.shape
+    rep = H // k.shape[2]
+    kr = _repeat_kv(k, rep)
+    vr = _repeat_kv(v, rep)
+    qf = q.astype(jnp.float32) * hd ** -0.5                 # [B, S, H, hd]
+    s = jnp.einsum("bqhd,bkhd->bhqk", qf, kr.astype(jnp.float32))
+    s = _softcap(s, softcap)
+    cl = jnp.broadcast_to(jnp.asarray(cache_len).reshape(-1), (B,))
+    q_pos = cl[:, None] - S + jnp.arange(S)[None]           # [B, S]
+    mask = log[None, None, :] <= q_pos[:, :, None]          # [B, S, L_max]
+    s = jnp.where(mask[:, None], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bhqd", p, vr.astype(jnp.float32))
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
 
 
 class AttnCache(NamedTuple):
@@ -253,7 +274,7 @@ def attention_block(x: jnp.ndarray, p: Dict[str, jnp.ndarray],
                                 chunk=attn_chunk, q_offset=q_offset)
         y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
         return y, AttnCache(k_cache, v_cache)
-    if cache is not None and S > 1:
+    if cache is not None and S > 1 and block_table is None:
         # prefill with a pre-allocated cache: full causal attention over x,
         # then write the computed K/V into the cache prefix [0, S).
         out = chunked_attention(q, k, v, causal=causal, window=window,
@@ -277,9 +298,10 @@ def attention_block(x: jnp.ndarray, p: Dict[str, jnp.ndarray],
         y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
         return y, AttnCache(k_cache, v_cache)
     if cache is not None and block_table is not None:
-        # paged decode: translate each row's write position through its
-        # block-table row, scatter into the physical pool, gather-attend.
-        # Inactive rows (cache_len=1, all-null table) write into the null
+        # paged decode / speculative verify: translate each row's S write
+        # positions through its block-table row, scatter into the physical
+        # pool, gather-attend (causal within the window when S > 1).
+        # Inactive rows (cache_len=S, all-null table) write into the null
         # block — garbage that the validity mask keeps unread.
         L_max = block_table.shape[1] * block_size
         if 0 < window < L_max:
@@ -293,12 +315,13 @@ def attention_block(x: jnp.ndarray, p: Dict[str, jnp.ndarray],
                 f"binding sliding window of {window} < {L_max}; serve "
                 f"sliding-window layers with the slab ring-buffer cache "
                 f"(paged ring buffers are a ROADMAP follow-on)")
-        cl = jnp.asarray(cache_len)
-        pos = cl - 1
-        widx = block_table[jnp.arange(B), pos // block_size] * block_size \
-            + pos % block_size
-        k_cache = cache.k.at[0, widx].set(k[:, 0].astype(cache.k.dtype))
-        v_cache = cache.v.at[0, widx].set(v[:, 0].astype(cache.v.dtype))
+        cl = jnp.broadcast_to(
+            jnp.asarray(cache_len, jnp.int32).reshape(-1), (B,))
+        pos = cl[:, None] - S + jnp.arange(S)[None]         # [B, S]
+        widx = block_table[jnp.arange(B)[:, None], pos // block_size] \
+            * block_size + pos % block_size                 # [B, S]
+        k_cache = cache.k.at[0, widx].set(k.astype(cache.k.dtype))
+        v_cache = cache.v.at[0, widx].set(v.astype(cache.v.dtype))
         if use_pallas:
             from repro.kernels.paged_attention.ops import paged_attention
             out = paged_attention(q, k_cache, v_cache, block_table, cl,

@@ -360,36 +360,60 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
     def decode_step(params, token, caches, pos, skew_key=None,
                     active_mask=None, block_table=None, block_size=0,
                     fused_attention=None):
-        """token [B, 1] int32; pos = current length BEFORE appending token
-        (scalar, or a per-sequence [B] vector for slotted batches).
+        """token [B, S] int32 (S = 1 is plain decode; S = k + 1 is a
+        speculative-verify window, paged only); pos = current length BEFORE
+        appending the window (scalar, or a per-sequence [B] vector for
+        slotted batches) — window position i lands at ``pos + i``.
         ``active_mask`` [B] bool excludes vacated slots' garbage tokens from
         MoE routing and capacity (their logits are garbage either way).
         ``block_table`` [B, max_blocks_per_slot] switches the cache to a
         paged physical pool (``caches`` from ``init_paged_cache``): K/V
-        writes and attention gathers go through each row's block chain.
+        writes and attention gathers go through each row's block chain,
+        causal within the window when S > 1.
         ``fused_attention`` (static, paged mode only) overrides
         ``pcfg.use_pallas`` for this step's attention blocks, letting the
         serve engine opt into the fused paged-attention kernel without
-        rebuilding the model."""
+        rebuilding the model.
+
+        Returns logits [B, Vp] at the last position when S == 1, else
+        [B, S, Vp] at every window position (the verify step scores all
+        drafted continuations in one pass)."""
+        B, S = token.shape
+        if S > 1 and block_table is None:
+            raise NotImplementedError(
+                "multi-token decode (speculative verify) goes through the "
+                "paged pool: pass block_table/block_size")
         h = _embed_tokens(params, token, offset=pos)
-        new_pos = pos + 1
+        new_pos = pos + S
         vmask = None
         if cfg.is_moe and active_mask is not None:
-            vmask = jnp.asarray(active_mask).reshape(-1, 1)    # [B, 1]
+            am = jnp.asarray(active_mask).reshape(-1, 1)       # [B, 1]
+            vmask = jnp.broadcast_to(am, (B, S)) if S > 1 else am
+        spec_dec = moe_spec_decode
+        if spec_dec is not None and S > 1:
+            # the verify window routes B * S tokens per step, not B
+            spec_dec = dataclasses.replace(
+                spec_dec, tokens_local=spec_dec.tokens_local * S)
         pcfg_step = None
         if fused_attention is not None and block_table is not None:
             pcfg_step = dataclasses.replace(
                 pcfg, use_pallas=bool(fused_attention))
         h, new_stack, diags = _backbone(
             params, h, mode="decode", cache=caches["stack"],
-            cache_len=new_pos, q_offset=pos, spec=moe_spec_decode,
+            cache_len=new_pos, q_offset=pos, spec=spec_dec,
             skew_key=skew_key,
             enc_out=caches.get("cross"), valid_mask=vmask,
             block_table=block_table, block_size=block_size,
             pcfg_run=pcfg_step)
-        logits = logits_head(h[:, -1], _vocab_w(params),
-                             real_vocab=cfg.vocab_size,
-                             softcap=cfg.final_logit_softcap)
+        if S == 1:
+            logits = logits_head(h[:, -1], _vocab_w(params),
+                                 real_vocab=cfg.vocab_size,
+                                 softcap=cfg.final_logit_softcap)
+        else:
+            logits = logits_head(h.reshape(B * S, -1), _vocab_w(params),
+                                 real_vocab=cfg.vocab_size,
+                                 softcap=cfg.final_logit_softcap)
+            logits = logits.reshape(B, S, -1)
         out = dict(caches)
         out["stack"] = new_stack
         return logits, out, new_pos, diags

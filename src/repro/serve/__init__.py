@@ -8,14 +8,21 @@ from repro.serve.paging import (NULL_BLOCK, BlockAllocator, blocks_for_tokens,
                                 copy_block, gather_prefix_blocks,
                                 make_paged_pool, write_chunk_blocks)
 from repro.serve.request import Request, RequestState, RequestStatus
-from repro.serve.sampling import nucleus_mask, sample_np, sample_tokens
+from repro.serve.sampling import (nucleus_mask, sample_np, sample_tokens,
+                                  truncated_probs_np)
+from repro.serve.speculative import (DraftProposer, NGramProposer,
+                                     greedy_verify, make_proposer,
+                                     rejection_verify)
 
 __all__ = [
-    "AdmissionQueue", "BlockAllocator", "EngineConfig", "NULL_BLOCK",
+    "AdmissionQueue", "BlockAllocator", "DraftProposer", "EngineConfig",
+    "NGramProposer", "NULL_BLOCK",
     "Request", "RequestRecord", "RequestState", "RequestStatus",
     "ServeEngine", "ServeMetrics", "VirtualClock", "WallClock",
     "blocks_for_tokens", "copy_block", "engine_config_for",
-    "gather_prefix_blocks", "load_trace", "make_paged_pool", "nucleus_mask",
-    "percentiles", "poisson_requests", "sample_np", "sample_tokens",
-    "trace_requests", "write_chunk_blocks",
+    "gather_prefix_blocks", "greedy_verify", "load_trace",
+    "make_paged_pool", "make_proposer", "nucleus_mask",
+    "percentiles", "poisson_requests", "rejection_verify", "sample_np",
+    "sample_tokens", "trace_requests", "truncated_probs_np",
+    "write_chunk_blocks",
 ]

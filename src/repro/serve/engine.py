@@ -8,7 +8,12 @@ fixed signatures:
   steps;
 * ``model.decode_step`` on the full pool with a per-slot position vector —
   every occupied slot advances one token per step regardless of how long
-  each sequence already is.
+  each sequence already is.  With ``EngineConfig.speculative_k`` the
+  decode entry becomes a ``[B, k + 1]`` *verify* step instead: up to k
+  self-drafted tokens per slot are scored in one forward and the accepted
+  prefix (plus one token from the verify logits) is committed — 1 to
+  k + 1 tokens per step, token-exact for greedy streams
+  (``serve/speculative.py``; paged only).
 
 Two pool layouts:
 
@@ -67,6 +72,8 @@ from repro.serve.paging import (NULL_BLOCK, BlockAllocator,
                                 gather_prefix_blocks, write_chunk_blocks)
 from repro.serve.request import Request, RequestState, RequestStatus
 from repro.serve.sampling import sample_np, sample_tokens
+from repro.serve.speculative import (greedy_verify, make_proposer,
+                                     rejection_verify)
 from repro.serve.slots import (discover_batch_axes, discover_seq_axes,
                                min_kv_capacity, write_slot)
 
@@ -91,6 +98,12 @@ class EngineConfig:
     fused_paged_attention: bool = False
     # --- prefix sharing (paged only) ---
     prefix_sharing: bool = False
+    # --- speculative decoding (paged only) ---
+    # k > 0: each decode step verifies up to k self-drafted tokens in one
+    # static-shape [B, k + 1] forward (serve/speculative.py); greedy
+    # streams stay token-identical, sampled streams distribution-identical
+    speculative_k: int = 0
+    speculative_policy: str = "ngram"   # draft proposer (make_proposer)
     # --- sampling (0 temperature = greedy) ---
     temperature: float = 0.0
     top_k: int = 0              # 0 = full vocab when temperature > 0
@@ -103,20 +116,32 @@ class EngineConfig:
         if self.fused_paged_attention and not self.paged:
             raise ValueError("fused_paged_attention is the paged decode "
                              "kernel; it requires EngineConfig.paged=True")
+        if self.speculative_k < 0:
+            raise ValueError("speculative_k must be >= 0")
+        if self.speculative_k > 0 and not self.paged:
+            raise ValueError("speculative decoding verifies through the "
+                             "paged KV pool (rollback rides the block "
+                             "machinery); it requires EngineConfig."
+                             "paged=True")
         if not 0.0 < self.top_p <= 1.0:
             raise ValueError("top_p must be in (0, 1]")
 
 
 def paged_pool_len(max_seq_len: int, prefill_chunk: int,
-                   prefix_sharing: bool) -> int:
+                   prefix_sharing: bool, speculative_k: int = 0) -> int:
     """Chunk-padded logical pool length of the paged engine.  Prefix
     sharing pads one extra chunk: its prefill restarts (a block boundary,
     or ``prompt_len - 1`` on a full hit) are not chunk-aligned, so the
-    final padded chunk can spill one chunk past the plain bound.  Shared
-    between the engine's ``_s_pad`` and ``engine_config_for``'s
-    sliding-window validation so the two can never drift."""
+    final padded chunk can spill one chunk past the plain bound.
+    Speculative decoding pads ``speculative_k`` extra tokens: a verify
+    step writes all k + 1 window positions unconditionally (static
+    shape), so a slot one token short of ``max_seq_len`` still scatters
+    k positions past it — those writes must land inside the slot's own
+    chain, never clamp into a neighbouring block.  Shared between the
+    engine's ``_s_pad`` and ``engine_config_for``'s sliding-window
+    validation so the two can never drift."""
     return round_up(max_seq_len, prefill_chunk) \
-        + (prefill_chunk if prefix_sharing else 0)
+        + (prefill_chunk if prefix_sharing else 0) + speculative_k
 
 
 class ServeEngine:
@@ -153,6 +178,9 @@ class ServeEngine:
 
         self._skew = bool(cfg.is_moe and cfg.moe.router_skew > 0)
         self._sample = ecfg.temperature > 0
+        self._spec = ecfg.speculative_k > 0
+        self._proposer = (make_proposer(ecfg.speculative_policy)
+                          if self._spec else None)
         self._base_key = jax.random.PRNGKey(ecfg.skew_seed)
         self._pf_key = jax.random.fold_in(self._base_key, 0)
         self._dec_key = jax.random.fold_in(self._base_key, 1)
@@ -172,7 +200,8 @@ class ServeEngine:
             # prefill writes whole padded chunks, so a slot's chain must
             # cover the chunk-rounded logical length (one extra chunk with
             # prefix sharing — see paged_pool_len)
-            self._s_pad = paged_pool_len(ecfg.max_seq_len, C, self._sharing)
+            self._s_pad = paged_pool_len(ecfg.max_seq_len, C, self._sharing,
+                                         ecfg.speculative_k)
             self.blocks_per_slot = blocks_for_tokens(self._s_pad, bs)
             w = cfg.sliding_window or 0
             if 0 < w < self.blocks_per_slot * bs:
@@ -210,9 +239,17 @@ class ServeEngine:
                 lambda pool, scratch, bt_row, start: write_chunk_blocks(
                     pool, scratch, bt_row, start, chunk=C, block_size=bs,
                     seq_axes=self._seq_axes))
-            self._decode_fn = jax.jit(
-                lambda p, t, c, pos, bt, k, a: self._decode_core(
-                    p, t, c, pos, k, a, bt))
+            if self._spec:
+                # speculative verify IS the decode step: one [B, k+1]
+                # multi-token forward returning logits at every window
+                # position; acceptance/sampling run host-side
+                self._decode_fn = jax.jit(
+                    lambda p, t, c, pos, bt, k, a: self._verify_core(
+                        p, t, c, pos, k, a, bt))
+            else:
+                self._decode_fn = jax.jit(
+                    lambda p, t, c, pos, bt, k, a: self._decode_core(
+                        p, t, c, pos, k, a, bt))
             if self._sharing:
                 self._gather_fn = jax.jit(
                     lambda pool, scratch, bt_row, n: gather_prefix_blocks(
@@ -287,6 +324,24 @@ class ServeEngine:
                             temperature=self.ecfg.temperature,
                             top_k=self.ecfg.top_k, top_p=self.ecfg.top_p)
         return nxt, pool, diags
+
+    def _verify_core(self, params, toks, pool, pos, key, active, bt):
+        """Speculative verify step: ``toks`` [B, k+1] (window position 0 =
+        the committed last token, 1..k = drafts) -> logits [B, k+1, V] at
+        every window position.  No in-jit sampling — greedy acceptance /
+        rejection sampling run host-side on the returned logits (the key
+        feeds router skew only, folded exactly like ``_decode_core``)."""
+        skew_key = None
+        if self._skew:
+            skew_key = jax.random.fold_in(key, 0) if self._sample else key
+        kw: Dict[str, Any] = dict(block_table=bt,
+                                  block_size=self.ecfg.kv_block_size)
+        if self.ecfg.fused_paged_attention:
+            kw["fused_attention"] = True
+        logits, pool, _, diags = self.model.decode_step(
+            params, toks, pool, pos, skew_key=skew_key, active_mask=active,
+            **kw)
+        return logits, pool, diags
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -505,24 +560,35 @@ class ServeEngine:
 
     def _ensure_decode_blocks(self) -> None:
         """Before a decode step, every active slot needs its chain to cover
-        the write index ``pos[s]`` — grow incrementally, oldest requests
-        first so scarce blocks go to the work closest to finishing."""
+        the write range ``[pos[s], pos[s] + speculative_k]`` (a verify step
+        writes all k + 1 window positions unconditionally; plain decode is
+        the k = 0 case) — grow incrementally, oldest requests first so
+        scarce blocks go to the work closest to finishing."""
         bs = self.ecfg.kv_block_size
+        span = self.ecfg.speculative_k
         order = sorted(np.nonzero(self.active)[0],
                        key=lambda s: self.state_by_slot[s].admit_seq)
         for s in order:
             if not self.active[s]:        # preempted earlier in this pass
                 continue
             st = self.state_by_slot[s]
+            last = self.pos[s] + span     # deepest position written
             if self._sharing:
-                # copy-on-write guard: the block this step writes into must
-                # be private to this chain (a shared block is immutable)
-                j = self.pos[s] // bs
-                chain = self._alloc.chain(st.req.rid)
-                if j < len(chain) and self._alloc.refcount(chain[j]) > 1:
-                    if not self._cow_block(st, j):
-                        continue          # st itself preempted for room
-            while len(self._alloc.chain(st.req.rid)) * bs <= self.pos[s]:
+                # copy-on-write guard: every block this step writes into
+                # must be private to this chain (a shared block is
+                # immutable — and rejected-draft positions write garbage,
+                # which must never land in another chain's prefix)
+                preempted = False
+                for j in range(self.pos[s] // bs, last // bs + 1):
+                    chain = self._alloc.chain(st.req.rid)
+                    if j < len(chain) \
+                            and self._alloc.refcount(chain[j]) > 1:
+                        if not self._cow_block(st, j):
+                            preempted = True  # st itself evicted for room
+                            break
+                if preempted:
+                    continue
+            while len(self._alloc.chain(st.req.rid)) * bs <= last:
                 if not self._grow_chain(st):
                     break
 
@@ -606,6 +672,8 @@ class ServeEngine:
         return did
 
     def _decode_work(self, now: float) -> bool:
+        if self._spec:
+            return self._speculative_decode_work(now)
         if self._paged and self.active.any():
             self._ensure_decode_blocks()
         if not self.active.any():
@@ -640,6 +708,88 @@ class ServeEngine:
                 self._finish(st, now)
             else:
                 self.tok[s] = t
+        return True
+
+    def _speculative_decode_work(self, now: float) -> bool:
+        """One speculative decode step: draft up to k tokens per active
+        slot (self-drafting, host-side), verify them all in one static
+        ``[B, k + 1]`` forward against the paged pool, and commit the
+        accepted prefix plus one token from the verify logits — between 1
+        and k + 1 tokens per step.  Rejected window positions' K/V writes
+        are rolled back by masking: they sit past the committed length
+        (``pos`` never counts them), each is rewritten with real K/V
+        before ``pos`` reaches it, and the CoW guard in
+        ``_ensure_decode_blocks`` keeps them out of shared blocks — so
+        sharing, preemption-by-recompute, and the prefix index all stay
+        token-exact."""
+        if self.active.any():
+            self._ensure_decode_blocks()
+        if not self.active.any():
+            return False
+        B, k = self.ecfg.max_slots, self.ecfg.speculative_k
+        bs = self.ecfg.kv_block_size
+        toks = np.zeros((B, k + 1), np.int32)
+        draft_len = np.zeros((B,), np.int32)
+        for s in np.nonzero(self.active)[0]:
+            st = self.state_by_slot[s]
+            toks[s, 0] = self.tok[s]
+            # never draft past the generation budget: the step commits up
+            # to draft_len + 1 tokens, and max_new caps committed tokens
+            cap = min(k, st.req.max_new_tokens - st.n_generated - 1)
+            if cap > 0:
+                ctx = np.concatenate([st.req.tokens,
+                                      np.asarray(st.output, np.int32)])
+                d = self._proposer.propose(ctx, cap)
+                toks[s, 1:1 + len(d)] = d
+                draft_len[s] = len(d)
+        key = self._next_key(self._dec_key, self._step_idx)
+        with self._ctx():
+            logits, self.pool, diags = self._decode_fn(
+                self.params, toks, self.pool, self.pos,
+                self.block_table.copy(), key, self.active.copy())
+        logits = np.asarray(logits)          # [B, k+1, V]
+        now = self.clock.now()   # post-sync: token times include compute
+        self.metrics.record_step(diags if self.cfg.is_moe else {},
+                                 int(self.active.sum()), phase="decode")
+        self.metrics.record_kv(self._alloc.blocks_in_use,
+                               self._alloc.usable_blocks)
+        self.metrics.spec_steps += 1
+        self.metrics.spec_slot_steps += int(self.active.sum())
+        for s in np.nonzero(self.active)[0]:
+            st = self.state_by_slot[s]
+            drafts = toks[s, 1:1 + int(draft_len[s])].tolist()
+            if self._sample:
+                n_acc, nxt = rejection_verify(
+                    logits[s], drafts, self._samp_rng,
+                    temperature=self.ecfg.temperature,
+                    top_k=self.ecfg.top_k, top_p=self.ecfg.top_p)
+            else:
+                n_acc, nxt = greedy_verify(logits[s], drafts)
+            self.metrics.spec_drafted += len(drafts)
+            self.metrics.spec_accepted += n_acc
+            old_pos = int(self.pos[s])
+            eos = self._eos_id(st.req)
+            finished = False
+            n_commit = 0
+            for t in drafts[:n_acc] + [nxt]:
+                st.output.append(int(t))
+                n_commit += 1
+                if (eos is not None and t == eos) \
+                        or st.n_generated >= st.req.max_new_tokens:
+                    finished = True
+                    break
+            self.pos[s] += n_commit
+            self.metrics.spec_committed += n_commit
+            if self._sharing and self.pos[s] // bs > old_pos // bs:
+                # crossed >= 1 block boundary this step: index every newly
+                # full block so later prompts can hit them
+                full = np.concatenate([st.req.tokens,
+                                       np.asarray(st.output, np.int32)])
+                self._alloc.commit_prefix(st.req.rid, full[:self.pos[s]])
+            if finished:
+                self._finish(st, now)
+            else:
+                self.tok[s] = st.output[-1]
         return True
 
     def _finish(self, st: RequestState, now: float) -> None:
@@ -708,8 +858,12 @@ class ServeEngine:
                 key = self._next_key(self._dec_key, 2 ** 31 - 1 - i)
                 bt_args = ((np.full_like(self.block_table, NULL_BLOCK),)
                            if self._paged else ())
+                # speculative: the decode entry is the [B, k+1] verify step
+                warm_tok = (np.zeros((self.ecfg.max_slots,
+                                      self.ecfg.speculative_k + 1), np.int32)
+                            if self._spec else self.tok[:, None])
                 nxt, self.pool, _ = self._decode_fn(
-                    self.params, self.tok[:, None], self.pool, self.pos,
+                    self.params, warm_tok, self.pool, self.pos,
                     *bt_args, key, self.active.copy())
                 if self._paged and self._sharing:
                     # gather through an all-null row (masked to 0 tokens)
@@ -789,6 +943,10 @@ class ServeEngine:
             rep["engine"]["prefix_sharing"] = self._sharing
             rep["engine"]["fused_paged_attention"] = \
                 self.ecfg.fused_paged_attention
+            rep["engine"]["speculative_k"] = self.ecfg.speculative_k
+            if self._spec:
+                rep["engine"]["speculative_policy"] = \
+                    self.ecfg.speculative_policy
         rep["jit_entries"] = self._jit_counts()
         if self._warm_counts is not None:
             rep["recompiled_after_warmup"] = \
@@ -816,6 +974,8 @@ def engine_config_for(cfg, *, max_slots: int, prompt_len: int,
                       kv_block_size: int = 16, num_kv_blocks: int = 0,
                       prefix_sharing: bool = False,
                       fused_paged_attention: bool = False,
+                      speculative_k: int = 0,
+                      speculative_policy: str = "ngram",
                       temperature: float = 0.0,
                       top_k: int = 0, top_p: float = 1.0) -> EngineConfig:
     """Derive serving shapes from a workload: pool length covers prompt +
@@ -835,7 +995,8 @@ def engine_config_for(cfg, *, max_slots: int, prompt_len: int,
             f"chunked prefill must fit the window-clamped KV cache")
     max_seq = max(prompt_len + max_new_tokens, pad)
     if paged and window:
-        s_pad = paged_pool_len(max_seq, chunk, prefix_sharing)
+        s_pad = paged_pool_len(max_seq, chunk, prefix_sharing,
+                               speculative_k)
         l_max = blocks_for_tokens(s_pad, kv_block_size) * kv_block_size
         if l_max > window:
             raise ValueError(
@@ -843,6 +1004,8 @@ def engine_config_for(cfg, *, max_slots: int, prompt_len: int,
                 f"block-rounded padded length {l_max}"
                 + (" (prefix sharing pads one extra prefill chunk)"
                    if prefix_sharing else "")
+                + (" (speculative decoding pads k extra tokens)"
+                   if speculative_k else "")
                 + f", but the sliding window clamps caches to {window}; "
                 f"shrink prompt+generation, prefill_chunk, or "
                 f"kv_block_size")
@@ -853,4 +1016,6 @@ def engine_config_for(cfg, *, max_slots: int, prompt_len: int,
         paged=paged, kv_block_size=kv_block_size,
         num_kv_blocks=num_kv_blocks, prefix_sharing=prefix_sharing,
         fused_paged_attention=fused_paged_attention,
+        speculative_k=speculative_k,
+        speculative_policy=speculative_policy,
         temperature=temperature, top_k=top_k, top_p=top_p)

@@ -13,9 +13,12 @@ trajectories can be plotted against arrival rate and skew.
 
 The paged engine additionally records per-step KV-block occupancy
 (``record_kv``) and preemption counts, reported as ``kv_blocks_in_use`` /
-``kv_utilization`` / ``preemptions``.  ``report()`` is JSON-safe on an
-empty measurement window: percentile reductions over zero requests come
-back as ``None``, never NaN.
+``kv_utilization`` / ``preemptions``.  Speculative decoding records
+drafted/accepted/committed token counts per verify step, reported as a
+``speculative`` sub-dict (acceptance_rate, tokens per slot-step, steps
+per committed token).  ``report()`` is JSON-safe on an empty measurement
+window: percentile reductions over zero requests come back as ``None``,
+never NaN.
 """
 from __future__ import annotations
 
@@ -103,6 +106,12 @@ class ServeMetrics:
         self.cow_copies: int = 0                # copy-on-write block copies
         self.evictions: int = 0                 # cached prefixes evicted
         self.resume_cached_tokens: int = 0      # prefill skipped on resume
+        # --- speculative decoding ---
+        self.spec_steps: int = 0                # verify steps run
+        self.spec_slot_steps: int = 0           # active-slot verify passes
+        self.spec_drafted: int = 0              # draft tokens proposed
+        self.spec_accepted: int = 0             # draft tokens accepted
+        self.spec_committed: int = 0            # tokens committed by verify
         self._t_first_arrival: Optional[float] = None
         self._t_last_finish: float = 0.0
 
@@ -176,6 +185,31 @@ class ServeMetrics:
                 if total_prompt else None),
             "requests": [r.asdict() for r in recs],
         }
+        if self.spec_steps:
+            # the per-SLOT accounting is what isolates speculation from
+            # batching: plain decode spends exactly one slot-step per
+            # committed token, so tokens_per_step == 1.0 marks "no win"
+            # regardless of how many slots each wall-clock step batches
+            rep["speculative"] = {
+                "steps": self.spec_steps,
+                "slot_steps": self.spec_slot_steps,
+                "drafted": self.spec_drafted,
+                "accepted": self.spec_accepted,
+                "committed_tokens": self.spec_committed,
+                # share of proposed drafts the verify step kept
+                "acceptance_rate": (self.spec_accepted / self.spec_drafted
+                                    if self.spec_drafted else None),
+                # committed tokens per active-slot verify pass
+                # (> 1.0 is the speculative win)
+                "tokens_per_step": (self.spec_committed
+                                    / self.spec_slot_steps
+                                    if self.spec_slot_steps else None),
+                # < 1.0 is the speculative win, mirrored for the paper's
+                # steps-per-token framing
+                "steps_per_committed_token": (
+                    self.spec_slot_steps / self.spec_committed
+                    if self.spec_committed else None),
+            }
         if self.kv_blocks_in_use:
             used = np.asarray(self.kv_blocks_in_use, np.float64)
             rep["kv_blocks_in_use"] = {"mean": float(used.mean()),

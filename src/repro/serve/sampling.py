@@ -16,7 +16,7 @@ so a numpy draw avoids touching the prefill jit signature.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -62,14 +62,16 @@ def sample_tokens(logits: jnp.ndarray, key, *, temperature: float = 0.0,
     return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
 
 
-def sample_np(logits_row: np.ndarray, rng: Optional[np.random.Generator], *,
-              temperature: float = 0.0, top_k: int = 0,
-              top_p: float = 1.0) -> int:
-    """Host-side twin of ``sample_tokens`` for one row of logits."""
-    logits_row = np.asarray(logits_row, np.float64)
-    if rng is None or temperature <= 0:
-        return int(np.argmax(logits_row))
-    x = logits_row / temperature
+def truncated_probs_np(logits_row: np.ndarray, *, temperature: float,
+                       top_k: int = 0, top_p: float = 1.0
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """The truncated categorical ``sample_np`` draws from, materialized:
+    ``(candidate token ids, their probabilities)`` for one row of logits
+    at ``temperature > 0``.  Shared with the speculative rejection sampler
+    (``serve.speculative``), which must accept/resample against exactly
+    this distribution to stay distribution-identical with the base
+    sampler."""
+    x = np.asarray(logits_row, np.float64) / temperature
     top_k = min(top_k, x.shape[0])          # oversized k = full vocab
     # tie-breaking must mirror jax.lax.top_k, which keeps the LOWEST
     # indices among equal values: np.argpartition selects an arbitrary
@@ -91,4 +93,16 @@ def sample_np(logits_row: np.ndarray, rng: Optional[np.random.Generator], *,
         keep, x = keep[inside], x[inside]
     p = np.exp(x - x.max())
     p /= p.sum()
+    return keep, p
+
+
+def sample_np(logits_row: np.ndarray, rng: Optional[np.random.Generator], *,
+              temperature: float = 0.0, top_k: int = 0,
+              top_p: float = 1.0) -> int:
+    """Host-side twin of ``sample_tokens`` for one row of logits."""
+    logits_row = np.asarray(logits_row, np.float64)
+    if rng is None or temperature <= 0:
+        return int(np.argmax(logits_row))
+    keep, p = truncated_probs_np(logits_row, temperature=temperature,
+                                 top_k=top_k, top_p=top_p)
     return int(keep[rng.choice(p.shape[0], p=p)])

@@ -22,11 +22,13 @@ def _tol(dtype):
     return 2e-2 if dtype == jnp.bfloat16 else 2e-5
 
 
-def _setup(seed, *, B, Hkv, rep, hd, bs, n_logical, lengths, dtype):
+def _setup(seed, *, B, Hkv, rep, hd, bs, n_logical, lengths, dtype,
+           q_len=1):
     """Physical pools + ragged block tables.  Each row's chain covers its
     length with distinct shuffled physical blocks; entries past the chain
     stay on the null block (0) — the engine's partially-filled-table
-    convention ("holes")."""
+    convention ("holes").  ``q_len > 1`` builds a speculative-verify
+    query window (each row's length must then be >= q_len)."""
     H = Hkv * rep
     num_blocks = 1 + B * n_logical
     P = num_blocks * bs
@@ -36,7 +38,7 @@ def _setup(seed, *, B, Hkv, rep, hd, bs, n_logical, lengths, dtype):
     v_pool = jax.random.normal(jax.random.fold_in(key, 2),
                                (1, P, Hkv, hd)).astype(dtype)
     q = jax.random.normal(jax.random.fold_in(key, 3),
-                          (B, 1, H, hd)).astype(dtype)
+                          (B, q_len, H, hd)).astype(dtype)
     rng = np.random.default_rng(seed)
     perm = rng.permutation(np.arange(1, num_blocks))
     bt = np.zeros((B, n_logical), np.int32)
@@ -87,6 +89,49 @@ def test_paged_attention_block_size_sweep():
         ref = paged_decode_attention(q, kp, vp, bt, cl, block_size=bs)
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                    atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("q_len", [1, 2, 4])
+@pytest.mark.parametrize("rep", [1, 4])
+def test_paged_attention_multiquery_parity(q_len, rep):
+    """Multi-query tiles (speculative verify window): kernel vs oracle vs
+    the model-layer gather over ragged lengths — including rows whose
+    valid length is exactly the window (the engine's inactive-row
+    convention at cache_len = q_len)."""
+    bs, n_logical = 4, 6
+    # lengths INCLUDE the q_len window positions; min length = q_len
+    lengths = [q_len, 5 + q_len, 20 + q_len]
+    q, kp, vp, bt, cl = _setup(3, B=3, Hkv=2, rep=rep, hd=16, bs=bs,
+                               n_logical=n_logical, lengths=lengths,
+                               dtype=jnp.float32, q_len=q_len)
+    out = paged_attention(q, kp, vp, bt, cl, block_size=bs, interpret=True)
+    ref = paged_attention_ref(q, kp, vp, bt, cl, block_size=bs)
+    gather = paged_decode_attention(q, kp, vp, bt, cl, block_size=bs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(gather),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_multiquery_last_query_aligns_with_single_query():
+    """The last query of a verify window attends exactly the positions a
+    plain decode query at the same state does, so its output must agree
+    with the q_len=1 call to float-associativity noise (~ulps; XLA may
+    vectorize the two shapes differently).  The q_len == 1 path itself
+    runs the original single-query mask on its own static branch, so
+    plain decode through the extended kernel is bit-identical to the
+    pre-multi-query kernel by construction."""
+    bs, n_logical, S = 4, 6, 3
+    lengths = [6, 9, 13]
+    q, kp, vp, bt, cl = _setup(4, B=3, Hkv=2, rep=2, hd=16, bs=bs,
+                               n_logical=n_logical, lengths=lengths,
+                               dtype=jnp.float32, q_len=S)
+    multi = paged_attention(q, kp, vp, bt, cl, block_size=bs,
+                            interpret=True)
+    single = paged_attention(q[:, -1:], kp, vp, bt, cl, block_size=bs,
+                             interpret=True)
+    np.testing.assert_allclose(np.asarray(multi[:, -1:]),
+                               np.asarray(single), atol=1e-6, rtol=1e-6)
 
 
 def test_paged_attention_jit_stability():

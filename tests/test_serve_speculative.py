@@ -1,0 +1,275 @@
+"""Speculative decoding: engine differential (greedy streams token-exact
+with speculation on vs off, including fused-kernel, prefix-sharing, and
+preemption interactions), proposer units, and the rejection sampler's
+distribution identity with the base sampler (reusing the support-set
+harness of tests/test_sampling_twins.py)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.models.model import build_model
+from repro.serve import (EngineConfig, NGramProposer, Request, ServeEngine,
+                         VirtualClock, engine_config_for, greedy_verify,
+                         make_proposer, poisson_requests, rejection_verify,
+                         sample_np, truncated_probs_np)
+
+from _serve_helpers import captured_run
+
+TINY = ModelConfig(name="tiny", family="dense", num_layers=2, d_model=32,
+                   num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64,
+                   head_dim=16, dtype="float32")
+
+
+def _build(spec_k, *, slots=3, prompt_len=12, gen=8, chunk=4, bs=4,
+           num_kv_blocks=0, prefix_sharing=False, fused=False,
+           eos_id=None, temperature=0.0, top_k=0, top_p=1.0):
+    model = build_model(TINY, ParallelConfig(attn_chunk=8, loss_chunk=8),
+                        batch=slots, seq_len=prompt_len)
+    params = model.init(jax.random.PRNGKey(0))
+    ecfg = engine_config_for(TINY, max_slots=slots, prompt_len=prompt_len,
+                             max_new_tokens=gen, prefill_chunk=chunk,
+                             paged=True, kv_block_size=bs,
+                             num_kv_blocks=num_kv_blocks,
+                             prefix_sharing=prefix_sharing,
+                             fused_paged_attention=fused, eos_id=eos_id,
+                             speculative_k=spec_k, temperature=temperature,
+                             top_k=top_k, top_p=top_p)
+    return ServeEngine(model, params, ecfg, clock=VirtualClock(0.05))
+
+
+def _repetitive_requests(n, *, prompt_len=12, gen=8, seed=0, eos_id=None):
+    """Prompts tiled from a short motif — the regime prompt-lookup
+    drafting accepts on."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        motif = rng.integers(0, TINY.vocab_size, (3,)).astype(np.int32)
+        toks = np.tile(motif, -(-prompt_len // 3))[:prompt_len]
+        reqs.append(Request(rid=i, tokens=toks, max_new_tokens=gen,
+                            eos_id=eos_id))
+    return reqs
+
+
+# ----------------------------------------------------------------------
+# engine differential: greedy streams token-exact, speculation on vs off
+# ----------------------------------------------------------------------
+def test_greedy_streams_identical_across_speculative_k():
+    """The acceptance criterion: greedy serve streams are token-identical
+    with speculative_k in {0, 2, 4}, and the decode jit cache holds one
+    entry (the verify step is recompilation-free)."""
+    streams = {}
+    for k in (0, 2, 4):
+        eng = _build(k)
+        reqs = poisson_requests(6, rate=50.0, vocab_size=TINY.vocab_size,
+                                prompt_len=12, max_new_tokens=8, seed=7,
+                                prompt_len_range=(5, 12))
+        outs, rep = captured_run(eng, reqs)
+        assert rep["jit_entries"]["decode"] == 1
+        if k:
+            assert rep["engine"]["speculative_k"] == k
+            assert rep["speculative"]["committed_tokens"] > 0
+        streams[k] = outs
+    assert streams[0] == streams[2] == streams[4]
+
+
+def test_greedy_streams_identical_fused_multiquery_kernel():
+    """Same differential through the fused multi-query kernel tiles: the
+    Pallas verify path must commit the identical greedy stream."""
+    streams = {}
+    for fused in (False, True):
+        eng = _build(3, fused=fused)
+        outs, rep = captured_run(eng, _repetitive_requests(5))
+        assert rep["engine"]["fused_paged_attention"] is fused
+        streams[fused] = outs
+    assert streams[False] == streams[True]
+
+
+def test_speculation_accepts_on_repetitive_text():
+    """On a tiled-motif workload the n-gram proposer must actually win:
+    acceptance > 0 and per-slot decode steps per committed token < 1.0
+    (the paper-facing speculative metric)."""
+    eng = _build(3, gen=16)
+    _, rep = captured_run(eng, _repetitive_requests(4, gen=16))
+    sp = rep["speculative"]
+    assert sp["accepted"] > 0
+    assert sp["steps_per_committed_token"] < 1.0
+    assert sp["tokens_per_step"] > 1.0
+
+
+def test_eos_mid_window_streams_exact():
+    """EOS appearing inside an accepted draft run must cut the stream at
+    exactly the same token as non-speculative decode (no post-EOS
+    commits)."""
+    base = _build(0, gen=16)
+    outs0, _ = captured_run(base, _repetitive_requests(4, gen=16, seed=3))
+    # pick an eos id that actually occurs mid-stream in the base run
+    candidates = [t for toks in outs0.values() for t in toks[1:-1]]
+    assert candidates, "expected a usable mid-stream token"
+    eos = candidates[0]
+    streams = {}
+    for k in (0, 3):
+        eng = _build(k, gen=16, eos_id=eos)
+        outs, _ = captured_run(
+            eng, _repetitive_requests(4, gen=16, seed=3, eos_id=eos))
+        for toks in outs.values():
+            assert eos not in toks[:-1]      # nothing committed past EOS
+        streams[k] = outs
+    assert streams[0] == streams[3]
+
+
+def test_speculative_with_prefix_sharing_and_preemption():
+    """The full interaction: prefix sharing + a tight block budget that
+    forces preemption-by-recompute + speculative verify.  Greedy streams
+    must stay token-exact vs the non-speculative engine at the same
+    budget, and the CoW guard must keep rejected-draft garbage out of
+    shared blocks (stream equality would break if it leaked)."""
+    rng = np.random.default_rng(11)
+    shared = rng.integers(0, TINY.vocab_size, (8,)).astype(np.int32)
+
+    def reqs():
+        out = []
+        for i in range(6):
+            tail = rng.integers(0, TINY.vocab_size, (4,)).astype(np.int32)
+            out.append(Request(rid=i, tokens=np.concatenate([shared, tail]),
+                               max_new_tokens=10))
+        return out
+
+    streams, reports = {}, {}
+    for k in (0, 3):
+        rng = np.random.default_rng(11)       # same workload both runs
+        shared = rng.integers(0, TINY.vocab_size, (8,)).astype(np.int32)
+        eng = _build(k, slots=3, prompt_len=12, gen=10,
+                     num_kv_blocks=14, prefix_sharing=True)
+        outs, rep = captured_run(eng, reqs())
+        streams[k] = outs
+        reports[k] = rep
+    assert streams[0] == streams[3]
+    # the tight budget must actually exercise the machinery
+    assert reports[3]["preemptions"] > 0 or reports[0]["preemptions"] > 0
+    assert reports[3]["prefix_hit_rate"] > 0
+
+
+def test_speculative_requires_paged():
+    with pytest.raises(ValueError, match="paged"):
+        EngineConfig(speculative_k=2)
+
+
+# ----------------------------------------------------------------------
+# proposer units
+# ----------------------------------------------------------------------
+def test_ngram_proposer_longest_most_recent_match():
+    p = NGramProposer(max_ngram=3, min_ngram=1)
+    #          0  1  2  3  4  5  6  7
+    ctx = [5, 6, 7, 9, 5, 6, 7, 9]          # no: suffix (7,9) -> after idx 2
+    # suffix trigram (6,7,9) occurs at 1..3; continuation is ctx[4:] = 5,6,7
+    got = p.propose(np.array(ctx, np.int32), 3)
+    assert got.tolist() == [5, 6, 7]
+
+
+def test_ngram_proposer_prefers_recent_occurrence():
+    p = NGramProposer(max_ngram=2, min_ngram=1)
+    ctx = np.array([1, 2, 9, 1, 2, 4, 1, 2], np.int32)
+    # suffix (1, 2): most recent earlier occurrence at 3 -> proposes 4, 1
+    assert p.propose(ctx, 2).tolist() == [4, 1]
+
+
+def test_ngram_proposer_no_match_and_truncation():
+    p = NGramProposer(max_ngram=3, min_ngram=1)
+    assert p.propose(np.array([1, 2, 3], np.int32), 4).tolist() == []
+    # match at the very end proposes fewer than k tokens
+    assert p.propose(np.array([7, 7], np.int32), 4).tolist() == [7]
+    assert p.propose(np.array([5], np.int32), 4).tolist() == []
+
+
+def test_make_proposer_unknown_policy():
+    with pytest.raises(ValueError, match="unknown speculative_policy"):
+        make_proposer("tree-of-drafts")
+
+
+def test_greedy_verify_exact_match_prefix():
+    V = 8
+    logits = np.full((4, V), -1.0)
+    logits[0, 3] = 1.0                        # greedy: 3
+    logits[1, 5] = 1.0                        # greedy: 5
+    logits[2, 2] = 1.0                        # greedy: 2
+    n, nxt = greedy_verify(logits, [3, 5, 7])
+    assert (n, nxt) == (2, 2)                 # 7 rejected -> row 2's argmax
+    n, nxt = greedy_verify(logits, [])
+    assert (n, nxt) == (0, 3)
+
+
+# ----------------------------------------------------------------------
+# rejection sampling: distribution identity with the base sampler
+# ----------------------------------------------------------------------
+N_DRAWS = 4000
+
+
+def _committed_dist(logits, draft, **kw):
+    """Empirical distribution of the first committed token when ``draft``
+    is proposed at the position (accept-or-resample)."""
+    rng = np.random.default_rng(0)
+    row = np.asarray(logits, np.float64)
+    rows = np.tile(row[None], (2, 1))         # bonus row for the accept case
+    counts = {}
+    for _ in range(N_DRAWS):
+        n_acc, nxt = rejection_verify(rows, [draft], rng, **kw)
+        tok = draft if n_acc == 1 else nxt
+        counts[tok] = counts.get(tok, 0) + 1
+    return {t: c / N_DRAWS for t, c in counts.items()}
+
+
+def _base_dist(logits, **kw):
+    ids, p = truncated_probs_np(np.asarray(logits, np.float64),
+                                temperature=kw["temperature"],
+                                top_k=kw.get("top_k", 0),
+                                top_p=kw.get("top_p", 1.0))
+    return {int(t): float(pp) for t, pp in zip(ids, p)}
+
+
+def _assert_dist_close(emp, ref, tol=0.035):
+    assert set(emp) <= set(ref)               # support never leaks
+    for t, p in ref.items():
+        assert abs(emp.get(t, 0.0) - p) < tol, (t, emp.get(t, 0.0), p)
+
+
+@pytest.mark.parametrize("kw", [
+    dict(temperature=1.0, top_k=4),
+    dict(temperature=0.7, top_p=0.6),
+    dict(temperature=1.0, top_k=6, top_p=0.5),
+])
+def test_rejection_sampler_matches_base_distribution_tie_heavy(kw):
+    """Tie-heavy logits straddling the top-k / nucleus boundary — exactly
+    where the twins harness pins the candidate sets — with an in-support
+    draft, an out-of-support draft, and a no-draft bonus: the committed
+    token's distribution must match the truncated base sampler's."""
+    logits = np.array([0., 1.] * 8)           # ties on odd indices
+    ref = _base_dist(logits, **kw)
+    for draft in (1, 0):                      # in-support tie / out-of-support
+        emp = _committed_dist(logits, draft, **kw)
+        _assert_dist_close(emp, ref)
+
+
+def test_rejection_sampler_matches_base_distribution_generic():
+    rng = np.random.default_rng(3)
+    logits = rng.normal(size=24)
+    kw = dict(temperature=1.3, top_p=0.8)
+    ref = _base_dist(logits, **kw)
+    draft = max(ref, key=ref.get)             # the draft a proposer would hit
+    _assert_dist_close(_committed_dist(logits, draft, **kw), ref)
+    # bonus-token path (no drafts) must be the base draw itself
+    rng_a, rng_b = np.random.default_rng(5), np.random.default_rng(5)
+    for _ in range(64):
+        _, nxt = rejection_verify(np.asarray(logits)[None], [], rng_a, **kw)
+        assert nxt == sample_np(logits, rng_b, **kw)
+
+
+def test_sampled_speculative_engine_runs_and_reports():
+    """Sampling + speculation end-to-end: the engine commits via the
+    rejection sampler and reports acceptance metrics (stream equality is
+    not expected — the committed distribution is, tested above)."""
+    eng = _build(3, gen=12, temperature=0.8, top_k=12)
+    outs, rep = captured_run(eng, _repetitive_requests(4, gen=12))
+    assert all(len(t) > 0 for t in outs.values())
+    sp = rep["speculative"]
+    assert sp["steps"] > 0 and sp["committed_tokens"] >= sp["steps"]
