@@ -56,4 +56,24 @@ echo "== 2-device CPU serve smoke (speculative + fused multi-query kernel) =="
 serve --paged --kv-block-size 8 --prefill-chunk 16 --speculative-k 3 \
     --fused-attention
 
+# Skew cells: same heavy-skew stream (--skew 0.9 is already the serve()
+# default above) through the round_robin baseline and the HarMoEny
+# schedule; --q-tokens 1 so decode-scale batches clear the movement
+# granularity. The replication cell additionally swaps the EMA-hot
+# expert into a static replica slot between windows — one decode jit
+# entry across swaps is asserted by tests/test_serve_rebalance.py; here
+# the cell just has to serve the stream without drops.
+CELL="skew: round_robin baseline"
+echo "== 2-device CPU serve smoke (skew 0.9, round_robin dispatch) =="
+serve --paged --kv-block-size 8 --moe-policy round_robin --q-tokens 1
+
+CELL="skew: harmoeny schedule"
+echo "== 2-device CPU serve smoke (skew 0.9, harmoeny schedule) =="
+serve --paged --kv-block-size 8 --moe-policy harmoeny --q-tokens 1
+
+CELL="skew: harmoeny + hot-expert replication"
+echo "== 2-device CPU serve smoke (skew 0.9, harmoeny + replication) =="
+serve --paged --kv-block-size 8 --moe-policy harmoeny --q-tokens 1 \
+    --replica-slots 1 --rebalance-interval 4
+
 echo "smoke OK"

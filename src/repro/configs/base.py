@@ -29,6 +29,13 @@ class MoEConfig:
     policy: str = "harmoeny"      # harmoeny | round_robin | even_split | static_opt
     capacity_factor: float = 1.25
     num_foreign_slots: int = 4    # K extra expert slots per rank (0 for decode)
+    # R static replica slots per rank: weight-resident copies of hot experts
+    # swapped in between serving windows (serve/rebalance.py); the scheduler
+    # treats a replica host as a local destination at zero foreign-slot cost
+    num_replica_slots: int = 0
+    # static_opt: profile-optimized expert->slot permutation [Ep] baked into
+    # the topology (tuple so the frozen config stays hashable)
+    placement: Optional[Tuple[int, ...]] = None
     q_tokens: int = 0             # 0 = derive from hardware constants (Eq. 4)
     router_skew: float = 0.0      # synthetic skew alpha (paper Sec 5.1.2)
     router_skew_experts: int = 1  # number of "hot" experts for synthetic skew

@@ -22,7 +22,16 @@ Static buffers:
 Overflowing units are dropped *and counted* (`DispatchDiag`): with the
 HarMoEny policy the scheduler bounds every load so drops stay ~0 at
 capacity_factor ~1.25; round-robin under skew drops heavily — the TPU-native
-restatement of the paper's latency gap (DESIGN.md §2).
+restatement of the paper's latency gap (DESIGN.md §2). Units scheduled to a
+rank that has no group for their expert (no local slot, no replica slot, and
+no free foreign slot) are also dropped and counted into ``dest_drops``.
+
+Replica slots: ``num_replica_slots`` static groups between the local and
+foreign groups hold weight-resident copies of hot experts chosen between
+serving windows (serve/rebalance.py). Which expert occupies each slot is a
+*traced* int32 vector (``replica_ids_me``, -1 = empty), so re-targeting a
+replica never changes shapes or recompiles. Group order in the compute
+buffer: local (epr) | replica (R) | foreign (K).
 """
 from __future__ import annotations
 
@@ -60,6 +69,18 @@ class DispatchDiag(NamedTuple):
     local_units: jnp.ndarray      # units processed on this rank (load)
 
 
+def replica_slot_map(replica_ids: jnp.ndarray, padded_experts: int) -> jnp.ndarray:
+    """replica_ids [..., R] int32 (-1 = empty slot) -> [..., Ep] expert->slot
+    map (-1 = no replica). Traced-safe: one-hot max, no scatter, so the same
+    jit entry serves every slot assignment. Highest slot wins a (degenerate)
+    duplicate."""
+    R = replica_ids.shape[-1]
+    tgt = jnp.where(replica_ids >= 0, replica_ids, padded_experts)
+    onehot = tgt[..., :, None] == jnp.arange(padded_experts, dtype=jnp.int32)
+    slots = jnp.arange(R, dtype=jnp.int32)[:, None]
+    return jnp.max(jnp.where(onehot, slots, -1), axis=-2)
+
+
 def _exclusive_cumsum(x: jnp.ndarray, axis: int) -> jnp.ndarray:
     c = jnp.cumsum(x, axis=axis)
     zero_shape = list(x.shape)
@@ -71,18 +92,22 @@ def _exclusive_cumsum(x: jnp.ndarray, axis: int) -> jnp.ndarray:
 
 def build_layout(S: jnp.ndarray, assign: jnp.ndarray, me: jnp.ndarray,
                  topo: EPTopology, *, c_pair: int, c_total: int,
-                 num_foreign_slots: int, block_m: int) -> DispatchLayout:
+                 num_foreign_slots: int, block_m: int,
+                 num_replica_slots: int = 0,
+                 replica_ids_me: jnp.ndarray | None = None) -> DispatchLayout:
     """Derive the full dispatch layout from schedule S and local assignment.
 
     S: [G, Ep, G] replicated; assign: [T_slice, k] local expert choices,
     values in [0, Ep] where the sentinel ``Ep`` marks padding units that must
     never be scheduled (they fall through as drops with zero payload);
-    me: this rank's index on the EP axis.
+    me: this rank's index on the EP axis; replica_ids_me: [R] traced expert
+    ids occupying this rank's replica slots (-1 = empty).
     """
     G, Ep = topo.num_ranks, topo.padded_experts
     epr = topo.experts_per_rank
     K = num_foreign_slots
-    n_groups = epr + K
+    R = num_replica_slots
+    n_groups = epr + R + K
     unit_expert = assign.reshape(-1)                        # [U], token-major
     U = unit_expert.shape[0]
     is_pad_unit = unit_expert >= Ep
@@ -115,17 +140,25 @@ def build_layout(S: jnp.ndarray, assign: jnp.ndarray, me: jnp.ndarray,
     tok_e = recv_counts.sum(axis=0)                         # [Ep] units per expert on me
     lsl = jnp.asarray(local_slot_of(topo))                  # [G, Ep] static
     my_local_slot = jnp.take(lsl, me, axis=0)               # [Ep] (-1 if not local)
-    is_foreign_active = (tok_e > 0) & (my_local_slot < 0)
+    if R and replica_ids_me is not None:
+        rep_slot = replica_slot_map(replica_ids_me, Ep)     # [Ep] (-1 if none)
+    else:
+        rep_slot = jnp.full((Ep,), -1, jnp.int32)
+    is_replica = (my_local_slot < 0) & (rep_slot >= 0)
+    is_foreign_active = (tok_e > 0) & (my_local_slot < 0) & ~is_replica
     foreign_rank = jnp.cumsum(is_foreign_active.astype(jnp.int32)) - 1
     # fids[k] = k-th active foreign expert (by expert id)
     scatter_idx = jnp.where(is_foreign_active,
                             jnp.minimum(foreign_rank, K), K)
     fids = jnp.full((K + 1,), -1, jnp.int32).at[scatter_idx].set(
         jnp.arange(Ep, dtype=jnp.int32), mode="drop")[:K]
-    # group of each expert on me: local slot j -> group j; k-th foreign -> epr + k
-    grp_of_e = jnp.where(my_local_slot >= 0, my_local_slot,
-                         jnp.where(is_foreign_active & (foreign_rank < K),
-                                   epr + foreign_rank, n_groups))  # n_groups = invalid
+    # group of each expert on me: local slot j -> group j; replica slot r ->
+    # epr + r; k-th foreign -> epr + R + k
+    grp_of_e = jnp.where(
+        my_local_slot >= 0, my_local_slot,
+        jnp.where(is_replica, epr + rep_slot,
+                  jnp.where(is_foreign_active & (foreign_rank < K),
+                            epr + R + foreign_rank, n_groups)))  # n_groups = invalid
     group_expert = jnp.full((n_groups + 1,), -1, jnp.int32).at[
         jnp.minimum(grp_of_e, n_groups)].set(jnp.arange(Ep, dtype=jnp.int32),
                                              mode="drop")
@@ -133,6 +166,8 @@ def build_layout(S: jnp.ndarray, assign: jnp.ndarray, me: jnp.ndarray,
     slot_experts = jnp.take(jnp.asarray(topo.slot_map), me, axis=0)  # [epr]
     group_expert = group_expert.at[jnp.arange(epr)].set(slot_experts)
     group_expert = group_expert[:n_groups]
+    if R and replica_ids_me is not None:
+        group_expert = group_expert.at[epr + jnp.arange(R)].set(replica_ids_me)
 
     group_sizes = jnp.zeros((n_groups + 1,), jnp.int32).at[
         jnp.minimum(grp_of_e, n_groups)].add(tok_e, mode="drop")[:n_groups]
@@ -176,7 +211,9 @@ def build_layout(S: jnp.ndarray, assign: jnp.ndarray, me: jnp.ndarray,
     send_valid = (unit_dest != me) & scheduled & (unit_pair_pos < c_pair)
     send_drops = jnp.sum((unit_dest != me) & scheduled
                          & (unit_pair_pos >= c_pair))
-    dest_drops = overflow_rows.sum()
+    # buffer-overflow drops + units scheduled here with no group to land in
+    # (no local/replica slot and the foreign-slot budget exhausted)
+    dest_drops = overflow_rows.sum() + jnp.sum(tok_e * (grp_of_e == n_groups))
     unit_pair_pos = jnp.where(send_valid, unit_pair_pos, c_pair)  # oob -> dropped
 
     return DispatchLayout(

@@ -68,7 +68,8 @@ class MoEBlockSpec:
     @property
     def topo(self) -> EPTopology:
         assert not self.tp_mode
-        return make_topology(self.ep_degree, self.moe.num_experts)
+        return make_topology(self.ep_degree, self.moe.num_experts,
+                             placement=self.moe.placement)
 
     @property
     def t_pad(self) -> int:
@@ -89,7 +90,9 @@ class MoEBlockSpec:
 
     @property
     def n_groups(self) -> int:
-        return self.topo.experts_per_rank + self.moe.num_foreign_slots
+        # compute-buffer group order: local | replica | foreign
+        return (self.topo.experts_per_rank + self.moe.num_replica_slots
+                + self.moe.num_foreign_slots)
 
     @property
     def c_total(self) -> int:
@@ -130,19 +133,35 @@ def init_moe_params(key: jax.Array, spec: MoEBlockSpec,
     if spec.act == "silu":  # swiglu experts carry a gate matrix
         params["w_gate"] = (jax.random.normal(k_g, (n_rows, d, f))
                             * scale_in).astype(dtype)
+    R = spec.moe.num_replica_slots
+    if R and not spec.tp_mode:
+        # replica slots start empty (all replica_ids = -1, never scheduled);
+        # serve/rebalance.py swaps hot experts' weight rows in between windows
+        rep_rows = spec.ep_degree * R
+        params["w_rep_in"] = jnp.zeros((rep_rows, d, f), dtype)
+        params["w_rep_out"] = jnp.zeros((rep_rows, f, d), dtype)
+        if spec.act == "silu":
+            params["w_rep_gate"] = jnp.zeros((rep_rows, d, f), dtype)
     return params
 
 
 def _moe_forward_local(x_rep: jnp.ndarray, params: Dict[str, jnp.ndarray],
                        spec: MoEBlockSpec, n_valid: int,
                        skew_key: Optional[jax.Array],
-                       valid_rep: Optional[jnp.ndarray] = None
+                       valid_rep: Optional[jnp.ndarray] = None,
+                       replica_ids: Optional[jnp.ndarray] = None
                        ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
-    """Per-rank body (inside shard_map). x_rep: [t_pad, d] replicated over EP."""
+    """Per-rank body (inside shard_map). x_rep: [t_pad, d] replicated over EP.
+
+    replica_ids: [G, R] replicated traced int32 — the expert id occupying each
+    rank's replica slots (-1 = empty). Required (possibly all -1) whenever
+    ``spec.moe.num_replica_slots > 0`` so buffer/weight shapes stay static.
+    """
     topo = spec.topo
     moe = spec.moe
     G, Ep = topo.num_ranks, topo.padded_experts
     k = moe.num_experts_per_tok
+    R_slots = moe.num_replica_slots
     me = jax.lax.axis_index(spec.ep_axis)
 
     if spec.seq_sharded:
@@ -181,15 +200,24 @@ def _moe_forward_local(x_rep: jnp.ndarray, params: Dict[str, jnp.ndarray],
     m_all = jax.lax.all_gather(counts, spec.ep_axis, axis=0)        # [G, Ep]
 
     # --- step 3: replicated deterministic scheduling ----------------------
+    extra_local = None
+    rep_ids_me = None
+    if R_slots and replica_ids is not None:
+        # ranks holding a replica of e count as local destinations for e
+        extra_local = D.replica_slot_map(replica_ids, Ep) >= 0  # [G, Ep]
+        rep_ids_me = jnp.take(replica_ids, me, axis=0)          # [R]
     S, sdiag = SCH.schedule(m_all, topo, policy=moe.policy, q=spec.q,
                             c_pair=spec.c_pair,
-                            num_foreign_slots=moe.num_foreign_slots)
+                            num_foreign_slots=moe.num_foreign_slots,
+                            extra_local=extra_local)
 
     # --- step 4: scatter ---------------------------------------------------
     layout = D.build_layout(S, assign, me, topo, c_pair=spec.c_pair,
                             c_total=spec.c_total,
                             num_foreign_slots=moe.num_foreign_slots,
-                            block_m=spec.block_m)
+                            block_m=spec.block_m,
+                            num_replica_slots=R_slots,
+                            replica_ids_me=rep_ids_me)
     x_units = jnp.repeat(x_slice, k, axis=0)                # token-major, k-minor
     grouped = D.dispatch(x_units, layout, axis_name=spec.ep_axis,
                          num_ranks=G, c_pair=spec.c_pair,
@@ -198,8 +226,17 @@ def _moe_forward_local(x_rep: jnp.ndarray, params: Dict[str, jnp.ndarray],
     # --- step 5: expert processing + async weight fetch --------------------
     w_in, w_out = params["w_in"], params["w_out"]           # local shards [epr,...]
     w_gate = params.get("w_gate")
+    # replica-slot weight rows for this rank ([R, ...] shards, zeros if empty)
+    w_rep = {name: params.get(name) for name in
+             ("w_rep_in", "w_rep_out", "w_rep_gate")}
+
+    def with_replicas(w, rep_name):
+        wr = w_rep[rep_name]
+        return w if wr is None else jnp.concatenate(
+            [w, wr.astype(w.dtype)], axis=0)
     if moe.policy == "even_split":
-        # full replication (paper's Even-Split): gather all experts
+        # full replication (paper's Even-Split): gather all experts; the map
+        # covers every group row — local, replica, and foreign alike
         def per_group(w):
             w_all = prefetch.gather_all_experts(w, axis_name=spec.ep_axis)
             rows = _expert_row_map(topo)
@@ -208,17 +245,25 @@ def _moe_forward_local(x_rep: jnp.ndarray, params: Dict[str, jnp.ndarray],
         w_in_full, w_out_full = per_group(w_in), per_group(w_out)
         w_gate_full = per_group(w_gate) if w_gate is not None else None
     elif moe.num_foreign_slots > 0:
-        fids_all = prefetch.all_foreign_ids(S, topo, moe.num_foreign_slots)
+        fids_all = prefetch.all_foreign_ids(S, topo, moe.num_foreign_slots,
+                                            replica_ids=replica_ids
+                                            if R_slots else None)
 
-        def fetch(w):
+        def fetch(w, rep_name):
             wf = prefetch.fetch_foreign_weights(
                 w, fids_all, me, topo, axis_name=spec.ep_axis,
                 fetch_chunk=spec.fetch_chunk)
-            return jnp.concatenate([w, wf.astype(w.dtype)], axis=0)
-        w_in_full, w_out_full = fetch(w_in), fetch(w_out)
-        w_gate_full = fetch(w_gate) if w_gate is not None else None
+            return jnp.concatenate([with_replicas(w, rep_name),
+                                    wf.astype(w.dtype)], axis=0)
+        w_in_full = fetch(w_in, "w_rep_in")
+        w_out_full = fetch(w_out, "w_rep_out")
+        w_gate_full = fetch(w_gate, "w_rep_gate") \
+            if w_gate is not None else None
     else:
-        w_in_full, w_out_full, w_gate_full = w_in, w_out, w_gate
+        w_in_full = with_replicas(w_in, "w_rep_in")
+        w_out_full = with_replicas(w_out, "w_rep_out")
+        w_gate_full = (with_replicas(w_gate, "w_rep_gate")
+                       if w_gate is not None else None)
 
     sizes_padded = D.round_up_j(layout.group_sizes, spec.block_m)
     out_grouped = grouped_ffn(grouped, w_in_full, w_out_full, sizes_padded,
@@ -235,17 +280,40 @@ def _moe_forward_local(x_rep: jnp.ndarray, params: Dict[str, jnp.ndarray],
              else jax.lax.all_gather(y_slice, spec.ep_axis, axis=0, tiled=True))
 
     t_g = S.sum(axis=(0, 1)).astype(jnp.float32)
+    # drops are per-rank quantities; sum them so the reported diagnostic is
+    # the honest global count (out_specs otherwise surface one rank's shard)
+    send_drops = jax.lax.psum(layout.send_drops, spec.ep_axis)
+    dest_drops = jax.lax.psum(layout.dest_drops, spec.ep_axis)
     diag = {
         "aux_loss": r_out.aux_loss[None],
-        "send_drops": layout.send_drops[None].astype(jnp.float32),
-        "dest_drops": layout.dest_drops[None].astype(jnp.float32),
+        "send_drops": send_drops[None].astype(jnp.float32),
+        "dest_drops": dest_drops[None].astype(jnp.float32),
         "sched_iters": sdiag.iters[None].astype(jnp.float32),
         "moved_units": sdiag.moved[None].astype(jnp.float32),
         "max_load_before": sdiag.max_load_before[None].astype(jnp.float32),
         "max_load_after": sdiag.max_load_after[None].astype(jnp.float32),
         "mean_load": t_g.mean()[None],
+        # vector diagnostics (paper §5 measurements): scheduled units per
+        # rank and routed units per expert for this step
+        "rank_load": t_g[None, :],                              # [1, G]
+        "expert_load": m_all.sum(axis=0).astype(jnp.float32)[None, :],  # [1, Ep]
     }
     return y_rep, diag
+
+
+# diagnostic keys emitted by every MoE block variant; scalars are [1]-shaped
+# inside the shard_map body, vectors are [1, N] (N = ranks / experts)
+SCALAR_DIAGS = ("aux_loss", "send_drops", "dest_drops", "sched_iters",
+                "moved_units", "max_load_before", "max_load_after",
+                "mean_load")
+VECTOR_DIAGS = ("rank_load", "expert_load")
+
+
+def _diag_out_specs(batch_spec):
+    P = jax.sharding.PartitionSpec
+    specs = {key: P(batch_spec) for key in SCALAR_DIAGS}
+    specs.update({key: P(batch_spec, None) for key in VECTOR_DIAGS})
+    return specs
 
 
 def _expert_row_map(topo: EPTopology):
@@ -311,7 +379,12 @@ def tp_moe_block(x: jnp.ndarray, params: Dict[str, jnp.ndarray], *,
         diag = {"aux_loss": r.aux_loss[None], "send_drops": zero,
                 "dest_drops": zero, "sched_iters": zero, "moved_units": zero,
                 "max_load_before": zero, "max_load_after": zero,
-                "mean_load": zero}
+                "mean_load": zero,
+                # TP-MoE is compute-balanced by construction: every rank
+                # holds a d_ff slice of every unit's expert
+                "rank_load": jnp.full((1, spec.ep_degree),
+                                      U / spec.ep_degree, jnp.float32),
+                "expert_load": sizes.astype(jnp.float32)[None, :]}
         return y.reshape(B_loc, S_len, d).astype(xb.dtype), diag
 
     in_specs = (
@@ -322,11 +395,7 @@ def tp_moe_block(x: jnp.ndarray, params: Dict[str, jnp.ndarray], *,
         (P(None, None, spec.ep_axis) if "w_gate" in params else None),
         (P() if skew_key is not None else None),
     )
-    out_specs = (P(batch_spec, None, None),
-                 {key: P(batch_spec) for key in (
-                     "aux_loss", "send_drops", "dest_drops", "sched_iters",
-                     "moved_units", "max_load_before", "max_load_after",
-                     "mean_load")})
+    out_specs = (P(batch_spec, None, None), _diag_out_specs(batch_spec))
     fn = _shard_map(body, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs, check_vma=False)
     return fn(x, params["router"], params["w_in"], params["w_out"],
@@ -336,7 +405,8 @@ def tp_moe_block(x: jnp.ndarray, params: Dict[str, jnp.ndarray], *,
 def moe_block(x: jnp.ndarray, params: Dict[str, jnp.ndarray], *,
               spec: MoEBlockSpec, mesh: jax.sharding.Mesh,
               skew_key: Optional[jax.Array] = None,
-              valid_mask: Optional[jnp.ndarray] = None
+              valid_mask: Optional[jnp.ndarray] = None,
+              replica_ids: Optional[jnp.ndarray] = None
               ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """Global-view MoE block. x: [B, S, d] -> [B, S, d], diagnostics.
 
@@ -346,29 +416,42 @@ def moe_block(x: jnp.ndarray, params: Dict[str, jnp.ndarray], *,
     slots, prompt-chunk padding — from routing, capacity, and the schedule
     diagnostics; their outputs are still produced (garbage) and must be
     discarded by the caller.
+    ``replica_ids`` [G, R] int32 (traced; -1 = empty) names the expert whose
+    weights currently occupy each rank's replica slots; defaults to all
+    empty when ``spec.moe.num_replica_slots > 0``.
     """
     if spec.tp_mode:
         # TP-MoE is capacity-free and compute-balanced; dead tokens cannot
-        # drop real ones, so the mask is unnecessary there.
+        # drop real ones, so the mask (and replication) is unnecessary there.
         return tp_moe_block(x, params, spec=spec, mesh=mesh,
                             skew_key=skew_key)
     P = jax.sharding.PartitionSpec
     B, S_len, d = x.shape
     batch_spec = spec.batch_axes if spec.batch_axes else None
 
-    epr = spec.topo.experts_per_rank
+    R_slots = spec.moe.num_replica_slots
+    if R_slots:
+        assert "w_rep_in" in params, \
+            "num_replica_slots > 0 requires w_rep_* params (init_moe_params)"
+        if replica_ids is None:
+            replica_ids = jnp.full((spec.ep_degree, R_slots), -1, jnp.int32)
+    else:
+        replica_ids = None
 
-    def body(xb, p_router, p_in, p_out, p_gate, key, vmask):
+    def body(xb, p_router, p_in, p_out, p_gate, p_reps, rep_ids, key, vmask):
         B_loc, S_loc = xb.shape[0], xb.shape[1]
         flat = xb.reshape(B_loc * S_loc, d)
         prm = {"router": p_router, "w_in": p_in, "w_out": p_out}
         if p_gate is not None:
             prm["w_gate"] = p_gate
+        if p_reps is not None:
+            prm.update(p_reps)
         if spec.seq_sharded:
             # xb (and vmask) are already this rank's token slice
             y, diag = _moe_forward_local(
                 flat, prm, spec, flat.shape[0] * spec.ep_degree, key,
-                valid_rep=None if vmask is None else vmask.reshape(-1))
+                valid_rep=None if vmask is None else vmask.reshape(-1),
+                replica_ids=rep_ids)
             y = y.reshape(B_loc, S_loc, d)
         else:
             n_valid = flat.shape[0]
@@ -379,10 +462,19 @@ def moe_block(x: jnp.ndarray, params: Dict[str, jnp.ndarray], *,
                 v_rep = jnp.pad(vmask.reshape(-1),
                                 (0, t_pad - n_valid))   # pads are invalid
             y, diag = _moe_forward_local(x_rep, prm, spec, n_valid, key,
-                                         valid_rep=v_rep)
+                                         valid_rep=v_rep,
+                                         replica_ids=rep_ids)
             y = y[:n_valid].reshape(B_loc, S_loc, d)
         return y, diag
 
+    rep_params = None
+    rep_param_specs = None
+    if R_slots:
+        rep_params = {name: params[name] for name in
+                      ("w_rep_in", "w_rep_out", "w_rep_gate")
+                      if name in params}
+        rep_param_specs = {name: P(spec.ep_axis, None, None)
+                           for name in rep_params}
     x_seq_spec = spec.ep_axis if spec.seq_sharded else None
     in_specs = (
         P(batch_spec, x_seq_spec, None),           # x: batch (+seq) sharded
@@ -390,15 +482,14 @@ def moe_block(x: jnp.ndarray, params: Dict[str, jnp.ndarray], *,
         P(spec.ep_axis, None, None),               # expert rows over EP axis
         P(spec.ep_axis, None, None),
         (P(spec.ep_axis, None, None) if "w_gate" in params else None),
+        rep_param_specs,                           # replica rows over EP axis
+        (P(None, None) if replica_ids is not None else None),
         (P() if skew_key is not None else None),
         (P(batch_spec, x_seq_spec) if valid_mask is not None else None),
     )
-    out_specs = (P(batch_spec, x_seq_spec, None),
-                 {k: P(batch_spec) for k in (
-                     "aux_loss", "send_drops", "dest_drops", "sched_iters",
-                     "moved_units", "max_load_before", "max_load_after",
-                     "mean_load")})
+    out_specs = (P(batch_spec, x_seq_spec, None), _diag_out_specs(batch_spec))
     fn = _shard_map(body, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs, check_vma=False)
     return fn(x, params["router"], params["w_in"], params["w_out"],
-              params.get("w_gate"), skew_key, valid_mask)
+              params.get("w_gate"), rep_params, replica_ids, skew_key,
+              valid_mask)

@@ -22,20 +22,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.dispatch import replica_slot_map
 from repro.core.topology import EPTopology, local_slot_of
 
 
 def all_foreign_ids(S: jnp.ndarray, topo: EPTopology,
-                    num_foreign_slots: int) -> jnp.ndarray:
+                    num_foreign_slots: int,
+                    replica_ids: jnp.ndarray | None = None) -> jnp.ndarray:
     """FIDS [G, K]: the k-th foreign expert of each destination (-1 = none).
 
-    Replicated-computable: pure function of the replicated schedule S.
+    Replicated-computable: pure function of the replicated schedule S (and
+    the replicated replica-slot assignment, when hot-expert replication is
+    on: experts already weight-resident in a destination's replica slots
+    never consume a foreign slot there).
     """
     G, Ep = topo.num_ranks, topo.padded_experts
     K = num_foreign_slots
     tok_e = S.sum(axis=0)                                    # [Ep, G_dst]
     lsl = jnp.asarray(local_slot_of(topo))                   # [G, Ep]
     active = (tok_e.T > 0) & (lsl < 0)                       # [G, Ep]
+    if replica_ids is not None:
+        active = active & (replica_slot_map(replica_ids, Ep) < 0)
     f_rank = jnp.cumsum(active.astype(jnp.int32), axis=1) - 1
     scatter = jnp.where(active, jnp.minimum(f_rank, K), K)   # [G, Ep]
     fids = jnp.full((G, K + 1), -1, jnp.int32)

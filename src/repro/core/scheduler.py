@@ -40,15 +40,25 @@ class ScheduleDiag(NamedTuple):
     max_load_after: jnp.ndarray
 
 
-def initial_assign(counts: jnp.ndarray, topo: EPTopology) -> jnp.ndarray:
+def initial_assign(counts: jnp.ndarray, topo: EPTopology,
+                   extra_local: jnp.ndarray | None = None) -> jnp.ndarray:
     """Paper Alg.1 line 11: S_initial — route every unit to its expert's host.
 
     counts: [G, Ep] int32. Returns S: [G, Ep, G] int32. For replicated
     experts (E < G) the load is split evenly across the host replicas
     (remainder to the first hosts).
+
+    ``extra_local`` [G, Ep] bool marks replica-slot residencies
+    (serve/rebalance.py): a source that already holds expert ``e``'s
+    weights in a replica slot keeps its own units for ``e`` at home —
+    the paper's replication payoff, skipping dispatch (and hence a2a
+    payload + fetch) for the hot expert's local traffic entirely.
     """
     G, Ep = topo.num_ranks, topo.padded_experts
     r = topo.hosts_per_expert
+    if extra_local is not None:
+        keep = counts * extra_local.astype(counts.dtype)         # [G, Ep]
+        counts = counts - keep
     S = jnp.zeros((G, Ep, G), jnp.int32)
     base = counts // r
     rem = counts % r
@@ -57,6 +67,9 @@ def initial_assign(counts: jnp.ndarray, topo: EPTopology) -> jnp.ndarray:
         onehot[np.arange(Ep), topo.host_of[:, i]] = 1
         share = base + (rem > i).astype(jnp.int32)
         S = S + share[:, :, None] * jnp.asarray(onehot)[None, :, :]
+    if extra_local is not None:
+        S = S + keep[:, :, None] * jnp.asarray(
+            np.eye(G, dtype=np.int32))[:, None, :]
     return S
 
 
@@ -79,7 +92,9 @@ class _LoopState(NamedTuple):
 
 def rebalance(S_initial: jnp.ndarray, topo: EPTopology, *, q: int,
               c_pair: int, num_foreign_slots: int,
-              max_iters: int = 128) -> tuple[jnp.ndarray, ScheduleDiag]:
+              max_iters: int = 128,
+              extra_local: jnp.ndarray | None = None
+              ) -> tuple[jnp.ndarray, ScheduleDiag]:
     """Paper Alg. 2 (greedy token rebalancing) as a lax.while_loop.
 
     Two imbalance criteria, repaired by the same greedy move
@@ -89,9 +104,16 @@ def rebalance(S_initial: jnp.ndarray, topo: EPTopology, *, q: int,
          dropping tokens);
       B. a destination exceeds the average load t_avg (the paper's criterion,
          guarded by the q-threshold, Alg.2 lines 6-17).
+
+    ``extra_local`` [G, Ep] bool (may be traced) marks additional
+    weight-resident (expert, rank) pairs — replica slots filled by the
+    serving-time rebalancer — that count as local destinations: schedulable
+    at zero foreign-slot cost, exactly like the static placement.
     """
     G, Ep = topo.num_ranks, topo.padded_experts
     is_local = jnp.asarray(local_slot_of(topo) >= 0)            # [G, Ep]
+    if extra_local is not None:
+        is_local = is_local | extra_local
     offdiag = 1 - jnp.eye(G, dtype=jnp.int32)
     q = jnp.int32(q)
 
@@ -177,18 +199,24 @@ def rebalance(S_initial: jnp.ndarray, topo: EPTopology, *, q: int,
 
 def schedule(counts: jnp.ndarray, topo: EPTopology, *, policy: str, q: int,
              c_pair: int, num_foreign_slots: int,
-             max_iters: int = 128) -> tuple[jnp.ndarray, ScheduleDiag]:
+             max_iters: int = 128,
+             extra_local: jnp.ndarray | None = None
+             ) -> tuple[jnp.ndarray, ScheduleDiag]:
     """counts [G, Ep] -> (S [G, Ep, G], diagnostics) under ``policy``.
 
     policies: harmoeny | round_robin | even_split | static_opt.
     ``static_opt`` (ExFlow-like) differs only via the profile-optimized
     placement baked into ``topo`` — the dispatch itself is round-robin.
+    ``extra_local`` (replica-slot placements) keeps sources' own units
+    home for replica-resident experts and widens the harmoeny
+    rebalancer's destination set; the baselines ignore it.
     """
-    S0 = initial_assign(counts, topo)
     if policy == "harmoeny":
+        S0 = initial_assign(counts, topo, extra_local=extra_local)
         return rebalance(S0, topo, q=q, c_pair=c_pair,
                          num_foreign_slots=num_foreign_slots,
-                         max_iters=max_iters)
+                         max_iters=max_iters, extra_local=extra_local)
+    S0 = initial_assign(counts, topo)
     if policy in ("round_robin", "static_opt"):
         zero = jnp.int32(0)
         t_g = S0.sum(axis=(0, 1))

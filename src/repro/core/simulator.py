@@ -56,12 +56,21 @@ class SimCosts:
 
 
 def simulate_layer(S: np.ndarray, topo: EPTopology, costs: SimCosts,
-                   sched_iters: int = 0, drops: int = 0) -> Dict[str, float]:
-    """S: [G, Ep, G] schedule. Returns per-layer timing + balance metrics."""
+                   sched_iters: int = 0, drops: int = 0,
+                   extra_local: np.ndarray | None = None) -> Dict[str, float]:
+    """S: [G, Ep, G] schedule. Returns per-layer timing + balance metrics.
+
+    ``extra_local`` [G, Ep] bool marks experts whose weights are already
+    resident at a destination beyond its static shard — the hot-expert
+    replica slots (serve/rebalance.py).  Units scheduled there cost
+    compute but no fetch, which is exactly the replication win the time
+    model has to credit."""
     G = topo.num_ranks
     S = np.asarray(S)
     load = S.sum(axis=(0, 1)).astype(np.float64)               # per dest
-    lsl = local_slot_of(topo)
+    lsl = local_slot_of(topo).copy()
+    if extra_local is not None:
+        lsl = np.where(np.asarray(extra_local), np.maximum(lsl, 0), lsl)
     foreign = np.array([
         sum(1 for e in range(topo.padded_experts)
             if S[:, e, g].sum() > 0 and lsl[g, e] < 0)

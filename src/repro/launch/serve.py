@@ -27,25 +27,49 @@ import dataclasses
 import json
 
 import jax
+import numpy as np
 
 from repro.configs import get_config
 from repro.configs.base import ParallelConfig
+from repro.core.topology import static_opt_placement
 from repro.launch.mesh import make_host_mesh
 from repro.models.model import MeshShape, build_model
 from repro.serve import (ServeEngine, engine_config_for, load_trace,
                          poisson_requests)
 
 
+def skew_profile(moe, skew: float) -> np.ndarray:
+    """Offline per-expert load profile under the synthetic skew router
+    (core/router.py route_skewed): the first ``router_skew_experts``
+    experts share ``skew`` of the mass, the rest split the remainder.
+    Feeds ``static_opt_placement`` — the paper's profile-then-place
+    baseline, which a live stream whose skew drifts then defeats."""
+    E, H = moe.num_experts, moe.router_skew_experts
+    p = np.full((E,), (1.0 - skew) / max(E - H, 1))
+    p[:H] = skew / max(H, 1)
+    return (p * 10_000).astype(np.int64)
+
+
 def config_from_args(args):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    if cfg.moe is not None and args.skew > 0:
-        cfg = cfg.replace(moe=dataclasses.replace(
-            cfg.moe, router_skew=args.skew, policy=args.policy))
-    elif cfg.moe is not None:
-        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, policy=args.policy))
-    return cfg
+    if cfg.moe is None:
+        return cfg
+    moe = dataclasses.replace(cfg.moe, policy=args.policy)
+    if args.skew > 0:
+        moe = dataclasses.replace(moe, router_skew=args.skew)
+    if args.replica_slots > 0:
+        moe = dataclasses.replace(moe, num_replica_slots=args.replica_slots)
+    if args.q_tokens > 0:
+        moe = dataclasses.replace(moe, q_tokens=args.q_tokens)
+    if args.policy == "static_opt" and moe.num_experts >= args.model_par:
+        # profile-then-place: bin-pack the offline skew profile once
+        placement = static_opt_placement(
+            skew_profile(moe, moe.router_skew), args.model_par)
+        moe = dataclasses.replace(moe, placement=tuple(int(e)
+                                                       for e in placement))
+    return cfg.replace(moe=moe)
 
 
 def build_serving_engine(args, cfg=None, *, prompt_len=None, gen=None):
@@ -76,7 +100,10 @@ def build_serving_engine(args, cfg=None, *, prompt_len=None, gen=None):
         fused_paged_attention=args.fused_attention,
         speculative_k=args.speculative_k,
         speculative_policy=args.speculative_policy,
-        temperature=args.temperature, top_k=args.top_k, top_p=args.top_p)
+        temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
+        moe_policy=args.moe_policy or None,
+        rebalance_interval=args.rebalance_interval,
+        replica_slots=args.replica_slots)
     engine = ServeEngine(model, params, ecfg, mesh=mesh)
     return cfg, engine
 
@@ -119,6 +146,21 @@ def serve(args):
                   f"drops={drops:.0f} "
                   f"max_load {moe.get(f'{phase}/max_load_before', 0):.0f}"
                   f"->{moe.get(f'{phase}/max_load_after', 0):.0f}")
+    lb = rep.get("load_balance", {})
+    for phase, sec in lb.items():
+        if "max_mean_ratio" not in sec:
+            continue
+        print(f"[serve] {phase} load: max/mean ratio "
+              f"{sec['max_mean_ratio']:.2f}  "
+              f"straggler_wait {sec['straggler_wait_units']:.1f} units  "
+              f"drops {sec.get('send_drops_total', 0):.0f}/"
+              f"{sec.get('dest_drops_total', 0):.0f}")
+    eng_rep = rep["engine"]
+    if args.replica_slots:
+        print(f"[serve] replication: slots={eng_rep['replica_slots']} "
+              f"interval={eng_rep.get('rebalance_interval', 0)} "
+              f"swaps={eng_rep.get('replica_swaps', 0)} "
+              f"hot={eng_rep.get('hot_experts', [])}")
     if args.paged:
         util = rep.get("kv_utilization")
         print(f"[serve] paged KV: blocks={rep['engine']['num_kv_blocks']} "
@@ -161,7 +203,24 @@ def main():
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--skew", type=float, default=0.0)
     ap.add_argument("--policy", default="harmoeny",
-                    choices=["harmoeny", "round_robin", "even_split"])
+                    choices=["harmoeny", "round_robin", "even_split",
+                             "static_opt"])
+    ap.add_argument("--moe-policy", default="",
+                    choices=["", "harmoeny", "round_robin", "even_split",
+                             "static_opt"],
+                    help="decode-time scheduling policy override (default: "
+                         "--policy everywhere); lets one set of weights "
+                         "serve prefill and decode under different policies")
+    ap.add_argument("--replica-slots", type=int, default=0,
+                    help="static hot-expert replica slots per rank "
+                         "(0 = replication off); swaps never recompile")
+    ap.add_argument("--rebalance-interval", type=int, default=0,
+                    help="engine steps between hot-expert weight swaps "
+                         "(0 = never; needs --replica-slots)")
+    ap.add_argument("--q-tokens", type=int, default=0,
+                    help="scheduler token-unit granularity override (0 = "
+                         "auto threshold; small values let tiny decode "
+                         "batches redistribute)")
     ap.add_argument("--data-par", type=int, default=0)
     ap.add_argument("--model-par", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)

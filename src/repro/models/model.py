@@ -138,7 +138,24 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
             seq_sharded=(seq_len % mesh_shape.ep_degree == 0
                          and mesh_shape.ep_degree > 1))
 
-    # MoE decode uses a separate spec sized for one token per sequence
+    # MoE decode uses a separate spec sized for one token per sequence.
+    # Foreign slots at decode depend on the policy:
+    #   * even_split schedules units for EVERY expert to EVERY rank, so each
+    #     rank needs a group per non-local expert (with K = 0 those units
+    #     have nowhere to land and are counted as drops);
+    #   * harmoeny keeps the configured K so serving-time redistribution can
+    #     move hot-expert load to non-host ranks (paper Alg. 2 at decode);
+    #   * round_robin / static_opt never leave the initial placement.
+    def _decode_foreign_slots(policy: str) -> int:
+        if moe_spec.tp_mode:
+            return 0
+        topo = moe_spec.topo
+        if policy == "even_split":
+            return topo.padded_experts - topo.experts_per_rank
+        if policy == "harmoeny":
+            return cfg.moe.num_foreign_slots
+        return 0
+
     moe_spec_decode = None
     if cfg.is_moe:
         moe_spec_decode = dataclasses.replace(
@@ -146,7 +163,9 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
             tokens_local=b_local,
             seq_sharded=False,
             block_m=128,   # decode batches are tiny; big tiles = pure padding
-            moe=dataclasses.replace(cfg.moe, num_foreign_slots=0))
+            moe=dataclasses.replace(
+                cfg.moe,
+                num_foreign_slots=_decode_foreign_slots(cfg.moe.policy)))
 
     is_encdec = cfg.is_encoder_decoder
     n_prefix = cfg.num_prefix_embeddings
@@ -177,7 +196,8 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
     def _backbone(params, h, *, mode, cache=None, cache_len=None,
                   q_offset=0, spec=None, skew_key=None, enc_out=None,
                   continue_prefill=False, valid_mask=None,
-                  block_table=None, block_size=0, pcfg_run=None):
+                  block_table=None, block_size=0, pcfg_run=None,
+                  moe_replica_ids=None):
         pc = pcfg_run if pcfg_run is not None else pcfg
         h = constrain(h, mode)
         if block_table is not None and (cfg.family == "hybrid" or is_encdec):
@@ -200,7 +220,7 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
                 moe_spec=spec, mesh=mesh, skew_key=skew_key,
                 constrain=constrain, continue_prefill=continue_prefill,
                 valid_mask=valid_mask, block_table=block_table,
-                block_size=block_size)
+                block_size=block_size, moe_replica_ids=moe_replica_ids)
         h = norm(h, params["final_norm"], cfg.norm)
         return h, new_cache, diags
 
@@ -313,7 +333,7 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
         return logits, out_cache, pos, diags
 
     def prefill_chunk(params, tokens, caches, pos, last_index=None,
-                      skew_key=None):
+                      skew_key=None, moe_replica_ids=None):
         """Chunked-prefill continuation for the serving engine.
 
         tokens [Bc, C] is the next prompt chunk, appended to ``caches`` at
@@ -343,7 +363,8 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
         h, new_stack, diags = _backbone(
             params, h, mode="prefill", cache=caches["stack"],
             cache_len=new_pos, q_offset=pos, spec=spec, skew_key=skew_key,
-            continue_prefill=True, valid_mask=vmask)
+            continue_prefill=True, valid_mask=vmask,
+            moe_replica_ids=moe_replica_ids)
         idx = jnp.asarray(C - 1 if last_index is None else last_index,
                           jnp.int32)
         if idx.ndim:
@@ -359,7 +380,8 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
 
     def decode_step(params, token, caches, pos, skew_key=None,
                     active_mask=None, block_table=None, block_size=0,
-                    fused_attention=None):
+                    fused_attention=None, moe_policy=None,
+                    moe_replica_ids=None):
         """token [B, S] int32 (S = 1 is plain decode; S = k + 1 is a
         speculative-verify window, paged only); pos = current length BEFORE
         appending the window (scalar, or a per-sequence [B] vector for
@@ -374,6 +396,10 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
         ``pcfg.use_pallas`` for this step's attention blocks, letting the
         serve engine opt into the fused paged-attention kernel without
         rebuilding the model.
+        ``moe_policy`` (static) overrides the decode-path scheduling policy
+        for this step; ``moe_replica_ids`` [G, R] (traced, -1 = empty) names
+        the experts occupying the replica slots — both wired by the serve
+        engine (EngineConfig.moe_policy / serve/rebalance.py).
 
         Returns logits [B, Vp] at the last position when S == 1, else
         [B, S, Vp] at every window position (the verify step scores all
@@ -390,6 +416,12 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
             am = jnp.asarray(active_mask).reshape(-1, 1)       # [B, 1]
             vmask = jnp.broadcast_to(am, (B, S)) if S > 1 else am
         spec_dec = moe_spec_decode
+        if spec_dec is not None and moe_policy is not None \
+                and moe_policy != spec_dec.moe.policy:
+            spec_dec = dataclasses.replace(
+                spec_dec, moe=dataclasses.replace(
+                    spec_dec.moe, policy=moe_policy,
+                    num_foreign_slots=_decode_foreign_slots(moe_policy)))
         if spec_dec is not None and S > 1:
             # the verify window routes B * S tokens per step, not B
             spec_dec = dataclasses.replace(
@@ -404,7 +436,7 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
             skew_key=skew_key,
             enc_out=caches.get("cross"), valid_mask=vmask,
             block_table=block_table, block_size=block_size,
-            pcfg_run=pcfg_step)
+            pcfg_run=pcfg_step, moe_replica_ids=moe_replica_ids)
         if S == 1:
             logits = logits_head(h[:, -1], _vocab_w(params),
                                  real_vocab=cfg.vocab_size,

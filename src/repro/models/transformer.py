@@ -87,6 +87,7 @@ def _apply_one_layer(x: jnp.ndarray, p: Dict[str, Any], kind: str,
                      causal: bool = True, constrain=lambda x, mode="none": x,
                      continue_prefill: bool = False,
                      valid_mask=None, block_table=None, block_size: int = 0,
+                     moe_replica_ids=None,
                      ) -> Tuple[jnp.ndarray, Any, Dict[str, jnp.ndarray]]:
     """One layer of any kind. Returns (x, new_cache, diag)."""
     diag: Dict[str, jnp.ndarray] = {}
@@ -112,11 +113,14 @@ def _apply_one_layer(x: jnp.ndarray, p: Dict[str, Any], kind: str,
     h = norm(x, p["norm2"], cfg.norm)
     if kind == "moe":
         y, mdiag = moe_block(h, p["moe"], spec=moe_spec, mesh=mesh,
-                             skew_key=skew_key, valid_mask=valid_mask)
+                             skew_key=skew_key, valid_mask=valid_mask,
+                             replica_ids=moe_replica_ids)
         if "shared_mlp" in p:
             y = y + mlp(h, p["shared_mlp"],
                         "swiglu" if cfg.act == "swiglu" else cfg.act)
-        diag = {k: v.mean() for k, v in mdiag.items()}
+        # collapse the leading batch-shard dim only: scalar diags -> scalars,
+        # vector diags (rank_load/expert_load) keep their trailing axis
+        diag = {k: v.mean(axis=0) for k, v in mdiag.items()}
         h = y
     else:
         h = mlp(h, p["mlp"], cfg.act)
@@ -181,6 +185,7 @@ def run_stack(x: jnp.ndarray, params: Dict[str, Any], cfg: ModelConfig,
               skew_key=None, causal: bool = True, constrain=lambda x, mode="none": x,
               continue_prefill: bool = False, valid_mask=None,
               block_table=None, block_size: int = 0,
+              moe_replica_ids=None,
               ) -> Tuple[jnp.ndarray, Any, Dict[str, jnp.ndarray]]:
     """mode: train | prefill | decode | encode. Returns (x, new_cache, diags)."""
     pattern, n_steps, lead = layer_pattern(cfg)
@@ -212,7 +217,7 @@ def run_stack(x: jnp.ndarray, params: Dict[str, Any], cfg: ModelConfig,
                 moe_spec=moe_spec, mesh=mesh, skew_key=sub_key, causal=causal,
                 constrain=constrain, continue_prefill=continue_prefill,
                 valid_mask=valid_mask, block_table=block_table,
-                block_size=block_size)
+                block_size=block_size, moe_replica_ids=moe_replica_ids)
             new_caches[f"sub{j}"] = nc
             diags.update({f"{k}": v for k, v in d.items()})
         new_key = (jax.random.fold_in(key, 997) if key is not None else None)
@@ -237,7 +242,9 @@ def run_stack(x: jnp.ndarray, params: Dict[str, Any], cfg: ModelConfig,
         out_cache = {"blocks": new_caches}
         if lead:
             out_cache["lead"] = new_lead_caches
-    mean_diags = {k: v.mean() for k, v in diags.items()}
+    # scan stacks a leading n_steps axis; collapse it only, preserving the
+    # trailing axis of vector diags (rank_load/expert_load)
+    mean_diags = {k: v.mean(axis=0) for k, v in diags.items()}
     return x, out_cache, mean_diags
 
 

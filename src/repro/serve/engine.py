@@ -62,10 +62,12 @@ from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import round_up
 from repro.serve.arrivals import AdmissionQueue, WallClock
+from repro.serve.rebalance import ExpertRebalancer
 from repro.serve.metrics import ServeMetrics
 from repro.serve.paging import (NULL_BLOCK, BlockAllocator,
                                 blocks_for_tokens, copy_block,
@@ -108,6 +110,17 @@ class EngineConfig:
     temperature: float = 0.0
     top_k: int = 0              # 0 = full vocab when temperature > 0
     top_p: float = 1.0          # nucleus truncation (1.0 = disabled)
+    # --- MoE load balancing (MoE models only) ---
+    # decode scheduling policy override (None = the model config's policy):
+    # harmoeny / round_robin / even_split / static_opt (core/scheduler.py)
+    moe_policy: Optional[str] = None
+    # between-window hot-expert replication (serve/rebalance.py): every
+    # `rebalance_interval` engine steps the EMA-hottest experts' weights are
+    # swapped into the model's static replica slots.  Requires the model to
+    # be built with MoEConfig.num_replica_slots == replica_slots (the slots
+    # exist from init, so swaps never change shapes or recompile).
+    rebalance_interval: int = 0
+    replica_slots: int = 0
 
     def __post_init__(self):
         if self.prefix_sharing and not self.paged:
@@ -125,6 +138,16 @@ class EngineConfig:
                              "paged=True")
         if not 0.0 < self.top_p <= 1.0:
             raise ValueError("top_p must be in (0, 1]")
+        known = ("harmoeny", "round_robin", "even_split", "static_opt")
+        if self.moe_policy is not None and self.moe_policy not in known:
+            raise ValueError(f"unknown moe_policy {self.moe_policy!r}; "
+                             f"choose one of {known}")
+        if self.replica_slots < 0 or self.rebalance_interval < 0:
+            raise ValueError("replica_slots and rebalance_interval must "
+                             "be >= 0")
+        if self.rebalance_interval > 0 and self.replica_slots == 0:
+            raise ValueError("rebalance_interval > 0 needs replica_slots "
+                             "> 0 (there is nowhere to place hot experts)")
 
 
 def paged_pool_len(max_seq_len: int, prefill_chunk: int,
@@ -179,6 +202,32 @@ class ServeEngine:
         self._skew = bool(cfg.is_moe and cfg.moe.router_skew > 0)
         self._sample = ecfg.temperature > 0
         self._spec = ecfg.speculative_k > 0
+        # --- MoE load balancing / hot-expert replication ---
+        if (ecfg.moe_policy is not None or ecfg.replica_slots > 0) \
+                and not cfg.is_moe:
+            raise ValueError("moe_policy / replica_slots need an MoE model")
+        self._moe_policy = ecfg.moe_policy
+        self._rebalancer: Optional[ExpertRebalancer] = None
+        self._replica_ids: Optional[np.ndarray] = None
+        self._rebalances = 0
+        self._replica_swaps = 0
+        if ecfg.replica_slots > 0:
+            spec = model.moe_spec
+            if spec is None or spec.tp_mode:
+                raise ValueError(
+                    "hot-expert replication needs expert-parallel MoE "
+                    "(num_experts >= the mesh model degree)")
+            if cfg.moe.num_replica_slots != ecfg.replica_slots:
+                raise ValueError(
+                    f"EngineConfig.replica_slots={ecfg.replica_slots} but "
+                    f"the model was built with MoEConfig.num_replica_slots="
+                    f"{cfg.moe.num_replica_slots}; the slots must exist "
+                    f"from init so swaps never change parameter shapes")
+            topo = spec.topo
+            self._rebalancer = ExpertRebalancer(topo, ecfg.replica_slots)
+            self._replica_ids = np.full(
+                (topo.num_ranks, ecfg.replica_slots), -1, np.int32)
+            self._swap_fn = jax.jit(_swap_replica_weights)
         self._proposer = (make_proposer(ecfg.speculative_policy)
                           if self._spec else None)
         self._base_key = jax.random.PRNGKey(ecfg.skew_seed)
@@ -244,12 +293,12 @@ class ServeEngine:
                 # multi-token forward returning logits at every window
                 # position; acceptance/sampling run host-side
                 self._decode_fn = jax.jit(
-                    lambda p, t, c, pos, bt, k, a: self._verify_core(
-                        p, t, c, pos, k, a, bt))
+                    lambda p, t, c, pos, bt, k, a, rep: self._verify_core(
+                        p, t, c, pos, k, a, bt, rep))
             else:
                 self._decode_fn = jax.jit(
-                    lambda p, t, c, pos, bt, k, a: self._decode_core(
-                        p, t, c, pos, k, a, bt))
+                    lambda p, t, c, pos, bt, k, a, rep: self._decode_core(
+                        p, t, c, pos, k, a, bt, rep))
             if self._sharing:
                 self._gather_fn = jax.jit(
                     lambda pool, scratch, bt_row, n: gather_prefix_blocks(
@@ -273,9 +322,14 @@ class ServeEngine:
                 lambda pool, scratch, slot: write_slot(pool, scratch, slot,
                                                        self._batch_axes))
             self._decode_fn = jax.jit(
-                lambda p, t, c, pos, k, a: self._decode_core(
-                    p, t, c, pos, k, a, None))
-        self._prefill_fn = jax.jit(model.prefill_chunk)
+                lambda p, t, c, pos, k, a, rep: self._decode_core(
+                    p, t, c, pos, k, a, None, rep))
+        # replica ids ride along as a trailing traced arg so between-window
+        # weight swaps never re-trace (None = no replica slots: an empty
+        # pytree, same trace either way)
+        self._prefill_fn = jax.jit(
+            lambda p, t, c, pos, last, key, rep: model.prefill_chunk(
+                p, t, c, pos, last, key, moe_replica_ids=rep))
 
         self.pos = np.zeros((B,), np.int32)      # per-slot sequence length
         self.tok = np.zeros((B,), np.int32)      # per-slot last token
@@ -303,7 +357,7 @@ class ServeEngine:
         """Per-request EOS override, falling back to the engine default."""
         return req.eos_id if req.eos_id is not None else self.ecfg.eos_id
 
-    def _decode_core(self, params, tok, pool, pos, key, active, bt):
+    def _decode_core(self, params, tok, pool, pos, key, active, bt, rep):
         skew_key = samp_key = None
         if self._skew and self._sample:
             skew_key = jax.random.fold_in(key, 0)
@@ -319,13 +373,13 @@ class ServeEngine:
                 kw["fused_attention"] = True
         logits, pool, _, diags = self.model.decode_step(
             params, tok, pool, pos, skew_key=skew_key, active_mask=active,
-            **kw)
+            moe_policy=self._moe_policy, moe_replica_ids=rep, **kw)
         nxt = sample_tokens(logits, samp_key,
                             temperature=self.ecfg.temperature,
                             top_k=self.ecfg.top_k, top_p=self.ecfg.top_p)
         return nxt, pool, diags
 
-    def _verify_core(self, params, toks, pool, pos, key, active, bt):
+    def _verify_core(self, params, toks, pool, pos, key, active, bt, rep):
         """Speculative verify step: ``toks`` [B, k+1] (window position 0 =
         the committed last token, 1..k = drafts) -> logits [B, k+1, V] at
         every window position.  No in-jit sampling — greedy acceptance /
@@ -340,7 +394,7 @@ class ServeEngine:
             kw["fused_attention"] = True
         logits, pool, _, diags = self.model.decode_step(
             params, toks, pool, pos, skew_key=skew_key, active_mask=active,
-            **kw)
+            moe_policy=self._moe_policy, moe_replica_ids=rep, **kw)
         return logits, pool, diags
 
     # ------------------------------------------------------------------
@@ -626,7 +680,7 @@ class ServeEngine:
             with self._ctx():
                 logits, self._scratch, _, diags = self._prefill_fn(
                     self.params, chunk, self._scratch, np.int32(start),
-                    np.int32(n - 1), key)
+                    np.int32(n - 1), key, self._replica_ids)
                 if self._paged:
                     # finished chunk -> straight into the allocated blocks
                     self.pool = self._write_fn(
@@ -683,11 +737,12 @@ class ServeEngine:
         with self._ctx():
             nxt, self.pool, diags = self._decode_fn(
                 self.params, self.tok[:, None], self.pool, self.pos,
-                *bt_args, key, self.active.copy())
+                *bt_args, key, self.active.copy(), self._replica_ids)
         nxt = np.asarray(nxt)
         now = self.clock.now()       # post-sync: token times include compute
         self.metrics.record_step(diags if self.cfg.is_moe else {},
                                  int(self.active.sum()), phase="decode")
+        self._observe_load(diags)
         if self._paged:
             self.metrics.record_kv(self._alloc.blocks_in_use,
                                    self._alloc.usable_blocks)
@@ -746,11 +801,13 @@ class ServeEngine:
         with self._ctx():
             logits, self.pool, diags = self._decode_fn(
                 self.params, toks, self.pool, self.pos,
-                self.block_table.copy(), key, self.active.copy())
+                self.block_table.copy(), key, self.active.copy(),
+                self._replica_ids)
         logits = np.asarray(logits)          # [B, k+1, V]
         now = self.clock.now()   # post-sync: token times include compute
         self.metrics.record_step(diags if self.cfg.is_moe else {},
                                  int(self.active.sum()), phase="decode")
+        self._observe_load(diags)
         self.metrics.record_kv(self._alloc.blocks_in_use,
                                self._alloc.usable_blocks)
         self.metrics.spec_steps += 1
@@ -791,6 +848,33 @@ class ServeEngine:
             else:
                 self.tok[s] = st.output[-1]
         return True
+
+    # ------------------------------------------------------------------
+    # between-window hot-expert replication (serve/rebalance.py)
+    # ------------------------------------------------------------------
+    def _observe_load(self, diags) -> None:
+        """Fold this decode step's global per-expert load into the
+        rebalancer's EMA (the [Ep] ``expert_load`` vector the MoE layer
+        emits alongside its scalar diagnostics)."""
+        if self._rebalancer is None or "expert_load" not in diags:
+            return
+        self._rebalancer.observe(
+            np.asarray(diags["expert_load"]).reshape(-1))
+
+    def _rebalance_now(self) -> None:
+        """Close a load window: re-derive the hot-expert set from the EMA
+        and, if it changed, gather the hot experts' weight rows into every
+        non-host rank's replica slots.  Pure value updates — the swap fn
+        and the decode fn keep their single jit entries, and the new
+        ``replica_ids`` flow into the next step as a traced argument."""
+        dec = self._rebalancer.propose()
+        self._rebalances += 1
+        if not dec.changed:
+            return
+        with self._ctx():
+            self.params = self._swap_fn(self.params, dec.weight_rows)
+        self._replica_ids = dec.replica_ids
+        self._replica_swaps += 1
 
     def _finish(self, st: RequestState, now: float) -> None:
         st.finish_time = now
@@ -844,7 +928,7 @@ class ServeEngine:
             with self._ctx():
                 _, self._scratch, _, _ = self._prefill_fn(
                     self.params, chunk, self._scratch, np.int32(0),
-                    np.int32(C - 1), key)
+                    np.int32(C - 1), key, self._replica_ids)
                 if self._paged:
                     # an all-null table row: every write lands in the
                     # null block's garbage
@@ -864,7 +948,7 @@ class ServeEngine:
                             if self._spec else self.tok[:, None])
                 nxt, self.pool, _ = self._decode_fn(
                     self.params, warm_tok, self.pool, self.pos,
-                    *bt_args, key, self.active.copy())
+                    *bt_args, key, self.active.copy(), self._replica_ids)
                 if self._paged and self._sharing:
                     # gather through an all-null row (masked to 0 tokens)
                     # and copy the null block onto itself: both compile
@@ -877,6 +961,14 @@ class ServeEngine:
                                               np.int32(NULL_BLOCK),
                                               np.int32(NULL_BLOCK))
             jax.block_until_ready(nxt)
+        if self._rebalancer is not None:
+            # compile the weight-swap gather too: replica slots are empty
+            # (ids all -1) so the copied values are dead, and the real
+            # swaps later must not show up as post-warmup compiles
+            G, R = self._replica_ids.shape
+            with self._ctx():
+                self.params = self._swap_fn(
+                    self.params, np.zeros((G * R,), np.int32))
         # multi-device: the first call may trace twice while cache shardings
         # settle to jit's steady state; anything beyond this is a regression
         self._warm_counts = self._jit_counts()
@@ -888,6 +980,11 @@ class ServeEngine:
         did = self._prefill_work(now)
         did = self._decode_work(now) or did
         self._step_idx += 1
+        if self._rebalancer is not None \
+                and self.ecfg.rebalance_interval > 0 \
+                and self._step_idx % self.ecfg.rebalance_interval == 0 \
+                and self._rebalancer.steps_observed > 0:
+            self._rebalance_now()
         if not did:
             nxt = self.queue.next_arrival()
             if nxt is not None:
@@ -947,6 +1044,17 @@ class ServeEngine:
             if self._spec:
                 rep["engine"]["speculative_policy"] = \
                     self.ecfg.speculative_policy
+        if self.cfg.is_moe:
+            rep["engine"]["moe_policy"] = \
+                self._moe_policy or self.cfg.moe.policy
+            rep["engine"]["replica_slots"] = self.ecfg.replica_slots
+            if self._rebalancer is not None:
+                rep["engine"]["rebalance_interval"] = \
+                    self.ecfg.rebalance_interval
+                rep["engine"]["rebalances"] = self._rebalances
+                rep["engine"]["replica_swaps"] = self._replica_swaps
+                rep["engine"]["replica_ids"] = self._replica_ids.tolist()
+                rep["engine"]["hot_experts"] = self._rebalancer.hot()
         rep["jit_entries"] = self._jit_counts()
         if self._warm_counts is not None:
             rep["recompiled_after_warmup"] = \
@@ -963,10 +1071,40 @@ class ServeEngine:
         if self._paged and self._sharing:
             counts["gather_prefix"] = self._gather_fn._cache_size()
             counts["copy_block"] = self._copy_fn._cache_size()
+        if self._rebalancer is not None:
+            counts["replica_swap"] = self._swap_fn._cache_size()
         return counts
 
 
 # ----------------------------------------------------------------------
+def _swap_replica_weights(params, rows):
+    """Gather expert weight rows into every replica leaf of the parameter
+    tree.  ``rows`` [G*R] indexes the rank-major stacked expert-row axis
+    (``row = host_rank * experts_per_rank + local_slot``, the layout
+    ``init_moe_params`` documents); each MoE parameter dict carries both
+    the ``w_*`` source rows and the ``w_rep_*`` destination slots, so the
+    swap is a pure per-leaf ``jnp.take`` — shapes (and therefore the jit
+    cache) never change.  Works on stacked ([n_steps, rows, d, f]) and
+    plain ([rows, d, f]) leaves alike: the row axis is always third from
+    the end."""
+    def walk(tree):
+        if isinstance(tree, dict):
+            if "w_rep_in" in tree and "w_in" in tree:
+                out = dict(tree)
+                for rep_name, src_name in (("w_rep_in", "w_in"),
+                                           ("w_rep_out", "w_out"),
+                                           ("w_rep_gate", "w_gate")):
+                    if rep_name in tree:
+                        w = tree[src_name]
+                        out[rep_name] = jnp.take(w, rows, axis=w.ndim - 3)
+                return out
+            return {k: walk(v) for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(walk(v) for v in tree)
+        return tree
+    return walk(params)
+
+
 def engine_config_for(cfg, *, max_slots: int, prompt_len: int,
                       max_new_tokens: int, prefill_chunk: int = 0,
                       eos_id: Optional[int] = None,
@@ -977,7 +1115,10 @@ def engine_config_for(cfg, *, max_slots: int, prompt_len: int,
                       speculative_k: int = 0,
                       speculative_policy: str = "ngram",
                       temperature: float = 0.0,
-                      top_k: int = 0, top_p: float = 1.0) -> EngineConfig:
+                      top_k: int = 0, top_p: float = 1.0,
+                      moe_policy: Optional[str] = None,
+                      rebalance_interval: int = 0,
+                      replica_slots: int = 0) -> EngineConfig:
     """Derive serving shapes from a workload: pool length covers prompt +
     generation, the prefill chunk divides the (padded) prompt, and the
     padded prompt fits every layer's KV capacity (sliding-window layers
@@ -1018,4 +1159,6 @@ def engine_config_for(cfg, *, max_slots: int, prompt_len: int,
         fused_paged_attention=fused_paged_attention,
         speculative_k=speculative_k,
         speculative_policy=speculative_policy,
-        temperature=temperature, top_k=top_k, top_p=top_p)
+        temperature=temperature, top_k=top_k, top_p=top_p,
+        moe_policy=moe_policy, rebalance_interval=rebalance_interval,
+        replica_slots=replica_slots)

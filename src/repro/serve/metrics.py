@@ -99,6 +99,9 @@ class ServeMetrics:
         self.prefill_chunks: int = 0
         self.occupancy: List[int] = []          # active slots per decode step
         self.moe_diags: Dict[str, List[float]] = {}
+        # vector-valued MoE diagnostics (per-rank rank_load [G], per-expert
+        # expert_load [Ep]) — kept per step for the load_balance report
+        self.load_vectors: Dict[str, List[np.ndarray]] = {}
         self.kv_blocks_in_use: List[int] = []   # per decode step (paged)
         self.kv_blocks_total: int = 0
         self.preemptions: int = 0
@@ -129,7 +132,13 @@ class ServeMetrics:
         else:
             self.prefill_chunks += 1
         for k, v in (diags or {}).items():
-            self.moe_diags.setdefault(f"{phase}/{k}", []).append(float(v))
+            arr = np.asarray(v)
+            if arr.ndim:
+                self.load_vectors.setdefault(f"{phase}/{k}", []).append(
+                    arr.reshape(-1).astype(np.float64))
+            else:
+                self.moe_diags.setdefault(f"{phase}/{k}", []).append(
+                    float(arr))
 
     def record_kv(self, blocks_in_use: int, blocks_total: int) -> None:
         """Per-decode-step KV-block occupancy of the paged pool."""
@@ -219,4 +228,41 @@ class ServeMetrics:
         if self.moe_diags:
             rep["moe"] = {k: float(np.mean(v))
                           for k, v in self.moe_diags.items()}
+        lb = self._load_balance()
+        if lb:
+            rep["load_balance"] = lb
         return _json_safe(rep)
+
+    def _load_balance(self) -> Dict[str, Any]:
+        """Paper §5 load metrics per phase, from the per-step vector
+        diagnostics: mean per-rank/per-expert load profiles, the max/mean
+        rank-load ratio (1.0 = perfect balance), the straggler-wait proxy
+        (mean of max - mean scheduled units per step — the token units the
+        average rank sits idle while the most-loaded rank finishes, the
+        static-shape analogue of the paper's GPU idle time), and total
+        scheduler drop counts."""
+        out: Dict[str, Any] = {}
+        for phase in ("decode", "prefill"):
+            rl = self.load_vectors.get(f"{phase}/rank_load")
+            el = self.load_vectors.get(f"{phase}/expert_load")
+            if rl is None and el is None:
+                continue
+            sec: Dict[str, Any] = {}
+            if rl:
+                m = np.stack(rl)                      # [steps, G]
+                mx, mn = m.max(axis=1), m.mean(axis=1)
+                sec["rank_load_mean"] = m.mean(axis=0).tolist()
+                sec["max_load_mean"] = float(mx.mean())
+                sec["mean_load_mean"] = float(mn.mean())
+                sec["max_mean_ratio"] = float(np.mean(
+                    np.where(mn > 0, mx / np.maximum(mn, 1e-9), 1.0)))
+                sec["straggler_wait_units"] = float(np.mean(mx - mn))
+            if el:
+                e = np.stack(el)                      # [steps, Ep]
+                sec["expert_load_mean"] = e.mean(axis=0).tolist()
+            for drop in ("send_drops", "dest_drops"):
+                vals = self.moe_diags.get(f"{phase}/{drop}")
+                if vals is not None:
+                    sec[f"{drop}_total"] = float(np.sum(vals))
+            out[phase] = sec
+        return out

@@ -138,6 +138,59 @@ def test_rebalance_properties(seed, gsh, q, skew):
     assert (np.asarray(S2) == S_np).all()
 
 
+def test_extra_local_spreads_without_foreign_slots():
+    """A hot expert replicated on every rank (extra_local) can shed load to
+    all of them with ZERO foreign slots — replica slots are weight-resident
+    destinations, exactly like the expert's host."""
+    topo = make_topology(4, 8)
+    counts = jnp.zeros((4, 8), jnp.int32).at[:, 0].set(100)
+    # without replication and K=0, nothing can move off expert 0's host
+    S_none, d_none = schedule(counts, topo, policy="harmoeny", q=1,
+                              c_pair=1000, num_foreign_slots=0)
+    assert int(d_none.moved) == 0
+    extra = jnp.zeros((4, 8), bool).at[:, 0].set(True)
+    S, diag = schedule(counts, topo, policy="harmoeny", q=1, c_pair=1000,
+                       num_foreign_slots=0, extra_local=extra)
+    t_g = np.asarray(S.sum(axis=(0, 1)))
+    assert t_g.tolist() == [100, 100, 100, 100]
+    assert (np.asarray(S.sum(axis=2)) == np.asarray(counts)).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([(4, 8), (8, 16)]),
+       st.integers(1, 8), st.integers(0, 2))
+def test_rebalance_extra_local_properties(seed, gsh, q, n_rep):
+    """Alg. 2 invariants hold with replica-slot placements mixed in: the
+    schedule stays conserved, non-negative, deterministic, and no worse
+    than without the extra placements."""
+    G, E = gsh
+    rng = np.random.default_rng(seed)
+    counts = rng.integers(0, 20, (G, E)).astype(np.int32)
+    counts[:, 0] += rng.integers(50, 200)
+    counts = jnp.asarray(counts)
+    topo = make_topology(G, E)
+    # replicate the n_rep hottest experts on every rank (a superset of any
+    # real placement: hosts included — is_local is already True there)
+    extra = np.zeros((G, E), bool)
+    extra[:, :n_rep] = True
+    extra = jnp.asarray(extra)
+    c_pair = max(int(2 * counts.sum()) // (G * G), 8)
+    S0 = initial_assign(counts, topo)
+    S, _ = rebalance(S0, topo, q=q, c_pair=c_pair, num_foreign_slots=2,
+                     extra_local=extra)
+    S_np, S0_np = np.asarray(S), np.asarray(S0)
+    assert (S_np.sum(axis=2) == np.asarray(counts)).all()
+    assert (S_np >= 0).all()
+    assert S_np.sum(axis=(0, 1)).max() <= S0_np.sum(axis=(0, 1)).max()
+    S_plain, _ = rebalance(S0, topo, q=q, c_pair=c_pair, num_foreign_slots=2)
+    # replication can only help: the balanced max load is no worse
+    assert S_np.sum(axis=(0, 1)).max() \
+        <= np.asarray(S_plain).sum(axis=(0, 1)).max()
+    S2, _ = rebalance(S0, topo, q=q, c_pair=c_pair, num_foreign_slots=2,
+                      extra_local=extra)
+    assert (np.asarray(S2) == S_np).all()
+
+
 @settings(max_examples=20, deadline=None)
 @given(st.integers(0, 2 ** 31 - 1))
 def test_even_split_conservation(seed):
