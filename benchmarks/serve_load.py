@@ -37,7 +37,18 @@ machine-readable ``BENCH_serve.json``:
   sweeping the active sequence length against ``L_max``: the reference
   materializes every row's full ``[L_max]`` logical K/V view regardless
   of actual length (constant bytes), the fused kernel touches only the
-  valid blocks (bytes scale with the active length).
+  valid blocks (bytes scale with the active length);
+* ``phases`` — per-phase serving breakdown (prefill / prefix-tail /
+  decode / verify tokens-per-second and analytic KV bytes touched) with
+  the unified fused path on vs the reference gather, at equal config:
+  a long-context (2k-prompt, window disabled) prefix-sharing cell and a
+  speculative-verify cell.  The fused cells assert that no hot phase
+  dispatches the logical gather (``attention_dispatch`` is fused on
+  every traced branch, ``attention_fallbacks`` empty).  Off-TPU the
+  fused kernels run in interpret mode, so wall tokens/s are reported
+  but the comparison carries on the analytic bytes and the clearly
+  labeled ``modeled_roofline_tok_s`` (bytes / v5e HBM bandwidth);
+  on TPU the wall columns are real.
 
   PYTHONPATH=src python benchmarks/serve_load.py [--out BENCH_serve.json]
 """
@@ -663,6 +674,174 @@ def decode_attention_microbench():
     }
 
 
+def _phase_engine(*, fused: bool, prompt_len: int, gen: int, chunk: int,
+                  prefix_sharing: bool = False, speculative_k: int = 0,
+                  slots: int = 2, kv_block: int = KV_BLOCK):
+    """Engine for the phase-breakdown cells: window disabled (long-context
+    paged pools exceed the reduced arch's 64-token window), unified fused
+    path (q-tiled prefill attention + paged decode/verify + grouped-GEMM
+    MoE) on or off as one switch."""
+    # window disabled for long paged pools; 2 layers keep the interpret-
+    # mode (off-TPU) fused cells inside a sane wall budget — the fused /
+    # gather contrast is per-layer, so the layer count cancels out
+    cfg = get_config(ARCH).reduced().replace(sliding_window=0, num_layers=2)
+    cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, policy="harmoeny"))
+    mesh = make_host_mesh(data=1, model=MODEL_PAR)
+    ms = MeshShape(tuple(zip(mesh.axis_names, mesh.devices.shape)))
+    model = build_model(cfg, ParallelConfig(attn_chunk=min(512, prompt_len)),
+                        batch=slots, seq_len=prompt_len,
+                        mesh_shape=ms, mesh=mesh)
+    with mesh:
+        params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(
+        model, params,
+        engine_config_for(cfg, max_slots=slots, prompt_len=prompt_len,
+                          max_new_tokens=gen, prefill_chunk=chunk,
+                          skew_seed=1, paged=True, kv_block_size=kv_block,
+                          prefix_sharing=prefix_sharing,
+                          speculative_k=speculative_k,
+                          fused_paged_attention=fused,
+                          fused_moe_gmm=fused),
+        mesh=mesh)
+    engine.warmup()
+    return cfg, engine
+
+
+def phases_breakdown():
+    """Per-phase tok/s + analytic KV bytes, fused vs gather (docstring top).
+
+    Cell pairs (identical workload, greedy, token counts cross-checked):
+
+    * ``long_prefill`` — 2048-token prompts sharing a 1024-token prefix,
+      prefix sharing on: exercises prefill, prefix-tail resume, and plain
+      decode.  The reference ``chunked_attention`` scans the whole
+      [1, s_pad] slab every chunk; the fused q-tiled kernel's causal
+      pruning stops at ``q_offset + chunk``, so its bytes grow with the
+      filled prefix instead of the pool size.
+    * ``spec_verify`` — short repetitive prompts, speculative k=4:
+      exercises the [B, k+1] verify phase, where the reference gather
+      materializes every row's full logical view per step.
+    """
+    from repro.core.qthreshold import V5E
+
+    interpret = jax.default_backend() != "tpu"
+    cells = []
+
+    def run_cell(workload, *, fused, prompt_len, gen, chunk, sharing,
+                 k, n_req, shared_prefix=0, kv_block=KV_BLOCK):
+        cfg, engine = _phase_engine(fused=fused, prompt_len=prompt_len,
+                                    gen=gen, chunk=chunk,
+                                    prefix_sharing=sharing,
+                                    speculative_k=k, kv_block=kv_block)
+        if workload == "spec_verify":
+            # tiled motif prompts so the n-gram proposer drafts well and
+            # the verify phase commits multi-token windows
+            from repro.serve import Request
+            rng = np.random.default_rng(7)
+            reqs = []
+            for i in range(n_req):
+                motif = rng.integers(0, 64, (4,)).astype(np.int32)
+                reqs.append(Request(
+                    rid=i, tokens=np.tile(motif, -(-prompt_len // 4))
+                    [:prompt_len], max_new_tokens=gen))
+        else:
+            reqs = poisson_requests(
+                n_req, rate=0.0, vocab_size=cfg.vocab_size,
+                prompt_len=prompt_len, max_new_tokens=gen, seed=6,
+                shared_prefix_len=shared_prefix)
+        t0 = time.perf_counter()
+        if sharing:
+            # a cold first request populates the prefix cache INSIDE the
+            # measured window: its chunks are the plain-prefill phase, the
+            # same-seed followers resume off its cached prefix and land in
+            # the prefix-tail phase
+            warm = poisson_requests(
+                1, rate=0.0, vocab_size=cfg.vocab_size,
+                prompt_len=prompt_len, max_new_tokens=gen, seed=6,
+                shared_prefix_len=shared_prefix)
+            engine.run(warm)
+        rep = engine.run(reqs)
+        wall_s = time.perf_counter() - t0
+        phases = {}
+        for name, ph in rep.get("phases", {}).items():
+            ph = dict(ph)
+            # bytes-roofline model: phase time if KV traffic were the
+            # bottleneck at v5e HBM bandwidth — the TPU-relevant contrast
+            # when the wall columns run the kernel in interpret mode
+            ph["modeled_roofline_tok_s"] = (
+                ph["tokens"] / (ph["kv_bytes_touched"] / V5E.hbm_bw)
+                if ph["kv_bytes_touched"] else None)
+            phases[name] = ph
+        cell = {
+            "workload": workload, "fused": fused,
+            "prompt_len": prompt_len, "gen": gen,
+            "prefill_chunk": chunk, "speculative_k": k,
+            "prefix_sharing": sharing, "n_requests": n_req,
+            "total_new_tokens": rep["total_new_tokens"],
+            "e2e_wall_s": wall_s,
+            "e2e_tok_s_wall": rep["total_new_tokens"] / wall_s,
+            "kv_bytes_total": sum(ph["kv_bytes_touched"]
+                                  for ph in phases.values()),
+            "phases": phases,
+            "attention_dispatch": rep.get("attention_dispatch", {}),
+            "attention_fallbacks": rep.get("attention_fallbacks", {}),
+        }
+        if fused:
+            # acceptance: with use_pallas on, no hot phase may dispatch
+            # the [B, L_max] logical gather or silently fall back
+            assert cell["attention_fallbacks"] == {}, \
+                f"silent fused fallbacks: {cell['attention_fallbacks']}"
+            for branch, d in cell["attention_dispatch"].items():
+                assert d["fused"], f"branch {branch} fell back: {d}"
+        cells.append(cell)
+        for name, ph in sorted(phases.items()):
+            print(f"[bench] phases {workload:12s} fused={str(fused):5s} "
+                  f"{name:11s} tok/s={ph['tokens_per_s']:9.1f} "
+                  f"bytes/token={ph['kv_bytes_per_token']:10.0f} "
+                  f"roofline={ph['modeled_roofline_tok_s'] or 0:12.0f}")
+        return cell
+
+    # long-context: 2048-token prompts; s_pad = 2048 + 256 (round-up) +
+    # 256 (prefix-sharing chunk) = 2560 = 20 x 128-token slab tiles
+    for fused in (False, True):
+        # 64-token KV blocks: the default 8-token blocks make the
+        # interpret-mode decode grid 8x deeper on the 2.5k-token pool
+        # for no extra information
+        run_cell("long_prefill", fused=fused, prompt_len=2048, gen=8,
+                 chunk=256, sharing=True, k=0, n_req=2,
+                 shared_prefix=1024, kv_block=64)
+    for fused in (False, True):
+        run_cell("spec_verify", fused=fused, prompt_len=16, gen=30,
+                 chunk=16, sharing=False, k=4, n_req=4)
+
+    by = {(c["workload"], c["fused"]): c for c in cells}
+    summary = {}
+    for w in ("long_prefill", "spec_verify"):
+        g, f = by[(w, False)], by[(w, True)]
+        assert g["total_new_tokens"] == f["total_new_tokens"], \
+            "fused and gather cells decoded different streams"
+        hot = "prefix_tail" if w == "long_prefill" else "verify"
+        summary[w] = {
+            "tokens_identical": True,
+            "hot_phase": hot,
+            "bytes_ratio_gather_over_fused":
+                g["phases"][hot]["kv_bytes_touched"]
+                / f["phases"][hot]["kv_bytes_touched"],
+            "e2e_tok_s_wall_gather": g["e2e_tok_s_wall"],
+            "e2e_tok_s_wall_fused": f["e2e_tok_s_wall"],
+            "e2e_bytes_gather": g["kv_bytes_total"],
+            "e2e_bytes_fused": f["kv_bytes_total"],
+            "e2e_improves_modeled":
+                f["kv_bytes_total"] < g["kv_bytes_total"],
+        }
+        print(f"[bench] phases headline {w}: {hot} bytes ratio "
+              f"{summary[w]['bytes_ratio_gather_over_fused']:.2f}x, "
+              f"e2e bytes {g['kv_bytes_total']} -> {f['kv_bytes_total']} "
+              f"(modeled win: {summary[w]['e2e_improves_modeled']})")
+    return {"fused_interpret_mode": interpret, "cells": cells,
+            "summary": summary}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default=os.path.join(
@@ -676,6 +855,7 @@ def main():
         speculative_compare()
     skew = skew_compare()
     decode_attn = decode_attention_microbench()
+    phases = phases_breakdown()
 
     out = {
         "meta": {
@@ -709,6 +889,7 @@ def main():
         },
         "skew": skew,
         "decode_attention": decode_attn,
+        "phases": phases,
     }
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
@@ -716,7 +897,8 @@ def main():
           f"({len(results)} sweep + {len(capacity)} capacity + "
           f"{len(prefix_cells)} prefix + {len(spec_cells)} speculative + "
           f"{len(skew['engine_cells'])}+{len(skew['modeled_cells'])} skew + "
-          f"{len(decode_attn['cells'])} decode-attention cells)")
+          f"{len(decode_attn['cells'])} decode-attention + "
+          f"{len(phases['cells'])} phase-breakdown cells)")
 
 
 if __name__ == "__main__":

@@ -56,6 +56,17 @@ echo "== 2-device CPU serve smoke (speculative + fused multi-query kernel) =="
 serve --paged --kv-block-size 8 --prefill-chunk 16 --speculative-k 3 \
     --fused-attention
 
+CELL="long-context fused prefill (q-tiled)"
+echo "== 2-device CPU serve smoke (1k prompt, fused q-tiled prefill + fused MoE) =="
+# --sliding-window 0 lifts the reduced model's 64-token window (a 1k-token
+# paged pool cannot fit it); --fused-attention then runs chunked prefill
+# through the q-tiled slab-as-pool kernel in STRICT mode (a silent
+# reference fallback would raise FusedPathUnavailable), and --fused-moe
+# routes the expert FFN through the grouped-GEMM kernel. Smaller request
+# count: interpret-mode q-tiled prefill is the slow cell.
+serve --paged --kv-block-size 64 --prefill-chunk 128 --prompt-len 1024 \
+    --requests 2 --sliding-window 0 --fused-attention --fused-moe
+
 # Skew cells: same heavy-skew stream (--skew 0.9 is already the serve()
 # default above) through the round_robin baseline and the HarMoEny
 # schedule; --q-tokens 1 so decode-scale batches clear the movement

@@ -201,6 +201,9 @@ class ParallelConfig:
     microbatch: int = 0           # >0: scan-accumulated microbatches w/ deferred psum
     compress_grads: bool = False  # int8 all-reduce
     use_pallas: bool = False      # pallas kernels (TPU target); False = XLA ref path
+    pallas_strict: bool = False   # use_pallas explicitly required: an inapplicable
+                                  # fused path raises (FusedPathUnavailable) instead
+                                  # of silently falling back to the reference
     loss_chunk: int = 2048        # vocab-loss sequence chunk
     attn_chunk: int = 1024        # chunked-flash KV block
     moe_cf_pair: float = 2.0      # off-diagonal dispatch pair capacity factor

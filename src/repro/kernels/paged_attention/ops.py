@@ -1,39 +1,71 @@
 """Jitted wrapper used by models/attention.py (layout adaptation)."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax.numpy as jnp
 
 from repro.kernels.paged_attention.paged_attention import \
     paged_attention_kernel
 
+# target rows (q positions x rep) per kernel q tile; the auto choice
+# keeps small windows (decode, verify k<=4) on a single tile so the
+# scratch/flush schedule matches the pre-q-tiling kernel exactly
+_Q_TILE_ROWS = 512
+
+
+def largest_block_divisor(n: int, cap: int = 128) -> int:
+    """Largest divisor of ``n`` that is <= cap (>= 1 always exists).
+
+    Used to view a slab scratch cache [B, S_max] as a pool of
+    ``S_max // bs`` contiguous blocks per row so the same paged kernel
+    can serve prefill continuation (see models/attention.py).
+    """
+    for bs in range(min(cap, n), 0, -1):
+        if n % bs == 0:
+            return bs
+    return 1
+
 
 def paged_attention(q: jnp.ndarray, k_pool: jnp.ndarray, v_pool: jnp.ndarray,
                     block_table: jnp.ndarray, cache_len: jnp.ndarray, *,
                     block_size: int, softcap: float = 0.0,
+                    q_tile: Optional[int] = None,
                     interpret: bool = False) -> jnp.ndarray:
     """Model-layout entry: q [B, S, H, hd] with S >= 1 query positions
-    (S = 1 is plain decode; S = k + 1 is a speculative-verify window,
-    causal within the window); k_pool/v_pool [1, P, Hkv, hd] *physical*
-    pools with P = num_blocks * block_size (the serve engine's paged
-    cache leaves); block_table [B, n_blocks] int32; cache_len scalar or
-    per-row [B] — the total valid length INCLUDING the S window positions
-    (query i sits at absolute position ``cache_len - S + i``)
-    -> [B, S, H, hd].
+    (S = 1 is plain decode; S = k + 1 is a speculative-verify window;
+    S = chunk is a prefill chunk — always causal within the window);
+    k_pool/v_pool [1, P, Hkv, hd] *physical* pools with
+    P = num_blocks * block_size (the serve engine's paged cache leaves);
+    block_table [B, n_blocks] int32; cache_len scalar or per-row [B] —
+    the total valid length INCLUDING the S window positions (query i
+    sits at absolute position ``cache_len - S + i``) -> [B, S, H, hd].
 
     The pool's KV axis is viewed as [num_blocks, block_size] (pure
     reshape, no copy) and q as [B, Hkv, S * rep, hd] (query i, q head
     h = g * rep + r at row i * rep + r — the ``_repeat_kv`` head order per
     query), so the kernel can index whole physical blocks and handle GQA
     and the query window in its index maps and mask.
+
+    ``q_tile`` (queries per kernel q tile) defaults to all of S when
+    S * rep fits one ~512-row tile, else ~512 // rep; S is zero-padded at
+    the deep end up to a tile multiple (ragged last tile) and the padded
+    outputs are dropped here.
     """
     B, S, H, hd = q.shape
     P, Hkv = k_pool.shape[1], k_pool.shape[2]
     rep = H // Hkv
     num_blocks = P // block_size
     assert num_blocks * block_size == P, (P, block_size)
+    if q_tile is None:
+        q_tile = S if S * rep <= _Q_TILE_ROWS else max(1, _Q_TILE_ROWS // rep)
+    q_tile = min(q_tile, S)
+    q_pad = -(-S // q_tile) * q_tile
     # [B, S, Hkv, rep, hd] -> [B, Hkv, S, rep, hd] -> [B, Hkv, S*rep, hd]
     qk = q.reshape(B, S, Hkv, rep, hd).transpose(0, 2, 1, 3, 4) \
         .reshape(B, Hkv, S * rep, hd)
+    if q_pad > S:
+        qk = jnp.pad(qk, ((0, 0), (0, 0), (0, (q_pad - S) * rep), (0, 0)))
     kp = k_pool[0].reshape(num_blocks, block_size, Hkv, hd)
     vp = v_pool[0].reshape(num_blocks, block_size, Hkv, hd)
     cl = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32).reshape(-1),
@@ -41,6 +73,7 @@ def paged_attention(q: jnp.ndarray, k_pool: jnp.ndarray, v_pool: jnp.ndarray,
     out = paged_attention_kernel(qk, kp, vp,
                                  jnp.asarray(block_table, jnp.int32), cl,
                                  block_size=block_size, softcap=softcap,
-                                 q_len=S, interpret=interpret)
-    return out.reshape(B, Hkv, S, rep, hd).transpose(0, 2, 1, 3, 4) \
-        .reshape(B, S, H, hd)
+                                 q_len=S, q_tile=q_tile, rep=rep,
+                                 interpret=interpret)
+    return out[:, :, :S * rep].reshape(B, Hkv, S, rep, hd) \
+        .transpose(0, 2, 1, 3, 4).reshape(B, S, H, hd)

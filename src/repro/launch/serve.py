@@ -54,6 +54,11 @@ def config_from_args(args):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if getattr(args, "sliding_window", -1) >= 0:
+        # long-context cells: reduced() clamps archs like mixtral to a
+        # 64-token window, which rejects paged pools longer than the
+        # window; 0 disables the window so >=2k prompts can run paged
+        cfg = cfg.replace(sliding_window=args.sliding_window)
     if cfg.moe is None:
         return cfg
     moe = dataclasses.replace(cfg.moe, policy=args.policy)
@@ -98,6 +103,7 @@ def build_serving_engine(args, cfg=None, *, prompt_len=None, gen=None):
         kv_block_size=args.kv_block_size, num_kv_blocks=args.kv_blocks,
         prefix_sharing=args.prefix_sharing,
         fused_paged_attention=args.fused_attention,
+        fused_moe_gmm=getattr(args, "fused_moe", False),
         speculative_k=args.speculative_k,
         speculative_policy=args.speculative_policy,
         temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
@@ -239,9 +245,19 @@ def main():
     ap.add_argument("--kv-blocks", type=int, default=0,
                     help="usable KV blocks (0 = worst case: slab parity)")
     ap.add_argument("--fused-attention", action="store_true",
-                    help="fused Pallas paged-attention decode kernel: reads "
-                         "K/V block-wise through the block table inside the "
-                         "kernel (needs --paged; interpret mode off-TPU)")
+                    help="fused Pallas attention on every phase: q-tiled "
+                         "paged attention for prefill / prefix-tail / "
+                         "verify and block-table decode attention (needs "
+                         "--paged for decode; interpret mode off-TPU). "
+                         "Strict: raises instead of silently falling back")
+    ap.add_argument("--fused-moe", action="store_true",
+                    help="grouped-GEMM Pallas expert FFN on prefill/decode/"
+                         "verify token batches (MoE archs only; interpret "
+                         "mode off-TPU)")
+    ap.add_argument("--sliding-window", type=int, default=-1,
+                    help="override the arch's sliding window (-1 = keep; "
+                         "0 = full attention — needed for long-context "
+                         "paged cells on reduced window archs)")
     ap.add_argument("--speculative-k", type=int, default=0,
                     help="speculative decoding: verify up to k self-drafted "
                          "tokens per decode step in one static [B, k+1] "

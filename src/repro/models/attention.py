@@ -24,6 +24,53 @@ from repro.models.layers import apply_rope
 _NEG_INF = -1e30
 
 
+class FusedPathUnavailable(NotImplementedError):
+    """``use_pallas`` was required (strict) but no fused kernel applies."""
+
+
+# Trace-time dispatch record: ``attention_block`` runs under jit, so each
+# record is appended exactly once per traced call site (one trace covers
+# every execution of that entry) — the log is therefore a faithful
+# kernel-coverage map of which branches dispatched the fused Pallas path
+# vs the reference gather, and *why* a requested fused path fell back.
+# The serve engine resets it before warmup and snapshots it after.
+_dispatch_log: list = []
+_DISPATCH_LOG_CAP = 4096
+
+
+def reset_dispatch_log() -> None:
+    _dispatch_log.clear()
+
+
+def dispatch_log() -> list:
+    return list(_dispatch_log)
+
+
+def fallback_counts(log: Optional[list] = None) -> Dict[str, int]:
+    """Branches where ``use_pallas`` was requested but the reference path
+    ran anyway (the previously *silent* fallbacks), keyed by branch.
+
+    Counts over the live module log by default; pass a snapshot from
+    ``dispatch_log()`` to count over a captured window instead."""
+    out: Dict[str, int] = {}
+    for rec in (_dispatch_log if log is None else log):
+        if rec["requested"] and not rec["fused"]:
+            out[rec["branch"]] = out.get(rec["branch"], 0) + 1
+    return out
+
+
+def _record_dispatch(branch: str, *, fused: bool, requested: bool,
+                     strict: bool = False, reason: str = "") -> None:
+    if len(_dispatch_log) < _DISPATCH_LOG_CAP:
+        _dispatch_log.append({"branch": branch, "fused": bool(fused),
+                              "requested": bool(requested),
+                              "reason": reason})
+    if requested and not fused and strict:
+        raise FusedPathUnavailable(
+            f"attention_block: use_pallas was explicitly required but the "
+            f"fused path cannot apply on branch {branch!r}: {reason}")
+
+
 def init_attention(key: jax.Array, cfg: ModelConfig, dtype) -> Dict[str, jnp.ndarray]:
     d, H, Hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
     ks = jax.random.split(key, 4)
@@ -222,6 +269,7 @@ def attention_block(x: jnp.ndarray, p: Dict[str, jnp.ndarray],
                     continue_prefill: bool = False,
                     block_table: Optional[jnp.ndarray] = None,
                     block_size: int = 0,
+                    strict_pallas: bool = False,
                     ) -> Tuple[jnp.ndarray, Optional[AttnCache]]:
     """Full attention sub-layer (projections + RoPE + attention + out-proj).
 
@@ -243,8 +291,21 @@ def attention_block(x: jnp.ndarray, p: Dict[str, jnp.ndarray],
         binding sliding window raises).
       * chunked-prefill continuation (``continue_prefill``): cache given and
         x is a [B, C] prompt chunk starting at position ``q_offset`` (scalar);
-        writes K/V at [q_offset, q_offset + C) and attends over the full
-        cache — the causal mask hides the unwritten tail.
+        writes K/V at [q_offset, q_offset + C).  With ``use_pallas`` the
+        slab cache is viewed as a pool of contiguous per-row blocks with
+        an identity block table and ``cache_len = q_offset + C``, so the
+        SAME q-tiled paged kernel serves chunked prefill and prefix-tail
+        prefill (the kernel's causal pruning skips kv tiles past
+        ``q_offset + C`` — the reference ``chunked_attention`` scans the
+        whole [B, S_max] slab every chunk).  Otherwise the chunked
+        reference attends over the full cache, the causal mask hiding
+        the unwritten tail.
+
+    Every branch records its dispatch decision (fused kernel vs reference)
+    into the module-level trace-time log — see ``dispatch_log`` /
+    ``fallback_counts``.  ``strict_pallas=True`` turns a requested-but-
+    inapplicable fused path from a silent fallback into a loud
+    ``FusedPathUnavailable`` at trace time.
     """
     B, S, d = x.shape
     window = 0 if (is_global and cfg.global_attn_every) else cfg.sliding_window
@@ -269,17 +330,57 @@ def attention_block(x: jnp.ndarray, p: Dict[str, jnp.ndarray],
             cache.k, k.astype(cache.k.dtype), (0, start, 0, 0))
         v_cache = jax.lax.dynamic_update_slice(
             cache.v, v.astype(cache.v.dtype), (0, start, 0, 0))
-        out = chunked_attention(q, k_cache, v_cache, causal=causal,
-                                window=window, softcap=softcap,
-                                chunk=attn_chunk, q_offset=q_offset)
+        # fused path: view the [B, S_max] slab as B contiguous block
+        # chains and run the q-tiled paged kernel with an identity table
+        # and cache_len = q_offset + S — the kernel's mask (query i at
+        # absolute position cache_len - S + i = q_offset + i) matches
+        # chunked_attention(..., q_offset=q_offset) exactly, and its
+        # causal pruning stops at q_offset + S instead of scanning the
+        # whole slab.  A window can only be ignored when it cannot bind
+        # over the slab (window >= S_max).
+        fuse = use_pallas and causal and (window == 0 or window >= S_max)
+        if fuse:
+            from repro.kernels.paged_attention.ops import (
+                largest_block_divisor, paged_attention)
+            bs_slab = largest_block_divisor(S_max)
+            nb = S_max // bs_slab
+            Hkv, hd = k_cache.shape[2], k_cache.shape[3]
+            table = (jnp.arange(B, dtype=jnp.int32)[:, None] * nb
+                     + jnp.arange(nb, dtype=jnp.int32)[None, :])
+            cl = jnp.broadcast_to(start + S, (B,))
+            _record_dispatch("prefill_continue", fused=True,
+                             requested=use_pallas)
+            out = paged_attention(
+                q, k_cache.reshape(1, B * S_max, Hkv, hd),
+                v_cache.reshape(1, B * S_max, Hkv, hd), table, cl,
+                block_size=bs_slab, softcap=softcap, interpret=interpret)
+        else:
+            _record_dispatch(
+                "prefill_continue", fused=False, requested=use_pallas,
+                strict=strict_pallas,
+                reason=("non-causal attention" if not causal else
+                        f"binding sliding window {window} < slab {S_max}"))
+            out = chunked_attention(q, k_cache, v_cache, causal=causal,
+                                    window=window, softcap=softcap,
+                                    chunk=attn_chunk, q_offset=q_offset)
         y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
         return y, AttnCache(k_cache, v_cache)
     if cache is not None and S > 1 and block_table is None:
         # prefill with a pre-allocated cache: full causal attention over x,
         # then write the computed K/V into the cache prefix [0, S).
-        out = chunked_attention(q, k, v, causal=causal, window=window,
-                                softcap=softcap, chunk=attn_chunk,
-                                q_offset=0)
+        if use_pallas and causal and window == 0 and softcap == 0.0:
+            from repro.kernels.flash_attention.ops import flash_attention
+            _record_dispatch("prefill_cache", fused=True, requested=True)
+            out = flash_attention(q, k, v, causal=True, interpret=interpret)
+        else:
+            _record_dispatch(
+                "prefill_cache", fused=False, requested=use_pallas,
+                strict=strict_pallas,
+                reason=(f"flash kernel guards failed (causal={causal}, "
+                        f"window={window}, softcap={softcap})"))
+            out = chunked_attention(q, k, v, causal=causal, window=window,
+                                    softcap=softcap, chunk=attn_chunk,
+                                    q_offset=0)
         S_max = cache.k.shape[1]
         kw = k[:, :S_max].astype(cache.k.dtype)
         vw = v[:, :S_max].astype(cache.v.dtype)
@@ -322,12 +423,16 @@ def attention_block(x: jnp.ndarray, p: Dict[str, jnp.ndarray],
             * block_size + pos % block_size                 # [B, S]
         k_cache = cache.k.at[0, widx].set(k.astype(cache.k.dtype))
         v_cache = cache.v.at[0, widx].set(v.astype(cache.v.dtype))
+        branch = "verify" if S > 1 else "decode"
         if use_pallas:
             from repro.kernels.paged_attention.ops import paged_attention
+            _record_dispatch(branch, fused=True, requested=True)
             out = paged_attention(q, k_cache, v_cache, block_table, cl,
                                   block_size=block_size, softcap=softcap,
                                   interpret=interpret)
         else:
+            _record_dispatch(branch, fused=False, requested=False,
+                             reason="use_pallas not requested")
             out = paged_decode_attention(q, k_cache, v_cache, block_table,
                                          cl, block_size=block_size,
                                          softcap=softcap)
@@ -353,14 +458,24 @@ def attention_block(x: jnp.ndarray, p: Dict[str, jnp.ndarray],
             v_cache = jax.lax.dynamic_update_slice(
                 cache.v, v.astype(cache.v.dtype), (0, pos, 0, 0))
         eff_len = jnp.minimum(cl, S_max) if ring else cl
+        _record_dispatch(
+            "decode_slab", fused=False, requested=use_pallas,
+            strict=strict_pallas,
+            reason="slab decode has no fused kernel (paged pool required)")
         out = decode_attention(q, k_cache, v_cache, eff_len,
                                window=0 if ring else window, softcap=softcap)
         new_cache = AttnCache(k_cache, v_cache)
     else:
         if use_pallas and causal and window == 0 and softcap == 0.0:
             from repro.kernels.flash_attention.ops import flash_attention
+            _record_dispatch("prefill", fused=True, requested=True)
             out = flash_attention(q, k, v, causal=True, interpret=interpret)
         else:
+            _record_dispatch(
+                "prefill", fused=False, requested=use_pallas,
+                strict=strict_pallas,
+                reason=(f"flash kernel guards failed (causal={causal}, "
+                        f"window={window}, softcap={softcap})"))
             out = chunked_attention(q, k, v, causal=causal, window=window,
                                     softcap=softcap, chunk=attn_chunk,
                                     q_offset=q_offset)

@@ -333,7 +333,8 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
         return logits, out_cache, pos, diags
 
     def prefill_chunk(params, tokens, caches, pos, last_index=None,
-                      skew_key=None, moe_replica_ids=None):
+                      skew_key=None, moe_replica_ids=None,
+                      fused_attention=None, fused_moe=None):
         """Chunked-prefill continuation for the serving engine.
 
         tokens [Bc, C] is the next prompt chunk, appended to ``caches`` at
@@ -342,6 +343,13 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
         ``last_index`` within the chunk (default C - 1); pad the final chunk
         to C and pass the true last-token index. The caller owns position
         bookkeeping for partially-filled final chunks.
+        ``fused_attention`` (static) overrides ``pcfg.use_pallas`` for this
+        chunk's attention blocks — the q-tiled paged kernel then runs the
+        whole chunk over the slab scratch (strict: an inapplicable fused
+        path raises instead of silently falling back); ``fused_moe``
+        (static) overrides the MoE spec's ``use_pallas`` so the chunk's
+        Bc * C expert tokens go through the grouped-GEMM Pallas kernel —
+        both wired by the serve engine without rebuilding the model.
         """
         Bc, C = tokens.shape
         spec = moe_spec
@@ -350,6 +358,8 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
                 spec, tokens_local=Bc * C,
                 seq_sharded=(C % mesh_shape.ep_degree == 0
                              and mesh_shape.ep_degree > 1))
+            if fused_moe is not None:
+                spec = dataclasses.replace(spec, use_pallas=bool(fused_moe))
         h = _embed_tokens(params, tokens, offset=pos)
         new_pos = pos + C
         # pad tokens beyond last_index are dead: keep them out of MoE
@@ -360,11 +370,16 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
             vmask = jnp.arange(C)[None, :] <= (li[..., None] if li.ndim
                                                else li)
             vmask = jnp.broadcast_to(vmask, (Bc, C))
+        pcfg_step = None
+        if fused_attention is not None:
+            pcfg_step = dataclasses.replace(
+                pcfg, use_pallas=bool(fused_attention),
+                pallas_strict=bool(fused_attention))
         h, new_stack, diags = _backbone(
             params, h, mode="prefill", cache=caches["stack"],
             cache_len=new_pos, q_offset=pos, spec=spec, skew_key=skew_key,
             continue_prefill=True, valid_mask=vmask,
-            moe_replica_ids=moe_replica_ids)
+            pcfg_run=pcfg_step, moe_replica_ids=moe_replica_ids)
         idx = jnp.asarray(C - 1 if last_index is None else last_index,
                           jnp.int32)
         if idx.ndim:
@@ -380,7 +395,7 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
 
     def decode_step(params, token, caches, pos, skew_key=None,
                     active_mask=None, block_table=None, block_size=0,
-                    fused_attention=None, moe_policy=None,
+                    fused_attention=None, fused_moe=None, moe_policy=None,
                     moe_replica_ids=None):
         """token [B, S] int32 (S = 1 is plain decode; S = k + 1 is a
         speculative-verify window, paged only); pos = current length BEFORE
@@ -393,8 +408,11 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
         writes and attention gathers go through each row's block chain,
         causal within the window when S > 1.
         ``fused_attention`` (static, paged mode only) overrides
-        ``pcfg.use_pallas`` for this step's attention blocks, letting the
-        serve engine opt into the fused paged-attention kernel without
+        ``pcfg.use_pallas`` for this step's attention blocks (strict: an
+        inapplicable fused path raises instead of silently falling back)
+        and ``fused_moe`` (static) overrides the MoE spec's ``use_pallas``
+        (grouped-GEMM Pallas expert FFN for the B or B * S routed tokens),
+        letting the serve engine opt into the fused kernels without
         rebuilding the model.
         ``moe_policy`` (static) overrides the decode-path scheduling policy
         for this step; ``moe_replica_ids`` [G, R] (traced, -1 = empty) names
@@ -426,10 +444,14 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
             # the verify window routes B * S tokens per step, not B
             spec_dec = dataclasses.replace(
                 spec_dec, tokens_local=spec_dec.tokens_local * S)
+        if spec_dec is not None and fused_moe is not None:
+            spec_dec = dataclasses.replace(
+                spec_dec, use_pallas=bool(fused_moe))
         pcfg_step = None
         if fused_attention is not None and block_table is not None:
             pcfg_step = dataclasses.replace(
-                pcfg, use_pallas=bool(fused_attention))
+                pcfg, use_pallas=bool(fused_attention),
+                pallas_strict=bool(fused_attention))
         h, new_stack, diags = _backbone(
             params, h, mode="decode", cache=caches["stack"],
             cache_len=new_pos, q_offset=pos, spec=spec_dec,

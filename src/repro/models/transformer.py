@@ -105,7 +105,8 @@ def _apply_one_layer(x: jnp.ndarray, p: Dict[str, Any], kind: str,
         attn_chunk=pcfg.attn_chunk, use_pallas=pcfg.use_pallas,
         interpret=jax.default_backend() != "tpu",
         continue_prefill=continue_prefill,
-        block_table=block_table, block_size=block_size)
+        block_table=block_table, block_size=block_size,
+        strict_pallas=pcfg.pallas_strict)
     if cfg.post_norm:
         h = norm(h, p["post_norm1"], cfg.norm)
     x = x + h

@@ -57,6 +57,7 @@ and prefix-embedding models are follow-ons.
 from __future__ import annotations
 
 import contextlib
+import time
 from collections import deque
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -66,6 +67,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import round_up
+from repro.kernels.paged_attention.ops import largest_block_divisor
+from repro.models import attention as attention_dispatch
 from repro.serve.arrivals import AdmissionQueue, WallClock
 from repro.serve.rebalance import ExpertRebalancer
 from repro.serve.metrics import ServeMetrics
@@ -98,6 +101,11 @@ class EngineConfig:
     # instead of gathering each row's [L_max] logical view (paged only;
     # interpret mode off-TPU)
     fused_paged_attention: bool = False
+    # fused grouped-GEMM Pallas expert FFN (kernels/moe_gmm) for the
+    # decode/verify/prefill expert path (MoE models only; interpret mode
+    # off-TPU): the scheduled expert batches run one tiled kernel instead
+    # of per-expert dense matmuls
+    fused_moe_gmm: bool = False
     # --- prefix sharing (paged only) ---
     prefix_sharing: bool = False
     # --- speculative decoding (paged only) ---
@@ -206,6 +214,9 @@ class ServeEngine:
         if (ecfg.moe_policy is not None or ecfg.replica_slots > 0) \
                 and not cfg.is_moe:
             raise ValueError("moe_policy / replica_slots need an MoE model")
+        if ecfg.fused_moe_gmm and not cfg.is_moe:
+            raise ValueError("fused_moe_gmm is the grouped-GEMM expert "
+                             "FFN kernel; it needs an MoE model")
         self._moe_policy = ecfg.moe_policy
         self._rebalancer: Optional[ExpertRebalancer] = None
         self._replica_ids: Optional[np.ndarray] = None
@@ -326,10 +337,19 @@ class ServeEngine:
                     p, t, c, pos, k, a, None, rep))
         # replica ids ride along as a trailing traced arg so between-window
         # weight swaps never re-trace (None = no replica slots: an empty
-        # pytree, same trace either way)
+        # pytree, same trace either way).  With fused_paged_attention the
+        # prefill chunk ALSO runs the q-tiled Pallas kernel: the slab
+        # scratch is viewed as contiguous per-row blocks inside
+        # attention_block's continue_prefill branch (strict — an
+        # inapplicable fused path raises at warmup instead of silently
+        # gathering); fused_moe_gmm routes the chunk's Bc * C expert
+        # tokens through the grouped-GEMM kernel.
+        pf_fused_attn = True if ecfg.fused_paged_attention else None
+        pf_fused_moe = True if ecfg.fused_moe_gmm else None
         self._prefill_fn = jax.jit(
             lambda p, t, c, pos, last, key, rep: model.prefill_chunk(
-                p, t, c, pos, last, key, moe_replica_ids=rep))
+                p, t, c, pos, last, key, moe_replica_ids=rep,
+                fused_attention=pf_fused_attn, fused_moe=pf_fused_moe))
 
         self.pos = np.zeros((B,), np.int32)      # per-slot sequence length
         self.tok = np.zeros((B,), np.int32)      # per-slot last token
@@ -348,6 +368,23 @@ class ServeEngine:
         self._evict0 = 0
         self._cow0 = 0
         self._warm_counts: Optional[Dict[str, int]] = None
+        # --- per-phase attention byte model (metrics.record_phase) ---
+        # bytes one KV token costs to read across the stack (K + V, every
+        # layer), and the slab block size the fused prefill path derives —
+        # must mirror attention_block's largest_block_divisor choice so the
+        # analytic bytes match what the kernel's causal pruning touches
+        kvb = {"float32": 4, "bfloat16": 2}.get(cfg.dtype, 4)
+        self._kv_token_bytes = (2 * cfg.num_layers
+                                * (cfg.num_kv_heads or cfg.num_heads)
+                                * cfg.resolved_head_dim * kvb)
+        self._scratch_len = self._s_pad if self._paged else ecfg.max_seq_len
+        self._slab_bs = largest_block_divisor(self._scratch_len)
+        # attention dispatch-log snapshot taken right after warmup's traces;
+        # when warmup() is skipped (tests drive run() directly) report()
+        # falls back to the live log, which this reset scopes to the
+        # engine built last
+        self._attn_dispatch: Optional[List[Dict[str, Any]]] = None
+        attention_dispatch.reset_dispatch_log()
 
     # ------------------------------------------------------------------
     def _ctx(self):
@@ -371,6 +408,8 @@ class ServeEngine:
             kw = dict(block_table=bt, block_size=self.ecfg.kv_block_size)
             if self.ecfg.fused_paged_attention:
                 kw["fused_attention"] = True
+        if self.ecfg.fused_moe_gmm:
+            kw["fused_moe"] = True
         logits, pool, _, diags = self.model.decode_step(
             params, tok, pool, pos, skew_key=skew_key, active_mask=active,
             moe_policy=self._moe_policy, moe_replica_ids=rep, **kw)
@@ -392,6 +431,8 @@ class ServeEngine:
                                   block_size=self.ecfg.kv_block_size)
         if self.ecfg.fused_paged_attention:
             kw["fused_attention"] = True
+        if self.ecfg.fused_moe_gmm:
+            kw["fused_moe"] = True
         logits, pool, _, diags = self.model.decode_step(
             params, toks, pool, pos, skew_key=skew_key, active_mask=active,
             moe_policy=self._moe_policy, moe_replica_ids=rep, **kw)
@@ -647,6 +688,34 @@ class ServeEngine:
                     break
 
     # ------------------------------------------------------------------
+    def _attn_kv_bytes(self, span: int) -> int:
+        """Analytic attention-read bytes for one decode/verify step whose
+        deepest read per active row is ``pos + span``: the fused kernel
+        touches each row's live block-rounded chain; the reference gather
+        materializes every row's whole [L_max] logical view."""
+        bs = self.ecfg.kv_block_size
+        if self._paged:
+            if self.ecfg.fused_paged_attention:
+                lens = self.pos[self.active] + span
+                toks = int(np.sum(-(-lens // bs) * bs))
+            else:
+                toks = self.ecfg.max_slots * self.blocks_per_slot * bs
+        else:
+            toks = self.ecfg.max_slots * self.ecfg.max_seq_len
+        return toks * self._kv_token_bytes
+
+    def _prefill_kv_bytes(self, upto: int) -> int:
+        """Analytic attention-read bytes for one prefill chunk whose
+        deepest position is ``upto``: the q-tiled kernel's causal pruning
+        stops at the slab-block-rounded write frontier; the chunked
+        reference scans the whole scratch slab."""
+        if self._paged and self.ecfg.fused_paged_attention:
+            toks = -(-upto // self._slab_bs) * self._slab_bs
+        else:
+            toks = self._scratch_len
+        return toks * self._kv_token_bytes
+
+    # ------------------------------------------------------------------
     def _next_key(self, stream_key, idx: int):
         if not (self._skew or self._sample):
             return None
@@ -661,6 +730,7 @@ class ServeEngine:
                     break
                 self._pf = self._pf_queue.popleft()
             st = self._pf
+            t0 = time.perf_counter()
             if self._sharing and st.prefill_pos > 0 and not st.prefix_loaded:
                 # mid-prompt restart off a cached prefix: the uncached
                 # tail's attention reads the prefix K/V from the scratch,
@@ -686,6 +756,8 @@ class ServeEngine:
                     self.pool = self._write_fn(
                         self.pool, self._scratch, self._bt_row(st),
                         np.int32(start))
+                jax.block_until_ready(logits)
+            dt = time.perf_counter() - t0
             st.prefill_pos += n
             if self._sharing:
                 # every block fully covered by committed K/V joins the
@@ -694,6 +766,14 @@ class ServeEngine:
                                           seq[:st.prefill_pos])
             self.metrics.record_step(diags if self.cfg.is_moe else {}, 0,
                                      phase="prefill")
+            # prefix-tail: the request restarted mid-sequence off a prefix
+            # cache hit, so its chunks attend a deeper window than a plain
+            # prefill of the same tail length
+            self.metrics.record_phase(
+                ("prefix_tail" if (self._sharing
+                                   and (st.cached_prefix_tokens or 0) > 0)
+                 else "prefill"),
+                n, dt, self._prefill_kv_bytes(start + n))
             did = True
             if st.prefill_done:
                 if st.resumed:
@@ -734,14 +814,18 @@ class ServeEngine:
             return False
         key = self._next_key(self._dec_key, self._step_idx)
         bt_args = (self.block_table.copy(),) if self._paged else ()
+        t0 = time.perf_counter()
         with self._ctx():
             nxt, self.pool, diags = self._decode_fn(
                 self.params, self.tok[:, None], self.pool, self.pos,
                 *bt_args, key, self.active.copy(), self._replica_ids)
         nxt = np.asarray(nxt)
+        dt = time.perf_counter() - t0
         now = self.clock.now()       # post-sync: token times include compute
         self.metrics.record_step(diags if self.cfg.is_moe else {},
                                  int(self.active.sum()), phase="decode")
+        self.metrics.record_phase("decode", int(self.active.sum()), dt,
+                                  self._attn_kv_bytes(1))
         self._observe_load(diags)
         if self._paged:
             self.metrics.record_kv(self._alloc.blocks_in_use,
@@ -798,20 +882,26 @@ class ServeEngine:
                 toks[s, 1:1 + len(d)] = d
                 draft_len[s] = len(d)
         key = self._next_key(self._dec_key, self._step_idx)
+        t0 = time.perf_counter()
         with self._ctx():
             logits, self.pool, diags = self._decode_fn(
                 self.params, toks, self.pool, self.pos,
                 self.block_table.copy(), key, self.active.copy(),
                 self._replica_ids)
         logits = np.asarray(logits)          # [B, k+1, V]
+        dt = time.perf_counter() - t0
         now = self.clock.now()   # post-sync: token times include compute
         self.metrics.record_step(diags if self.cfg.is_moe else {},
                                  int(self.active.sum()), phase="decode")
+        # bytes computed against pre-commit positions: the verify window
+        # reads each active row's chain up to pos + k + 1
+        verify_bytes = self._attn_kv_bytes(k + 1)
         self._observe_load(diags)
         self.metrics.record_kv(self._alloc.blocks_in_use,
                                self._alloc.usable_blocks)
         self.metrics.spec_steps += 1
         self.metrics.spec_slot_steps += int(self.active.sum())
+        total_commit = 0
         for s in np.nonzero(self.active)[0]:
             st = self.state_by_slot[s]
             drafts = toks[s, 1:1 + int(draft_len[s])].tolist()
@@ -837,6 +927,7 @@ class ServeEngine:
                     break
             self.pos[s] += n_commit
             self.metrics.spec_committed += n_commit
+            total_commit += n_commit
             if self._sharing and self.pos[s] // bs > old_pos // bs:
                 # crossed >= 1 block boundary this step: index every newly
                 # full block so later prompts can hit them
@@ -847,6 +938,7 @@ class ServeEngine:
                 self._finish(st, now)
             else:
                 self.tok[s] = st.output[-1]
+        self.metrics.record_phase("verify", total_commit, dt, verify_bytes)
         return True
 
     # ------------------------------------------------------------------
@@ -920,6 +1012,11 @@ class ServeEngine:
                 "requests, no occupied slots)")
         C = self.ecfg.prefill_chunk
         chunk = np.zeros((1, C), np.int32)
+        # warmup traces every jitted entry exactly once per shape, so the
+        # attention dispatch log captured around it is the engine's full
+        # kernel-coverage map (fused vs reference per branch) — reset it
+        # here so other engines' traces don't bleed in
+        attention_dispatch.reset_dispatch_log()
         # two passes: the first compiles against the freshly-initialized
         # cache shardings, the second against jit's steady-state output
         # shardings (they can differ on multi-device meshes)
@@ -972,6 +1069,10 @@ class ServeEngine:
         # multi-device: the first call may trace twice while cache shardings
         # settle to jit's steady state; anything beyond this is a regression
         self._warm_counts = self._jit_counts()
+        # snapshot the per-trace attention dispatch records: every branch
+        # (prefill / prefill_continue / decode / verify) has now been traced
+        # once per layer, so this is the engine's kernel-coverage map
+        self._attn_dispatch = attention_dispatch.dispatch_log()
 
     def step(self) -> None:
         """One scheduler tick: admit, prefill chunk(s), decode the batch."""
@@ -1047,6 +1148,7 @@ class ServeEngine:
         if self.cfg.is_moe:
             rep["engine"]["moe_policy"] = \
                 self._moe_policy or self.cfg.moe.policy
+            rep["engine"]["fused_moe_gmm"] = self.ecfg.fused_moe_gmm
             rep["engine"]["replica_slots"] = self.ecfg.replica_slots
             if self._rebalancer is not None:
                 rep["engine"]["rebalance_interval"] = \
@@ -1055,6 +1157,21 @@ class ServeEngine:
                 rep["engine"]["replica_swaps"] = self._replica_swaps
                 rep["engine"]["replica_ids"] = self._replica_ids.tolist()
                 rep["engine"]["hot_experts"] = self._rebalancer.hot()
+        snap = (self._attn_dispatch if self._attn_dispatch is not None
+                else attention_dispatch.dispatch_log())
+        if snap:
+            # per-branch kernel coverage captured at warmup trace time: the
+            # last record per branch wins (all traces of one branch agree)
+            branches: Dict[str, Dict[str, Any]] = {}
+            for d in snap:
+                branches[d["branch"]] = {
+                    "fused": d["fused"],
+                    "requested": d["requested"],
+                    "reason": d.get("reason", ""),
+                }
+            rep["attention_dispatch"] = branches
+            rep["attention_fallbacks"] = \
+                attention_dispatch.fallback_counts(snap)
         rep["jit_entries"] = self._jit_counts()
         if self._warm_counts is not None:
             rep["recompiled_after_warmup"] = \
@@ -1112,6 +1229,7 @@ def engine_config_for(cfg, *, max_slots: int, prompt_len: int,
                       kv_block_size: int = 16, num_kv_blocks: int = 0,
                       prefix_sharing: bool = False,
                       fused_paged_attention: bool = False,
+                      fused_moe_gmm: bool = False,
                       speculative_k: int = 0,
                       speculative_policy: str = "ngram",
                       temperature: float = 0.0,
@@ -1157,6 +1275,7 @@ def engine_config_for(cfg, *, max_slots: int, prompt_len: int,
         paged=paged, kv_block_size=kv_block_size,
         num_kv_blocks=num_kv_blocks, prefix_sharing=prefix_sharing,
         fused_paged_attention=fused_paged_attention,
+        fused_moe_gmm=fused_moe_gmm,
         speculative_k=speculative_k,
         speculative_policy=speculative_policy,
         temperature=temperature, top_k=top_k, top_p=top_p,

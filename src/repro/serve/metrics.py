@@ -16,9 +16,11 @@ The paged engine additionally records per-step KV-block occupancy
 ``kv_utilization`` / ``preemptions``.  Speculative decoding records
 drafted/accepted/committed token counts per verify step, reported as a
 ``speculative`` sub-dict (acceptance_rate, tokens per slot-step, steps
-per committed token).  ``report()`` is JSON-safe on an empty measurement
-window: percentile reductions over zero requests come back as ``None``,
-never NaN.
+per committed token).  ``record_phase`` accumulates a per-phase kernel
+breakdown (prefill / prefix_tail / decode / verify tokens-per-second and
+analytic attention KV bytes-touched), reported as ``phases``.
+``report()`` is JSON-safe on an empty measurement window: percentile
+reductions over zero requests come back as ``None``, never NaN.
 """
 from __future__ import annotations
 
@@ -115,6 +117,16 @@ class ServeMetrics:
         self.spec_drafted: int = 0              # draft tokens proposed
         self.spec_accepted: int = 0             # draft tokens accepted
         self.spec_committed: int = 0            # tokens committed by verify
+        # --- per-phase kernel accounting (prefill / prefix_tail / decode /
+        # verify): committed-or-consumed tokens, wall seconds around the
+        # jitted call, and the analytic KV bytes the attention path read
+        # (gather: the whole [B, L_max] logical view; fused: the live
+        # block-rounded chains) — the measured artifact behind the "no hot
+        # phase dispatches the logical gather" claim
+        self.phase_tokens: Dict[str, int] = {}
+        self.phase_seconds: Dict[str, float] = {}
+        self.phase_kv_bytes: Dict[str, int] = {}
+        self.phase_steps: Dict[str, int] = {}
         self._t_first_arrival: Optional[float] = None
         self._t_last_finish: float = 0.0
 
@@ -139,6 +151,19 @@ class ServeMetrics:
             else:
                 self.moe_diags.setdefault(f"{phase}/{k}", []).append(
                     float(arr))
+
+    def record_phase(self, phase: str, tokens: int, seconds: float,
+                     kv_bytes: int) -> None:
+        """One engine step's contribution to a phase (prefill /
+        prefix_tail / decode / verify): tokens processed, wall seconds
+        around the synced jitted call, analytic attention KV bytes."""
+        self.phase_tokens[phase] = self.phase_tokens.get(phase, 0) \
+            + int(tokens)
+        self.phase_seconds[phase] = self.phase_seconds.get(phase, 0.0) \
+            + float(seconds)
+        self.phase_kv_bytes[phase] = self.phase_kv_bytes.get(phase, 0) \
+            + int(kv_bytes)
+        self.phase_steps[phase] = self.phase_steps.get(phase, 0) + 1
 
     def record_kv(self, blocks_in_use: int, blocks_total: int) -> None:
         """Per-decode-step KV-block occupancy of the paged pool."""
@@ -218,6 +243,25 @@ class ServeMetrics:
                 "steps_per_committed_token": (
                     self.spec_slot_steps / self.spec_committed
                     if self.spec_committed else None),
+            }
+        if self.phase_steps:
+            rep["phases"] = {
+                ph: {
+                    "steps": self.phase_steps[ph],
+                    "tokens": self.phase_tokens.get(ph, 0),
+                    "seconds": self.phase_seconds.get(ph, 0.0),
+                    "tokens_per_s": (
+                        self.phase_tokens.get(ph, 0)
+                        / self.phase_seconds[ph]
+                        if self.phase_seconds.get(ph, 0.0) > 0
+                        else None),
+                    "kv_bytes_touched": self.phase_kv_bytes.get(ph, 0),
+                    "kv_bytes_per_token": (
+                        self.phase_kv_bytes.get(ph, 0)
+                        / self.phase_tokens[ph]
+                        if self.phase_tokens.get(ph, 0) else None),
+                }
+                for ph in sorted(self.phase_steps)
             }
         if self.kv_blocks_in_use:
             used = np.asarray(self.kv_blocks_in_use, np.float64)

@@ -187,3 +187,190 @@ def test_engine_greedy_streams_identical_fused_vs_gather():
         assert rep["engine"]["fused_paged_attention"] is fused
         streams[fused] = outs
     assert streams[False] == streams[True]
+
+
+# ----------------------------------------------------------------------
+# q-tiled prefill windows (the tentpole: one kernel for every phase)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("rep", [1, 4])
+@pytest.mark.parametrize("q_tile", [None, 7])
+def test_qtiled_prefill_window_parity(dtype, rep, q_tile):
+    """Large query windows (chunked-prefill regime) through the q-tiled
+    kernel vs both references, with q_tile=7 forcing ragged last q tiles
+    (48 = 6*7 + 6) and lengths mixing q_offset = 0 (prefill from
+    scratch: length == S) with mid-sequence starts (length > S).  The
+    cache_len contract: lengths INCLUDE the S-token query window."""
+    bs, S = 4, 48
+    n_logical = 20
+    lengths = [S, S + 13, S + 30]       # q_offset 0 / 13 / 30
+    q, kp, vp, bt, cl = _setup(5, B=3, Hkv=2, rep=rep, hd=16, bs=bs,
+                               n_logical=n_logical, lengths=lengths,
+                               dtype=dtype, q_len=S)
+    out = paged_attention(q, kp, vp, bt, cl, block_size=bs,
+                          q_tile=q_tile, interpret=True)
+    ref = paged_attention_ref(q, kp, vp, bt, cl, block_size=bs)
+    gather = paged_decode_attention(q, kp, vp, bt, cl, block_size=bs)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(gather, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+@pytest.mark.parametrize("q_offset", [0, 48])
+def test_slab_as_pool_matches_chunked_attention(q_offset):
+    """The fused continue-prefill construction: a [B, S_max] slab viewed
+    as per-row contiguous block chains with an identity table and
+    cache_len = q_offset + S must agree with the reference
+    ``chunked_attention(..., q_offset=q_offset)`` over the same slab —
+    including garbage in the unwritten tail, which both paths must mask."""
+    from repro.kernels.paged_attention.ops import largest_block_divisor
+    from repro.models.attention import chunked_attention
+    B, S_max, S, Hkv, rep, hd = 2, 144, 48, 2, 2, 8
+    key = jax.random.PRNGKey(11)
+    k_slab = jax.random.normal(jax.random.fold_in(key, 0),
+                               (B, S_max, Hkv, hd))
+    v_slab = jax.random.normal(jax.random.fold_in(key, 1),
+                               (B, S_max, Hkv, hd))
+    q = jax.random.normal(jax.random.fold_in(key, 2),
+                          (B, S, Hkv * rep, hd))
+    bs = largest_block_divisor(S_max)
+    nb = S_max // bs
+    assert nb > 1                       # multi-block chains per row
+    table = (jnp.arange(B, dtype=jnp.int32)[:, None] * nb
+             + jnp.arange(nb, dtype=jnp.int32)[None, :])
+    cl = jnp.full((B,), q_offset + S, jnp.int32)
+    out = paged_attention(q, k_slab.reshape(1, B * S_max, Hkv, hd),
+                          v_slab.reshape(1, B * S_max, Hkv, hd),
+                          table, cl, block_size=bs, interpret=True)
+    ref = chunked_attention(q, k_slab, v_slab, causal=True, chunk=32,
+                            q_offset=q_offset)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("q_offset", [0, 10])
+def test_attention_block_fused_continue_prefill_matches_reference(q_offset):
+    """attention_block's chunked-prefill continuation with use_pallas on
+    (slab-as-pool q-tiled kernel) vs off (chunked reference): identical
+    outputs and caches at chunk starts 0 and mid-sequence."""
+    from repro.models.attention import (AttnCache, attention_block,
+                                        init_attention)
+    cfg = TINY
+    B, S, S_max = 2, 10, 24
+    key = jax.random.PRNGKey(13)
+    p = init_attention(jax.random.fold_in(key, 0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, S, cfg.d_model))
+    Hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    # pre-populated slab prefix [0, q_offset) + garbage tail
+    slab = jax.random.normal(jax.random.fold_in(key, 2),
+                             (B, S_max, Hkv, hd))
+    outs, caches = {}, {}
+    for fused in (False, True):
+        cache = AttnCache(slab, slab * 0.5)
+        y, nc = attention_block(x, p, cfg, causal=True, q_offset=q_offset,
+                                cache=cache, cache_len=None,
+                                attn_chunk=8, use_pallas=fused,
+                                interpret=True, continue_prefill=True)
+        outs[fused], caches[fused] = y, nc
+    np.testing.assert_allclose(np.asarray(outs[True]),
+                               np.asarray(outs[False]),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(caches[True].k),
+                               np.asarray(caches[False].k), atol=0)
+
+
+def test_strict_pallas_raises_on_inapplicable_fused_path():
+    """pallas_strict turns the (previously silent) reference fallback into
+    FusedPathUnavailable; non-strict still falls back, and the dispatch
+    log counts it."""
+    from repro.models import attention as A
+    cfg = TINY.replace(sliding_window=8)    # binds: window < S_max = 24
+    B, S, S_max = 2, 10, 24
+    key = jax.random.PRNGKey(17)
+    p = A.init_attention(jax.random.fold_in(key, 0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, S, cfg.d_model))
+    slab = jnp.zeros((B, S_max, cfg.num_kv_heads, cfg.resolved_head_dim))
+    cache = A.AttnCache(slab, slab)
+    with pytest.raises(A.FusedPathUnavailable):
+        A.attention_block(x, p, cfg, causal=True, q_offset=0, cache=cache,
+                          attn_chunk=8, use_pallas=True, interpret=True,
+                          continue_prefill=True, strict_pallas=True)
+    A.reset_dispatch_log()
+    y, _ = A.attention_block(x, p, cfg, causal=True, q_offset=0,
+                             cache=cache, attn_chunk=8, use_pallas=True,
+                             interpret=True, continue_prefill=True)
+    assert y.shape == (B, S, cfg.d_model)
+    assert A.fallback_counts().get("prefill_continue", 0) == 1
+    A.reset_dispatch_log()
+
+
+def test_engine_fused_everywhere_greedy_identical():
+    """The full unified path — fused q-tiled prefill, prefix-tail resume,
+    speculative k=4 verify — serves greedy streams token-identical to the
+    all-reference engine, with no fused branch silently falling back."""
+    streams = {}
+    for fused in (False, True):
+        model = build_model(TINY, ParallelConfig(attn_chunk=8,
+                                                 loss_chunk=8),
+                            batch=3, seq_len=16)
+        params = model.init(jax.random.PRNGKey(0))
+        ecfg = engine_config_for(TINY, max_slots=3, prompt_len=16,
+                                 max_new_tokens=8, prefill_chunk=4,
+                                 paged=True, kv_block_size=4,
+                                 prefix_sharing=True, speculative_k=4,
+                                 fused_paged_attention=fused)
+        eng = ServeEngine(model, params, ecfg, clock=VirtualClock(0.05))
+        reqs = poisson_requests(6, rate=50.0, vocab_size=TINY.vocab_size,
+                                prompt_len=16, max_new_tokens=8, seed=11,
+                                shared_prefix_len=8)
+        outs, rep = captured_run(eng, reqs)
+        streams[fused] = outs
+        if fused:
+            assert rep["attention_fallbacks"] == {}
+            disp = rep["attention_dispatch"]
+            assert disp["prefill_continue"]["fused"]
+            assert disp["verify"]["fused"]
+        assert set(rep["phases"]) >= {"prefill", "verify"}
+        for ph in rep["phases"].values():
+            assert ph["tokens"] > 0 and ph["kv_bytes_touched"] > 0
+    assert streams[False] == streams[True]
+
+
+def test_moe_engine_fused_gmm_greedy_identical():
+    """Grouped-GEMM expert FFN on the serve path (prefill chunks AND the
+    [B, k+1] verify batch): greedy streams token-identical with
+    fused_moe_gmm on vs off."""
+    from repro.configs.base import MoEConfig
+    cfg = ModelConfig(
+        name="tiny-moe", family="moe", num_layers=2, d_model=32,
+        num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64, head_dim=16,
+        dtype="float32",
+        moe=MoEConfig(num_experts=4, num_experts_per_tok=2, d_ff_expert=32,
+                      policy="harmoeny", num_foreign_slots=1))
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.model import MeshShape
+    streams = {}
+    for fused in (False, True):
+        mesh = make_host_mesh(1, 1)
+        ms = MeshShape(tuple(zip(mesh.axis_names, mesh.devices.shape)))
+        model = build_model(cfg, ParallelConfig(attn_chunk=8, loss_chunk=8),
+                            batch=2, seq_len=16, mesh_shape=ms, mesh=mesh)
+        with mesh:
+            params = model.init(jax.random.PRNGKey(1))
+        ecfg = engine_config_for(cfg, max_slots=2, prompt_len=16,
+                                 max_new_tokens=6, prefill_chunk=8,
+                                 paged=True, kv_block_size=4,
+                                 speculative_k=3,
+                                 fused_paged_attention=fused,
+                                 fused_moe_gmm=fused)
+        eng = ServeEngine(model, params, ecfg, mesh=mesh,
+                          clock=VirtualClock(0.05))
+        reqs = poisson_requests(3, rate=50.0, vocab_size=cfg.vocab_size,
+                                prompt_len=16, max_new_tokens=6, seed=5)
+        outs, rep = captured_run(eng, reqs)
+        assert rep["engine"]["fused_moe_gmm"] is fused
+        streams[fused] = outs
+    assert streams[False] == streams[True]
