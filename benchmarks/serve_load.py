@@ -32,6 +32,14 @@ machine-readable ``BENCH_serve.json``:
   live drifting stream with the calibrated v5e time model, where the
   headline is harmoeny+replication beating the next-best baseline on
   decode throughput;
+* ``residency`` — tiered expert residency (host↔HBM streaming) at a
+  bounded working-set budget: real-engine cells carry the live
+  ``residency`` report (hit rate, swaps, prefetches, staged bytes,
+  modeled PCIe stall) across prefetch policies at half the expert
+  footprint, and modeled cells cost a paper-scale drifting stream with
+  the real scheduler under ``non_local`` demotion — the headline is
+  predictive prefetch stalling strictly less than on-demand staging at
+  the same budget while recovering ~all fully-resident throughput;
 * ``decode_attention`` — microbench of the per-step decode-attention
   primitive, reference block-table gather vs the fused Pallas kernel,
   sweeping the active sequence length against ``L_max``: the reference
@@ -95,6 +103,8 @@ def build_engine(skew: float, policy: str, skew_seed: int, *,
                  gen: int = GEN, prompt_len: int = PROMPT_LEN,
                  speculative_k: int = 0, q_tokens: int = 0,
                  replica_slots: int = 0, rebalance_interval: int = 0,
+                 resident_experts: int = 0,
+                 prefetch_policy: str = "predictive",
                  placement=None):
     cfg = get_config(ARCH).reduced()
     moe = dataclasses.replace(cfg.moe, policy=policy)
@@ -125,7 +135,9 @@ def build_engine(skew: float, policy: str, skew_seed: int, *,
                           prefix_sharing=prefix_sharing,
                           speculative_k=speculative_k,
                           replica_slots=replica_slots,
-                          rebalance_interval=rebalance_interval),
+                          rebalance_interval=rebalance_interval,
+                          resident_experts=resident_experts,
+                          prefetch_policy=prefetch_policy),
         mesh=mesh)
     engine.warmup()
     return cfg, engine
@@ -599,6 +611,235 @@ def skew_modeled_cells():
     return modeled
 
 
+def residency_compare():
+    """Tiered expert residency: host↔HBM streaming at a bounded HBM budget.
+
+    Two instruments, same split as ``skew_compare``:
+
+    * **engine cells** — the real serving engine under router skew with a
+      tight working-set budget (``resident_experts`` = half the expert
+      rows, W = epr/2 per rank) across the three prefetch policies plus
+      the fully-resident baseline.  Greedy streams are token-identical
+      across budgets by construction (device params stay authoritative —
+      asserted in tests); the cells carry the live ``residency`` report:
+      hit rate, swap/prefetch counts, staged bytes, and the
+      TierCostModel-priced stall seconds of the emulated PCIe tier.
+
+    * **modeled cells** — paper-scale (G=8, E=64) layer costing over a
+      drifting two-MoE-layer stream.  Each step schedules with the REAL
+      HarMoEny scheduler under the ``non_local`` demotion mask derived
+      from the previous step's residency table (double-buffered, exactly
+      the engine's discipline), and is costed with ``simulate_layer``;
+      host-tier stalls are charged from the ``ExpertResidencyManager``
+      replay itself — the only party that knows which misses the
+      predictive policy staged *ahead* of first touch (hidden behind the
+      previous layer's compute window) versus paid for on demand.  All
+      demoted pairs are passed as ``hidden_stages`` so the simulator does
+      not double-charge the tier on top of the manager's accounting.
+
+      The stream: layer 0 routes to one stable expert per rank; layer 1
+      routes to a second expert per rank that *drifts* to a cold third
+      mid-run.  ``predictive`` prefetches the incoming expert during
+      layer 0's window of the very first post-drift step (the per-layer
+      EMA folds the step's own loads before the replay), ``on_demand``
+      stalls once per rank on first touch, and ``none`` stalls on every
+      single post-drift use of the never-admitted expert — whose demotion
+      also reroutes its tokens as fetch-paying foreign work in the
+      schedule.
+
+    Headline: at half the HBM footprint, predictive stalls strictly less
+    than on_demand and recovers ~all of the fully-resident modeled
+    throughput, while ``none`` (no streaming) pays a persistent tier
+    penalty.
+    """
+    engine_cells = residency_engine_cells()
+    modeled = residency_modeled_cells()
+
+    by = {c["cell"]: c for c in modeled}
+    pred, odem = by["predictive"], by["on_demand"]
+    headline = {
+        "budget_experts": pred["resident_experts"],
+        "footprint_frac": pred["footprint_frac"],
+        "predictive_stall_s": pred["host_stall_s"],
+        "on_demand_stall_s": odem["host_stall_s"],
+        "predictive_beats_on_demand_on_stall":
+            pred["host_stall_s"] < odem["host_stall_s"],
+        "recovered_throughput_frac":
+            pred["tok_s_modeled"] / by["fully_resident"]["tok_s_modeled"],
+        "none_throughput_frac":
+            by["none"]["tok_s_modeled"]
+            / by["fully_resident"]["tok_s_modeled"],
+        "engine_predictive_hit_rate": next(
+            (c["hit_rate"] for c in engine_cells
+             if c["cell"] == "predictive"), None),
+    }
+    print(f"[bench] residency headline: budget={headline['budget_experts']} "
+          f"({headline['footprint_frac']:.0%} footprint) "
+          f"stall pred={headline['predictive_stall_s'] * 1e3:.2f}ms vs "
+          f"odem={headline['on_demand_stall_s'] * 1e3:.2f}ms "
+          f"(beats: {headline['predictive_beats_on_demand_on_stall']}); "
+          f"recovered={headline['recovered_throughput_frac']:.3f} "
+          f"none={headline['none_throughput_frac']:.3f}")
+    return {"engine_cells": engine_cells, "modeled_cells": modeled,
+            "headline": headline}
+
+
+def residency_engine_cells():
+    """Real-engine residency cells (see ``residency_compare``)."""
+    cfg0 = get_config(ARCH).reduced()
+    E = cfg0.moe.num_experts                      # pod expert rows (epr*G)
+    cells = []
+    for name, budget, policy in (
+            ("fully_resident", E, "predictive"),
+            ("predictive", E // 2, "predictive"),
+            ("on_demand", E // 2, "on_demand"),
+            ("none", E // 2, "none")):
+        cfg, engine = build_engine(SKEW, "harmoeny", skew_seed=1,
+                                   resident_experts=budget,
+                                   prefetch_policy=policy)
+        reqs = poisson_requests(N_REQ, rate=0.0, vocab_size=cfg.vocab_size,
+                                prompt_len=PROMPT_LEN, max_new_tokens=GEN,
+                                seed=5)
+        rep = engine.run(reqs)
+        res = rep["residency"]
+        cell = {
+            "cell": name, "policy": policy, "skew": SKEW,
+            "resident_experts": budget,
+            "footprint_frac": budget / E,
+            "tok_s_wall": rep["throughput_tok_s"],
+            "hit_rate": res["hit_rate"],
+            "swaps": res["swaps"],
+            "prefetches": res["prefetches"],
+            "stall_s": res["stall_units"],
+            "bytes_staged": res["bytes_staged"],
+            "residency_stages": rep["engine"]["residency_stages"],
+            "recompiled_after_warmup": rep.get("recompiled_after_warmup"),
+        }
+        cells.append(cell)
+        print(f"[bench] residency-engine {name:14s} budget={budget} "
+              f"hit={cell['hit_rate']:.3f} swaps={cell['swaps']:4d} "
+              f"prefetch={cell['prefetches']:4d} "
+              f"stall={cell['stall_s'] * 1e3:7.2f}ms "
+              f"staged={cell['bytes_staged'] / 2 ** 20:7.1f}MB "
+              f"tok/s={cell['tok_s_wall']:6.1f}")
+    return cells
+
+
+def residency_modeled_cells():
+    """v5e-modeled drifting-stream residency cells (see
+    ``residency_compare``)."""
+    import gc
+
+    import jax
+    import jax.numpy as jnp
+
+    # By this point every earlier section has compiled its own engines and
+    # the process carries thousands of cached CPU executables; the LLVM JIT
+    # can hit mmap exhaustion (ENOMEM → segfault) on the next burst of
+    # compilations. Drop the compile caches before the modeled loop — the
+    # remaining sections build fresh engines and recompile regardless.
+    jax.clear_caches()
+    gc.collect()
+    from repro.core.scheduler import schedule
+    from repro.core.simulator import SimCosts, simulate_layer
+    from repro.core.topology import local_slot_of, make_topology
+    from repro.serve.residency import ExpertResidencyManager, TierCostModel
+
+    G, E, L = 8, 64, 2
+    U, T = 65536, 80
+    K_SLOTS = 4
+    W = 4                                # budget: half of epr=8 per rank
+    costs = SimCosts()
+    comp_unit_s = costs.unit_flops / (costs.hw.peak_flops * costs.mfu)
+    fetch_s = costs.expert_bytes * costs.fetch_penalty / costs.hw.ici_bw
+    Q = int(np.ceil(fetch_s / comp_unit_s))
+    topo = make_topology(G, E)
+    Ep = topo.padded_experts
+    lsl = local_slot_of(topo)
+
+    # per-layer active experts, ONE local slot per rank per layer: layer 0
+    # stays on slot 0; layer 1 uses slot 1 and drifts to the cold slot 5
+    # at T/2 (outside the seeded working set {slots 0..W-1}, so only
+    # streaming can admit it)
+    def active_slots(layer, phase):
+        return {(0, 0): 0, (0, 1): 0, (1, 0): 1, (1, 1): 5}[(layer, phase)]
+
+    def layer_counts(rng, layer, phase):
+        j = active_slots(layer, phase)
+        p = np.zeros(Ep)
+        for g in range(G):
+            p[int(topo.slot_map[g, j])] = 1.0 / G
+        return rng.multinomial(U // G, p, size=G)            # [G, Ep]
+
+    cells = []
+    for name, budget, policy in (
+            ("fully_resident", G * topo.experts_per_rank, "predictive"),
+            ("predictive", G * W, "predictive"),
+            ("on_demand", G * W, "on_demand"),
+            ("none", G * W, "none")):
+        mgr = ExpertResidencyManager(
+            topo, budget, policy=policy,
+            cost=TierCostModel(expert_bytes=costs.expert_bytes,
+                               pcie_bw=costs.host_bw))
+        rng = np.random.default_rng(13)      # same stream in every cell
+        compute_s = 0.0
+        stall_s = 0.0
+        units = 0.0
+        for t in range(T):
+            phase = 0 if t < T // 2 else 1
+            # double-buffered: step t schedules under the table published
+            # at the end of step t-1, exactly like the engine
+            ids = mgr._last_ids
+            res = np.zeros((G, Ep), bool)
+            for g in range(G):
+                for e in ids[g]:
+                    if e >= 0:
+                        res[g, int(e)] = True
+            non_local = (lsl >= 0) & ~res
+            loads = np.zeros((L, Ep))
+            for layer in range(L):
+                counts = layer_counts(rng, layer, phase)
+                loads[layer] = counts.sum(axis=0)
+                S, diag = schedule(jnp.asarray(counts, jnp.int32), topo,
+                                   policy="harmoeny", q=Q, c_pair=10 ** 6,
+                                   num_foreign_slots=K_SLOTS,
+                                   non_local=jnp.asarray(non_local))
+                S_np = np.asarray(S, np.float64)
+                sim = simulate_layer(S_np, topo, costs,
+                                     sched_iters=int(diag.iters),
+                                     non_local=non_local,
+                                     hidden_stages=non_local)
+                compute_s += sim["layer_s"]
+                units += float(S_np.sum())
+            dec = mgr.step(loads)
+            stall_s += dec.stall_units
+        w = mgr.counters()
+        total_s = compute_s + stall_s
+        cell = {
+            "cell": name, "policy": policy,
+            "ranks": G, "experts": E, "units_per_step": U,
+            "moe_layers": L, "steps": T, "q_units": Q,
+            "resident_experts": budget,
+            "footprint_frac": budget / (G * topo.experts_per_rank),
+            "tok_s_modeled": float(units / total_s),
+            "layer_us_mean": float(compute_s / (T * L) * 1e6),
+            "host_stall_s": float(stall_s),
+            "stall_frac": float(stall_s / total_s),
+            "hit_rate": w["hit_rate"],
+            "swaps": w["swaps"],
+            "prefetches": w["prefetches"],
+            "bytes_staged": w["bytes_staged"],
+        }
+        cells.append(cell)
+        print(f"[bench] residency-model  {name:14s} budget={budget:2d} "
+              f"({cell['footprint_frac']:.0%}) "
+              f"tok/s={cell['tok_s_modeled']:12.0f} "
+              f"stall={cell['host_stall_s'] * 1e3:8.2f}ms "
+              f"({cell['stall_frac']:.1%}) hit={cell['hit_rate']:.3f} "
+              f"swaps={cell['swaps']:3d} prefetch={cell['prefetches']:3d}")
+    return cells
+
+
 def decode_attention_microbench():
     """Reference gather vs fused kernel, active length swept against L_max.
 
@@ -854,6 +1095,7 @@ def main():
     spec_cells, spec_spt, spec_wins, spec_tokens_equal = \
         speculative_compare()
     skew = skew_compare()
+    residency = residency_compare()
     decode_attn = decode_attention_microbench()
     phases = phases_breakdown()
 
@@ -888,6 +1130,7 @@ def main():
             "token_counts_equal_across_k": spec_tokens_equal,
         },
         "skew": skew,
+        "residency": residency,
         "decode_attention": decode_attn,
         "phases": phases,
     }
@@ -897,6 +1140,8 @@ def main():
           f"({len(results)} sweep + {len(capacity)} capacity + "
           f"{len(prefix_cells)} prefix + {len(spec_cells)} speculative + "
           f"{len(skew['engine_cells'])}+{len(skew['modeled_cells'])} skew + "
+          f"{len(residency['engine_cells'])}+"
+          f"{len(residency['modeled_cells'])} residency + "
           f"{len(decode_attn['cells'])} decode-attention + "
           f"{len(phases['cells'])} phase-breakdown cells)")
 

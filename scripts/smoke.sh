@@ -87,4 +87,15 @@ echo "== 2-device CPU serve smoke (skew 0.9, harmoeny + replication) =="
 serve --paged --kv-block-size 8 --moe-policy harmoeny --q-tokens 1 \
     --replica-slots 1 --rebalance-interval 4
 
+CELL="tiered residency: predictive prefetch"
+echo "== 2-device CPU serve smoke (tiered residency, predictive prefetch) =="
+# --resident-experts 4 of the reduced model's 8 expert rows (W=2 per
+# rank): half the expert footprint stays HBM-resident, the rest streams
+# from the emulated host tier through the double-buffered staging
+# scatter. Greedy streams stay token-identical across budgets (asserted
+# by tests/test_serve_residency.py); here the cell has to serve the
+# stream and print a populated residency report.
+serve --paged --kv-block-size 8 --moe-policy harmoeny --q-tokens 1 \
+    --resident-experts 4 --prefetch-policy predictive
+
 echo "smoke OK"

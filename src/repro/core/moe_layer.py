@@ -149,13 +149,19 @@ def _moe_forward_local(x_rep: jnp.ndarray, params: Dict[str, jnp.ndarray],
                        spec: MoEBlockSpec, n_valid: int,
                        skew_key: Optional[jax.Array],
                        valid_rep: Optional[jnp.ndarray] = None,
-                       replica_ids: Optional[jnp.ndarray] = None
+                       replica_ids: Optional[jnp.ndarray] = None,
+                       residency_ids: Optional[jnp.ndarray] = None
                        ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """Per-rank body (inside shard_map). x_rep: [t_pad, d] replicated over EP.
 
     replica_ids: [G, R] replicated traced int32 — the expert id occupying each
     rank's replica slots (-1 = empty). Required (possibly all -1) whenever
     ``spec.moe.num_replica_slots > 0`` so buffer/weight shapes stay static.
+
+    residency_ids: [G, W] replicated traced int32 — each rank's HBM-resident
+    working set under tiered expert residency (serve/residency.py); experts
+    statically placed on a rank but absent from its table are demoted to
+    fetch-paying ``non_local`` destinations in the harmoeny schedule.
     """
     topo = spec.topo
     moe = spec.moe
@@ -206,10 +212,15 @@ def _moe_forward_local(x_rep: jnp.ndarray, params: Dict[str, jnp.ndarray],
         # ranks holding a replica of e count as local destinations for e
         extra_local = D.replica_slot_map(replica_ids, Ep) >= 0  # [G, Ep]
         rep_ids_me = jnp.take(replica_ids, me, axis=0)          # [R]
+    non_local = None
+    if residency_ids is not None:
+        # tiered residency: statically-placed experts swapped out of HBM
+        # stop counting as free destinations for the rebalancer
+        non_local = prefetch.residency_non_local(residency_ids, topo)
     S, sdiag = SCH.schedule(m_all, topo, policy=moe.policy, q=spec.q,
                             c_pair=spec.c_pair,
                             num_foreign_slots=moe.num_foreign_slots,
-                            extra_local=extra_local)
+                            extra_local=extra_local, non_local=non_local)
 
     # --- step 4: scatter ---------------------------------------------------
     layout = D.build_layout(S, assign, me, topo, c_pair=spec.c_pair,
@@ -406,7 +417,8 @@ def moe_block(x: jnp.ndarray, params: Dict[str, jnp.ndarray], *,
               spec: MoEBlockSpec, mesh: jax.sharding.Mesh,
               skew_key: Optional[jax.Array] = None,
               valid_mask: Optional[jnp.ndarray] = None,
-              replica_ids: Optional[jnp.ndarray] = None
+              replica_ids: Optional[jnp.ndarray] = None,
+              residency_ids: Optional[jnp.ndarray] = None
               ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """Global-view MoE block. x: [B, S, d] -> [B, S, d], diagnostics.
 
@@ -419,6 +431,9 @@ def moe_block(x: jnp.ndarray, params: Dict[str, jnp.ndarray], *,
     ``replica_ids`` [G, R] int32 (traced; -1 = empty) names the expert whose
     weights currently occupy each rank's replica slots; defaults to all
     empty when ``spec.moe.num_replica_slots > 0``.
+    ``residency_ids`` [G, W] int32 (traced; -1 = pad) names each rank's
+    HBM-resident working set under tiered expert residency; None means
+    everything is resident (no demotion).
     """
     if spec.tp_mode:
         # TP-MoE is capacity-free and compute-balanced; dead tokens cannot
@@ -438,7 +453,8 @@ def moe_block(x: jnp.ndarray, params: Dict[str, jnp.ndarray], *,
     else:
         replica_ids = None
 
-    def body(xb, p_router, p_in, p_out, p_gate, p_reps, rep_ids, key, vmask):
+    def body(xb, p_router, p_in, p_out, p_gate, p_reps, rep_ids, res_ids,
+             key, vmask):
         B_loc, S_loc = xb.shape[0], xb.shape[1]
         flat = xb.reshape(B_loc * S_loc, d)
         prm = {"router": p_router, "w_in": p_in, "w_out": p_out}
@@ -451,7 +467,7 @@ def moe_block(x: jnp.ndarray, params: Dict[str, jnp.ndarray], *,
             y, diag = _moe_forward_local(
                 flat, prm, spec, flat.shape[0] * spec.ep_degree, key,
                 valid_rep=None if vmask is None else vmask.reshape(-1),
-                replica_ids=rep_ids)
+                replica_ids=rep_ids, residency_ids=res_ids)
             y = y.reshape(B_loc, S_loc, d)
         else:
             n_valid = flat.shape[0]
@@ -463,7 +479,8 @@ def moe_block(x: jnp.ndarray, params: Dict[str, jnp.ndarray], *,
                                 (0, t_pad - n_valid))   # pads are invalid
             y, diag = _moe_forward_local(x_rep, prm, spec, n_valid, key,
                                          valid_rep=v_rep,
-                                         replica_ids=rep_ids)
+                                         replica_ids=rep_ids,
+                                         residency_ids=res_ids)
             y = y[:n_valid].reshape(B_loc, S_loc, d)
         return y, diag
 
@@ -484,6 +501,7 @@ def moe_block(x: jnp.ndarray, params: Dict[str, jnp.ndarray], *,
         (P(spec.ep_axis, None, None) if "w_gate" in params else None),
         rep_param_specs,                           # replica rows over EP axis
         (P(None, None) if replica_ids is not None else None),
+        (P(None, None) if residency_ids is not None else None),
         (P() if skew_key is not None else None),
         (P(batch_spec, x_seq_spec) if valid_mask is not None else None),
     )
@@ -491,5 +509,5 @@ def moe_block(x: jnp.ndarray, params: Dict[str, jnp.ndarray], *,
     fn = _shard_map(body, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs, check_vma=False)
     return fn(x, params["router"], params["w_in"], params["w_out"],
-              params.get("w_gate"), rep_params, replica_ids, skew_key,
-              valid_mask)
+              params.get("w_gate"), rep_params, replica_ids, residency_ids,
+              skew_key, valid_mask)

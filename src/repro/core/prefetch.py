@@ -15,6 +15,18 @@ XLA's latency-hiding scheduler overlaps this all_to_all with the attention /
 shared-expert compute that precedes the grouped matmul — the analogue of the
 paper's dedicated CUDA stream. The f-dimension is chunked (`fetch_chunk`) so
 the transient buffer stays bounded for large experts (DESIGN.md §2).
+
+Tiered residency fetch source (serve/residency.py): when expert weights
+exceed HBM, a second, *slower* tier reappears — the paper's original
+host-DRAM-over-PCIe source. The serve engine keeps a ``[G, W]`` residency
+table (resident expert ids per rank, analogous to ``replica_ids``) that
+rides into the jitted decode step as a traced argument;
+:func:`residency_non_local` turns it into the scheduler's ``non_local``
+demotion mask (statically-placed experts currently swapped out of HBM),
+and :func:`stage_expert_rows` is the jitted host→HBM staging scatter the
+engine dispatches ahead of the step so the copy double-buffers against
+compute. Both are pure value functions of static-shape arrays: residency
+swaps never change a traced shape, so the decode jit entry count stays 1.
 """
 from __future__ import annotations
 
@@ -86,6 +98,36 @@ def fetch_foreign_weights(w_local: jnp.ndarray, fids_all: jnp.ndarray,
             (K,) + w_local.shape[1:-1] + (Fp,))
         return fetched[..., :F]
     return one_chunk(w_local)
+
+
+def residency_non_local(residency_ids: jnp.ndarray,
+                        topo: EPTopology) -> jnp.ndarray:
+    """Residency table [G, W] -> scheduler ``non_local`` mask [G, Ep].
+
+    True where an expert is statically placed on rank g but *not* in g's
+    current HBM working set (-1 table pads never match a real expert).
+    Traced-safe: reuses the replica-slot one-hot map, so the mask is a
+    pure value function of the table and swaps never recompile.
+    """
+    resident = replica_slot_map(residency_ids, topo.padded_experts) >= 0
+    static_local = jnp.asarray(local_slot_of(topo) >= 0)
+    return static_local & ~resident
+
+
+def stage_expert_rows(w: jnp.ndarray, rows: jnp.ndarray,
+                      vals: jnp.ndarray) -> jnp.ndarray:
+    """Scatter staged expert rows into a weight leaf (host→HBM emulation).
+
+    ``w``: [..., rows, d, f] weight leaf (row axis third from last, same
+    convention as the replica-swap gather). ``rows`` [n] stacked row
+    indices, ``vals`` the staged values in ``w``'s layout with the row
+    axis sized n. Duplicate row indices are allowed (padded stage lists
+    repeat a row) because duplicates carry identical values.
+    """
+    axis = w.ndim - 3
+    wt = jnp.moveaxis(w, axis, 0)
+    vt = jnp.moveaxis(vals.astype(w.dtype), axis, 0)
+    return jnp.moveaxis(wt.at[rows].set(vt), 0, axis)
 
 
 def gather_all_experts(w_local: jnp.ndarray, *, axis_name: str) -> jnp.ndarray:

@@ -93,7 +93,8 @@ class _LoopState(NamedTuple):
 def rebalance(S_initial: jnp.ndarray, topo: EPTopology, *, q: int,
               c_pair: int, num_foreign_slots: int,
               max_iters: int = 128,
-              extra_local: jnp.ndarray | None = None
+              extra_local: jnp.ndarray | None = None,
+              non_local: jnp.ndarray | None = None
               ) -> tuple[jnp.ndarray, ScheduleDiag]:
     """Paper Alg. 2 (greedy token rebalancing) as a lax.while_loop.
 
@@ -109,11 +110,21 @@ def rebalance(S_initial: jnp.ndarray, topo: EPTopology, *, q: int,
     weight-resident (expert, rank) pairs — replica slots filled by the
     serving-time rebalancer — that count as local destinations: schedulable
     at zero foreign-slot cost, exactly like the static placement.
+
+    ``non_local`` [G, Ep] bool (may be traced) is the inverse demotion:
+    statically-placed experts whose weights are *not currently
+    HBM-resident* on their host (tiered residency, serve/residency.py).
+    A demoted pair is treated like any other foreign destination — moving
+    work there consumes a foreign slot and no longer rides free — so the
+    rebalancer steers load toward ranks whose working set already holds
+    the expert. Demotion applies after the ``extra_local`` promotion.
     """
     G, Ep = topo.num_ranks, topo.padded_experts
     is_local = jnp.asarray(local_slot_of(topo) >= 0)            # [G, Ep]
     if extra_local is not None:
         is_local = is_local | extra_local
+    if non_local is not None:
+        is_local = is_local & ~non_local
     offdiag = 1 - jnp.eye(G, dtype=jnp.int32)
     q = jnp.int32(q)
 
@@ -200,7 +211,8 @@ def rebalance(S_initial: jnp.ndarray, topo: EPTopology, *, q: int,
 def schedule(counts: jnp.ndarray, topo: EPTopology, *, policy: str, q: int,
              c_pair: int, num_foreign_slots: int,
              max_iters: int = 128,
-             extra_local: jnp.ndarray | None = None
+             extra_local: jnp.ndarray | None = None,
+             non_local: jnp.ndarray | None = None
              ) -> tuple[jnp.ndarray, ScheduleDiag]:
     """counts [G, Ep] -> (S [G, Ep, G], diagnostics) under ``policy``.
 
@@ -209,13 +221,17 @@ def schedule(counts: jnp.ndarray, topo: EPTopology, *, policy: str, q: int,
     placement baked into ``topo`` — the dispatch itself is round-robin.
     ``extra_local`` (replica-slot placements) keeps sources' own units
     home for replica-resident experts and widens the harmoeny
-    rebalancer's destination set; the baselines ignore it.
+    rebalancer's destination set; ``non_local`` (tiered residency)
+    demotes statically-local experts whose weights are swapped out of
+    HBM so the rebalancer stops treating them as free destinations.
+    The baselines ignore both.
     """
     if policy == "harmoeny":
         S0 = initial_assign(counts, topo, extra_local=extra_local)
         return rebalance(S0, topo, q=q, c_pair=c_pair,
                          num_foreign_slots=num_foreign_slots,
-                         max_iters=max_iters, extra_local=extra_local)
+                         max_iters=max_iters, extra_local=extra_local,
+                         non_local=non_local)
     S0 = initial_assign(counts, topo)
     if policy in ("round_robin", "static_opt"):
         zero = jnp.int32(0)

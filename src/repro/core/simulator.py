@@ -45,6 +45,10 @@ class SimCosts:
     sched_iter_us: float = 0.15  # argmax/update over S[G,E,G] per iteration
     launch_us: float = 5.0
     mfu: float = 0.4             # achievable fraction of peak on expert GEMMs
+    # Host-tier staging (tiered residency, serve/residency.py): experts
+    # swapped out of HBM are fetched from host DRAM over PCIe gen4 x16 —
+    # an order of magnitude slower than the peer-HBM ICI path above.
+    host_bw: float = 32e9
 
     @property
     def unit_flops(self) -> float:
@@ -57,27 +61,45 @@ class SimCosts:
 
 def simulate_layer(S: np.ndarray, topo: EPTopology, costs: SimCosts,
                    sched_iters: int = 0, drops: int = 0,
-                   extra_local: np.ndarray | None = None) -> Dict[str, float]:
+                   extra_local: np.ndarray | None = None,
+                   non_local: np.ndarray | None = None,
+                   hidden_stages: np.ndarray | None = None) -> Dict[str, float]:
     """S: [G, Ep, G] schedule. Returns per-layer timing + balance metrics.
 
     ``extra_local`` [G, Ep] bool marks experts whose weights are already
     resident at a destination beyond its static shard — the hot-expert
     replica slots (serve/rebalance.py).  Units scheduled there cost
     compute but no fetch, which is exactly the replication win the time
-    model has to credit."""
+    model has to credit.
+
+    ``non_local`` [G, Ep] bool demotes statically-placed experts whose
+    weights are currently swapped out of HBM (tiered residency,
+    serve/residency.py): units scheduled to a demoted pair pay a
+    host-tier fetch (``expert_bytes / host_bw`` — PCIe, not ICI) unless
+    ``hidden_stages`` [G, Ep] marks the miss as prefetched ahead of use,
+    in which case the transfer overlaps the previous layer's compute and
+    only the bytes (not the stall) are charged."""
     G = topo.num_ranks
     S = np.asarray(S)
     load = S.sum(axis=(0, 1)).astype(np.float64)               # per dest
     lsl = local_slot_of(topo).copy()
     if extra_local is not None:
         lsl = np.where(np.asarray(extra_local), np.maximum(lsl, 0), lsl)
-    foreign = np.array([
-        sum(1 for e in range(topo.padded_experts)
-            if S[:, e, g].sum() > 0 and lsl[g, e] < 0)
-        for g in range(G)])
+    active = np.array([[S[:, e, g].sum() > 0
+                        for e in range(topo.padded_experts)]
+                       for g in range(G)])                     # [G, Ep]
+    demoted = np.zeros_like(active)
+    if non_local is not None:
+        demoted = np.asarray(non_local) & (lsl >= 0)
+        if hidden_stages is not None:
+            demoted = demoted & ~np.asarray(hidden_stages)
+        lsl = np.where(np.asarray(non_local), -1, lsl)
+    foreign = (active & (lsl < 0) & ~demoted).sum(axis=1)
+    host_misses = (active & demoted).sum(axis=1)
 
     comp = load * costs.unit_flops / (costs.hw.peak_flops * costs.mfu)
-    fetch = foreign * costs.expert_bytes * costs.fetch_penalty / costs.hw.ici_bw
+    fetch = foreign * costs.expert_bytes * costs.fetch_penalty / costs.hw.ici_bw \
+        + host_misses * costs.expert_bytes / costs.host_bw
     busy = np.maximum(comp, fetch)
 
     offdiag = S.sum(axis=1) * (1 - np.eye(G, dtype=np.int64))
@@ -95,6 +117,8 @@ def simulate_layer(S: np.ndarray, topo: EPTopology, costs: SimCosts,
         "layer_s": float(layer),
         "compute_s": float(comp.max()),
         "fetch_s": float(fetch.max()),
+        "host_stall_s": float(
+            (host_misses * costs.expert_bytes / costs.host_bw).max()),
         "a2a_s": float(a2a),
         "sched_s": float(sched),
         "metadata_s": float(metadata),

@@ -109,7 +109,9 @@ def build_serving_engine(args, cfg=None, *, prompt_len=None, gen=None):
         temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
         moe_policy=args.moe_policy or None,
         rebalance_interval=args.rebalance_interval,
-        replica_slots=args.replica_slots)
+        replica_slots=args.replica_slots,
+        resident_experts=getattr(args, "resident_experts", 0),
+        prefetch_policy=getattr(args, "prefetch_policy", "predictive"))
     engine = ServeEngine(model, params, ecfg, mesh=mesh)
     return cfg, engine
 
@@ -182,6 +184,15 @@ def serve(args):
               f"cow_copies={rep['cow_copies']}  "
               f"evictions={rep['evictions']}  "
               f"resume_cached_tokens={rep['resume_cached_tokens']}")
+    if getattr(args, "resident_experts", 0) and "residency" in rep:
+        res = rep["residency"]
+        hr = res.get("hit_rate")
+        print(f"[serve] residency: budget={eng_rep['resident_experts']} "
+              f"policy={eng_rep.get('prefetch_policy')}  "
+              f"hit_rate={hr if hr is None else f'{hr:.2f}'}  "
+              f"swaps={res['swaps']} prefetches={res['prefetches']}  "
+              f"stall={res['stall_units']:.4f}s  "
+              f"staged={res['bytes_staged'] / 1e6:.1f} MB")
     if args.speculative_k and "speculative" in rep:
         sp = rep["speculative"]
         acc = sp["acceptance_rate"]
@@ -223,6 +234,16 @@ def main():
     ap.add_argument("--rebalance-interval", type=int, default=0,
                     help="engine steps between hot-expert weight swaps "
                          "(0 = never; needs --replica-slots)")
+    ap.add_argument("--resident-experts", type=int, default=0,
+                    help="tiered expert residency: pod-total HBM "
+                         "working-set budget in experts (0 = off; must be "
+                         "a multiple of the EP degree)")
+    ap.add_argument("--prefetch-policy", default="predictive",
+                    choices=["predictive", "on_demand", "none"],
+                    help="residency staging policy: predictive = "
+                         "EMA-driven next-layer prefetch (stalls hidden), "
+                         "on_demand = stage on first touch, none = frozen "
+                         "initial working set")
     ap.add_argument("--q-tokens", type=int, default=0,
                     help="scheduler token-unit granularity override (0 = "
                          "auto threshold; small values let tiny decode "

@@ -197,7 +197,8 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
                   q_offset=0, spec=None, skew_key=None, enc_out=None,
                   continue_prefill=False, valid_mask=None,
                   block_table=None, block_size=0, pcfg_run=None,
-                  moe_replica_ids=None):
+                  moe_replica_ids=None, moe_residency_ids=None,
+                  moe_layer_diags=False):
         pc = pcfg_run if pcfg_run is not None else pcfg
         h = constrain(h, mode)
         if block_table is not None and (cfg.family == "hybrid" or is_encdec):
@@ -220,7 +221,9 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
                 moe_spec=spec, mesh=mesh, skew_key=skew_key,
                 constrain=constrain, continue_prefill=continue_prefill,
                 valid_mask=valid_mask, block_table=block_table,
-                block_size=block_size, moe_replica_ids=moe_replica_ids)
+                block_size=block_size, moe_replica_ids=moe_replica_ids,
+                moe_residency_ids=moe_residency_ids,
+                moe_layer_diags=moe_layer_diags)
         h = norm(h, params["final_norm"], cfg.norm)
         return h, new_cache, diags
 
@@ -396,7 +399,8 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
     def decode_step(params, token, caches, pos, skew_key=None,
                     active_mask=None, block_table=None, block_size=0,
                     fused_attention=None, fused_moe=None, moe_policy=None,
-                    moe_replica_ids=None):
+                    moe_replica_ids=None, moe_residency_ids=None,
+                    moe_layer_diags=False):
         """token [B, S] int32 (S = 1 is plain decode; S = k + 1 is a
         speculative-verify window, paged only); pos = current length BEFORE
         appending the window (scalar, or a per-sequence [B] vector for
@@ -418,6 +422,11 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
         for this step; ``moe_replica_ids`` [G, R] (traced, -1 = empty) names
         the experts occupying the replica slots — both wired by the serve
         engine (EngineConfig.moe_policy / serve/rebalance.py).
+        ``moe_residency_ids`` [G, W] (traced, -1 = pad) is the tiered
+        residency table (serve/residency.py): each rank's HBM-resident
+        working set, demoting swapped-out experts in the schedule;
+        ``moe_layer_diags`` (static) emits the per-layer
+        ``expert_load_layers`` diagnostic the residency predictor consumes.
 
         Returns logits [B, Vp] at the last position when S == 1, else
         [B, S, Vp] at every window position (the verify step scores all
@@ -458,7 +467,9 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
             skew_key=skew_key,
             enc_out=caches.get("cross"), valid_mask=vmask,
             block_table=block_table, block_size=block_size,
-            pcfg_run=pcfg_step, moe_replica_ids=moe_replica_ids)
+            pcfg_run=pcfg_step, moe_replica_ids=moe_replica_ids,
+            moe_residency_ids=moe_residency_ids,
+            moe_layer_diags=moe_layer_diags)
         if S == 1:
             logits = logits_head(h[:, -1], _vocab_w(params),
                                  real_vocab=cfg.vocab_size,

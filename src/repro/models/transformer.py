@@ -87,7 +87,7 @@ def _apply_one_layer(x: jnp.ndarray, p: Dict[str, Any], kind: str,
                      causal: bool = True, constrain=lambda x, mode="none": x,
                      continue_prefill: bool = False,
                      valid_mask=None, block_table=None, block_size: int = 0,
-                     moe_replica_ids=None,
+                     moe_replica_ids=None, moe_residency_ids=None,
                      ) -> Tuple[jnp.ndarray, Any, Dict[str, jnp.ndarray]]:
     """One layer of any kind. Returns (x, new_cache, diag)."""
     diag: Dict[str, jnp.ndarray] = {}
@@ -115,7 +115,8 @@ def _apply_one_layer(x: jnp.ndarray, p: Dict[str, Any], kind: str,
     if kind == "moe":
         y, mdiag = moe_block(h, p["moe"], spec=moe_spec, mesh=mesh,
                              skew_key=skew_key, valid_mask=valid_mask,
-                             replica_ids=moe_replica_ids)
+                             replica_ids=moe_replica_ids,
+                             residency_ids=moe_residency_ids)
         if "shared_mlp" in p:
             y = y + mlp(h, p["shared_mlp"],
                         "swiglu" if cfg.act == "swiglu" else cfg.act)
@@ -186,9 +187,16 @@ def run_stack(x: jnp.ndarray, params: Dict[str, Any], cfg: ModelConfig,
               skew_key=None, causal: bool = True, constrain=lambda x, mode="none": x,
               continue_prefill: bool = False, valid_mask=None,
               block_table=None, block_size: int = 0,
-              moe_replica_ids=None,
+              moe_replica_ids=None, moe_residency_ids=None,
+              moe_layer_diags: bool = False,
               ) -> Tuple[jnp.ndarray, Any, Dict[str, jnp.ndarray]]:
-    """mode: train | prefill | decode | encode. Returns (x, new_cache, diags)."""
+    """mode: train | prefill | decode | encode. Returns (x, new_cache, diags).
+
+    ``moe_layer_diags`` (static) additionally emits ``expert_load_layers``
+    [n_moe_steps, Ep] — the per-scan-step expert loads *before* the mean
+    collapse — which the tiered-residency manager needs to predict each
+    layer's working set separately (the per-layer signal from the PR-6
+    follow-on)."""
     pattern, n_steps, lead = layer_pattern(cfg)
 
     new_lead_caches = []
@@ -218,7 +226,8 @@ def run_stack(x: jnp.ndarray, params: Dict[str, Any], cfg: ModelConfig,
                 moe_spec=moe_spec, mesh=mesh, skew_key=sub_key, causal=causal,
                 constrain=constrain, continue_prefill=continue_prefill,
                 valid_mask=valid_mask, block_table=block_table,
-                block_size=block_size, moe_replica_ids=moe_replica_ids)
+                block_size=block_size, moe_replica_ids=moe_replica_ids,
+                moe_residency_ids=moe_residency_ids)
             new_caches[f"sub{j}"] = nc
             diags.update({f"{k}": v for k, v in d.items()})
         new_key = (jax.random.fold_in(key, 997) if key is not None else None)
@@ -246,6 +255,9 @@ def run_stack(x: jnp.ndarray, params: Dict[str, Any], cfg: ModelConfig,
     # scan stacks a leading n_steps axis; collapse it only, preserving the
     # trailing axis of vector diags (rank_load/expert_load)
     mean_diags = {k: v.mean(axis=0) for k, v in diags.items()}
+    if moe_layer_diags and "expert_load" in diags:
+        # the stacked pre-mean loads, one row per MoE scan step
+        mean_diags["expert_load_layers"] = diags["expert_load"]
     return x, out_cache, mean_diags
 
 

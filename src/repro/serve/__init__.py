@@ -8,6 +8,9 @@ from repro.serve.paging import (NULL_BLOCK, BlockAllocator, blocks_for_tokens,
                                 copy_block, gather_prefix_blocks,
                                 make_paged_pool, write_chunk_blocks)
 from repro.serve.request import Request, RequestState, RequestStatus
+from repro.serve.residency import (PREFETCH_POLICIES, ExpertResidencyManager,
+                                   ResidencyCache, ResidencyDecision,
+                                   TierCostModel)
 from repro.serve.sampling import (nucleus_mask, sample_np, sample_tokens,
                                   truncated_probs_np)
 from repro.serve.speculative import (DraftProposer, NGramProposer,
@@ -16,9 +19,12 @@ from repro.serve.speculative import (DraftProposer, NGramProposer,
 
 __all__ = [
     "AdmissionQueue", "BlockAllocator", "DraftProposer", "EngineConfig",
-    "NGramProposer", "NULL_BLOCK",
+    "ExpertResidencyManager", "NGramProposer", "NULL_BLOCK",
+    "PREFETCH_POLICIES",
     "Request", "RequestRecord", "RequestState", "RequestStatus",
-    "ServeEngine", "ServeMetrics", "VirtualClock", "WallClock",
+    "ResidencyCache", "ResidencyDecision",
+    "ServeEngine", "ServeMetrics", "TierCostModel", "VirtualClock",
+    "WallClock",
     "blocks_for_tokens", "copy_block", "engine_config_for",
     "gather_prefix_blocks", "greedy_verify", "load_trace",
     "make_paged_pool", "make_proposer", "nucleus_mask",

@@ -67,10 +67,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import round_up
+from repro.core.prefetch import stage_expert_rows
 from repro.kernels.paged_attention.ops import largest_block_divisor
 from repro.models import attention as attention_dispatch
 from repro.serve.arrivals import AdmissionQueue, WallClock
 from repro.serve.rebalance import ExpertRebalancer
+from repro.serve.residency import (PREFETCH_POLICIES, ExpertResidencyManager,
+                                   TierCostModel)
 from repro.serve.metrics import ServeMetrics
 from repro.serve.paging import (NULL_BLOCK, BlockAllocator,
                                 blocks_for_tokens, copy_block,
@@ -129,6 +132,15 @@ class EngineConfig:
     # exist from init, so swaps never change shapes or recompile).
     rebalance_interval: int = 0
     replica_slots: int = 0
+    # tiered expert residency (serve/residency.py): keep only
+    # `resident_experts` expert working-set rows (pod total, split evenly
+    # across EP ranks) "HBM-resident"; the rest live in the emulated host
+    # tier and are staged in per `prefetch_policy` — `predictive`
+    # (EMA-predicted next-layer prefetch, stalls hidden), `on_demand`
+    # (stage on first touch, stall every miss), or `none` (frozen initial
+    # working set).  0 = residency off (everything device-resident).
+    resident_experts: int = 0
+    prefetch_policy: str = "predictive"
 
     def __post_init__(self):
         if self.prefix_sharing and not self.paged:
@@ -156,6 +168,12 @@ class EngineConfig:
         if self.rebalance_interval > 0 and self.replica_slots == 0:
             raise ValueError("rebalance_interval > 0 needs replica_slots "
                              "> 0 (there is nowhere to place hot experts)")
+        if self.resident_experts < 0:
+            raise ValueError("resident_experts must be >= 0")
+        if self.prefetch_policy not in PREFETCH_POLICIES:
+            raise ValueError(
+                f"unknown prefetch_policy {self.prefetch_policy!r}; choose "
+                f"one of {PREFETCH_POLICIES}")
 
 
 def paged_pool_len(max_seq_len: int, prefill_chunk: int,
@@ -239,6 +257,42 @@ class ServeEngine:
             self._replica_ids = np.full(
                 (topo.num_ranks, ecfg.replica_slots), -1, np.int32)
             self._swap_fn = jax.jit(_swap_replica_weights)
+        # --- tiered expert residency (serve/residency.py) ---
+        self._residency: Optional[ExpertResidencyManager] = None
+        self._residency_ids: Optional[np.ndarray] = None
+        self._pending_stage = None        # decision applied next step start
+        self._residency_stages = 0        # staging scatters dispatched
+        self._res_base: Optional[Dict[str, float]] = None
+        if ecfg.resident_experts > 0:
+            spec = model.moe_spec
+            if not cfg.is_moe or spec is None or spec.tp_mode:
+                raise ValueError(
+                    "tiered expert residency needs expert-parallel MoE "
+                    "(num_experts >= the mesh model degree)")
+            topo = spec.topo
+            # the emulated host tier: one host-side copy of every expert
+            # weight leaf, in the deterministic order the staging walk
+            # visits them.  Device params stay authoritative (compute is
+            # bit-exact at any budget); the staged writes copy identical
+            # values, emulating the PCIe traffic the cost model prices.
+            self._host_tier = [np.asarray(w)
+                               for w in _collect_expert_leaves(params)]
+            if not self._host_tier:
+                raise ValueError("tiered expert residency found no expert "
+                                 "weight leaves in the parameter tree")
+            rows_axis = self._host_tier[0].ndim - 3
+            n_rows = self._host_tier[0].shape[rows_axis]
+            expert_bytes = float(sum(h.nbytes // h.shape[h.ndim - 3]
+                                     for h in self._host_tier))
+            assert n_rows == topo.num_ranks * topo.experts_per_rank
+            self._residency = ExpertResidencyManager(
+                topo, ecfg.resident_experts, policy=ecfg.prefetch_policy,
+                cost=TierCostModel(expert_bytes=expert_bytes))
+            self._residency_ids = self._residency._last_ids.copy()
+            # one padded stage width => one jit entry across all swaps
+            self._stage_width = max(
+                topo.num_ranks * self._residency.W, 1)
+            self._stage_fn = jax.jit(_stage_resident_weights)
         self._proposer = (make_proposer(ecfg.speculative_policy)
                           if self._spec else None)
         self._base_key = jax.random.PRNGKey(ecfg.skew_seed)
@@ -304,12 +358,12 @@ class ServeEngine:
                 # multi-token forward returning logits at every window
                 # position; acceptance/sampling run host-side
                 self._decode_fn = jax.jit(
-                    lambda p, t, c, pos, bt, k, a, rep: self._verify_core(
-                        p, t, c, pos, k, a, bt, rep))
+                    lambda p, t, c, pos, bt, k, a, rep, res:
+                        self._verify_core(p, t, c, pos, k, a, bt, rep, res))
             else:
                 self._decode_fn = jax.jit(
-                    lambda p, t, c, pos, bt, k, a, rep: self._decode_core(
-                        p, t, c, pos, k, a, bt, rep))
+                    lambda p, t, c, pos, bt, k, a, rep, res:
+                        self._decode_core(p, t, c, pos, k, a, bt, rep, res))
             if self._sharing:
                 self._gather_fn = jax.jit(
                     lambda pool, scratch, bt_row, n: gather_prefix_blocks(
@@ -333,8 +387,8 @@ class ServeEngine:
                 lambda pool, scratch, slot: write_slot(pool, scratch, slot,
                                                        self._batch_axes))
             self._decode_fn = jax.jit(
-                lambda p, t, c, pos, k, a, rep: self._decode_core(
-                    p, t, c, pos, k, a, None, rep))
+                lambda p, t, c, pos, k, a, rep, res: self._decode_core(
+                    p, t, c, pos, k, a, None, rep, res))
         # replica ids ride along as a trailing traced arg so between-window
         # weight swaps never re-trace (None = no replica slots: an empty
         # pytree, same trace either way).  With fused_paged_attention the
@@ -394,7 +448,8 @@ class ServeEngine:
         """Per-request EOS override, falling back to the engine default."""
         return req.eos_id if req.eos_id is not None else self.ecfg.eos_id
 
-    def _decode_core(self, params, tok, pool, pos, key, active, bt, rep):
+    def _decode_core(self, params, tok, pool, pos, key, active, bt, rep,
+                     res=None):
         skew_key = samp_key = None
         if self._skew and self._sample:
             skew_key = jax.random.fold_in(key, 0)
@@ -412,13 +467,16 @@ class ServeEngine:
             kw["fused_moe"] = True
         logits, pool, _, diags = self.model.decode_step(
             params, tok, pool, pos, skew_key=skew_key, active_mask=active,
-            moe_policy=self._moe_policy, moe_replica_ids=rep, **kw)
+            moe_policy=self._moe_policy, moe_replica_ids=rep,
+            moe_residency_ids=res,
+            moe_layer_diags=self._residency is not None, **kw)
         nxt = sample_tokens(logits, samp_key,
                             temperature=self.ecfg.temperature,
                             top_k=self.ecfg.top_k, top_p=self.ecfg.top_p)
         return nxt, pool, diags
 
-    def _verify_core(self, params, toks, pool, pos, key, active, bt, rep):
+    def _verify_core(self, params, toks, pool, pos, key, active, bt, rep,
+                     res=None):
         """Speculative verify step: ``toks`` [B, k+1] (window position 0 =
         the committed last token, 1..k = drafts) -> logits [B, k+1, V] at
         every window position.  No in-jit sampling — greedy acceptance /
@@ -435,7 +493,9 @@ class ServeEngine:
             kw["fused_moe"] = True
         logits, pool, _, diags = self.model.decode_step(
             params, toks, pool, pos, skew_key=skew_key, active_mask=active,
-            moe_policy=self._moe_policy, moe_replica_ids=rep, **kw)
+            moe_policy=self._moe_policy, moe_replica_ids=rep,
+            moe_residency_ids=res,
+            moe_layer_diags=self._residency is not None, **kw)
         return logits, pool, diags
 
     # ------------------------------------------------------------------
@@ -812,21 +872,26 @@ class ServeEngine:
             self._ensure_decode_blocks()
         if not self.active.any():
             return False
+        self._apply_pending_stage()
         key = self._next_key(self._dec_key, self._step_idx)
         bt_args = (self.block_table.copy(),) if self._paged else ()
         t0 = time.perf_counter()
         with self._ctx():
             nxt, self.pool, diags = self._decode_fn(
                 self.params, self.tok[:, None], self.pool, self.pos,
-                *bt_args, key, self.active.copy(), self._replica_ids)
+                *bt_args, key, self.active.copy(), self._replica_ids,
+                self._residency_ids)
         nxt = np.asarray(nxt)
         dt = time.perf_counter() - t0
         now = self.clock.now()       # post-sync: token times include compute
+        diags = dict(diags)
+        layer_loads = diags.pop("expert_load_layers", None)
         self.metrics.record_step(diags if self.cfg.is_moe else {},
                                  int(self.active.sum()), phase="decode")
         self.metrics.record_phase("decode", int(self.active.sum()), dt,
                                   self._attn_kv_bytes(1))
         self._observe_load(diags)
+        self._observe_residency(layer_loads)
         if self._paged:
             self.metrics.record_kv(self._alloc.blocks_in_use,
                                    self._alloc.usable_blocks)
@@ -865,6 +930,7 @@ class ServeEngine:
             self._ensure_decode_blocks()
         if not self.active.any():
             return False
+        self._apply_pending_stage()
         B, k = self.ecfg.max_slots, self.ecfg.speculative_k
         bs = self.ecfg.kv_block_size
         toks = np.zeros((B, k + 1), np.int32)
@@ -887,16 +953,19 @@ class ServeEngine:
             logits, self.pool, diags = self._decode_fn(
                 self.params, toks, self.pool, self.pos,
                 self.block_table.copy(), key, self.active.copy(),
-                self._replica_ids)
+                self._replica_ids, self._residency_ids)
         logits = np.asarray(logits)          # [B, k+1, V]
         dt = time.perf_counter() - t0
         now = self.clock.now()   # post-sync: token times include compute
+        diags = dict(diags)
+        layer_loads = diags.pop("expert_load_layers", None)
         self.metrics.record_step(diags if self.cfg.is_moe else {},
                                  int(self.active.sum()), phase="decode")
         # bytes computed against pre-commit positions: the verify window
         # reads each active row's chain up to pos + k + 1
         verify_bytes = self._attn_kv_bytes(k + 1)
         self._observe_load(diags)
+        self._observe_residency(layer_loads)
         self.metrics.record_kv(self._alloc.blocks_in_use,
                                self._alloc.usable_blocks)
         self.metrics.spec_steps += 1
@@ -968,6 +1037,48 @@ class ServeEngine:
         self._replica_ids = dec.replica_ids
         self._replica_swaps += 1
 
+    # ------------------------------------------------------------------
+    # tiered expert residency (serve/residency.py)
+    # ------------------------------------------------------------------
+    def _observe_residency(self, layer_loads) -> None:
+        """Feed this step's stacked per-layer expert loads (the
+        ``expert_load_layers`` diagnostic, [n_moe_layers, Ep]) to the
+        residency manager.  Its decision — new table + stage rows — is
+        held as the *pending* stage and applied at the start of the next
+        decode step, double-buffering the emulated host→HBM copy against
+        that step's compute."""
+        if self._residency is None or layer_loads is None:
+            return
+        self._pending_stage = self._residency.step(np.asarray(layer_loads))
+
+    def _apply_pending_stage(self) -> None:
+        """Apply the previous step's residency decision: dispatch its
+        jitted staging scatter now (jax's async dispatch overlaps the
+        copy with the decode compute that follows), then publish the new
+        ``[G, W]`` table as this step's traced argument."""
+        dec = self._pending_stage
+        if dec is None:
+            return
+        self._pending_stage = None
+        if dec.stage_rows.size:
+            self._dispatch_stage(dec.stage_rows)
+        self._residency_ids = dec.residency_ids
+
+    def _dispatch_stage(self, rows: np.ndarray) -> None:
+        """Run the host→HBM staging scatter for ``rows`` (stacked
+        weight-row indices).  Rows are padded/clipped to the fixed stage
+        width so the jit cache keeps one entry; padding repeats row 0,
+        which is safe because every staged value is gathered from the
+        host tier — a bit-identical copy of the device rows."""
+        padded = np.zeros((self._stage_width,), np.int32)
+        n = min(len(rows), self._stage_width)
+        padded[:n] = rows[:n]
+        vals = [np.take(h, padded, axis=h.ndim - 3)
+                for h in self._host_tier]
+        with self._ctx():
+            self.params = self._stage_fn(self.params, padded, vals)
+        self._residency_stages += 1
+
     def _finish(self, st: RequestState, now: float) -> None:
         st.finish_time = now
         st.status = RequestStatus.FINISHED
@@ -998,6 +1109,8 @@ class ServeEngine:
         if self._paged:
             self._evict0 = self._alloc.evictions
             self._cow0 = self._alloc.cow_copies
+        if self._residency is not None:
+            self._res_base = self._residency.counters()
         self.clock.reset()
 
     def warmup(self) -> None:
@@ -1045,7 +1158,8 @@ class ServeEngine:
                             if self._spec else self.tok[:, None])
                 nxt, self.pool, _ = self._decode_fn(
                     self.params, warm_tok, self.pool, self.pos,
-                    *bt_args, key, self.active.copy(), self._replica_ids)
+                    *bt_args, key, self.active.copy(), self._replica_ids,
+                    self._residency_ids)
                 if self._paged and self._sharing:
                     # gather through an all-null row (masked to 0 tokens)
                     # and copy the null block onto itself: both compile
@@ -1066,6 +1180,11 @@ class ServeEngine:
             with self._ctx():
                 self.params = self._swap_fn(
                     self.params, np.zeros((G * R,), np.int32))
+        if self._residency is not None:
+            # compile the staging scatter too: row-0 identity writes, so
+            # real residency swaps never show up as post-warmup compiles
+            self._dispatch_stage(np.zeros((0,), np.int32))
+            self._residency_stages = 0
         # multi-device: the first call may trace twice while cache shardings
         # settle to jit's steady state; anything beyond this is a regression
         self._warm_counts = self._jit_counts()
@@ -1125,6 +1244,15 @@ class ServeEngine:
         if self._paged:
             self.metrics.evictions = self._alloc.evictions - self._evict0
             self.metrics.cow_copies = self._alloc.cow_copies - self._cow0
+        if self._residency is not None:
+            # window counters: lifetime minus the reset_metrics snapshot
+            cur = self._residency.counters()
+            base = self._res_base or {}
+            win = {k: cur[k] - base.get(k, 0)
+                   for k in cur if k != "hit_rate"}
+            win["hit_rate"] = (win["hits"] / win["lookups"]
+                               if win["lookups"] else None)
+            self.metrics.residency = win
         rep = self.metrics.report()
         rep["engine"] = {
             "max_slots": self.ecfg.max_slots,
@@ -1157,6 +1285,12 @@ class ServeEngine:
                 rep["engine"]["replica_swaps"] = self._replica_swaps
                 rep["engine"]["replica_ids"] = self._replica_ids.tolist()
                 rep["engine"]["hot_experts"] = self._rebalancer.hot()
+            rep["engine"]["resident_experts"] = self.ecfg.resident_experts
+            if self._residency is not None:
+                rep["engine"]["prefetch_policy"] = self.ecfg.prefetch_policy
+                rep["engine"]["residency_stages"] = self._residency_stages
+                rep["engine"]["residency_ids"] = \
+                    self._residency_ids.tolist()
         snap = (self._attn_dispatch if self._attn_dispatch is not None
                 else attention_dispatch.dispatch_log())
         if snap:
@@ -1190,10 +1324,66 @@ class ServeEngine:
             counts["copy_block"] = self._copy_fn._cache_size()
         if self._rebalancer is not None:
             counts["replica_swap"] = self._swap_fn._cache_size()
+        if self._residency is not None:
+            counts["residency_stage"] = self._stage_fn._cache_size()
         return counts
 
 
 # ----------------------------------------------------------------------
+_EXPERT_LEAF_NAMES = ("w_in", "w_out", "w_gate")
+
+
+def _collect_expert_leaves(params) -> List:
+    """Every MoE expert weight leaf, in the deterministic order
+    ``_stage_resident_weights`` visits them.  MoE parameter dicts are
+    the ones carrying a ``router`` — dense MLP blocks reuse the
+    ``w_in``/``w_out`` names but have no router."""
+    out: List = []
+
+    def walk(tree):
+        if isinstance(tree, dict):
+            if "router" in tree and "w_in" in tree:
+                for name in _EXPERT_LEAF_NAMES:
+                    if name in tree:
+                        out.append(tree[name])
+                return
+            for v in tree.values():
+                walk(v)
+        elif isinstance(tree, (list, tuple)):
+            for v in tree:
+                walk(v)
+    walk(params)
+    return out
+
+
+def _stage_resident_weights(params, rows, vals):
+    """Scatter staged expert rows into every expert weight leaf.
+
+    ``rows`` [n] indexes the rank-major stacked expert-row axis (the
+    same layout ``_swap_replica_weights`` gathers from); ``vals`` is the
+    flat list of gathered host-tier slices in ``_collect_expert_leaves``
+    order.  The writes are value-identity (the emulated host tier is a
+    bit-exact copy of the device rows) — what's real is the dispatched
+    copy whose bytes the residency cost model prices.  Shapes never
+    change, so the jit cache holds one entry across all swaps."""
+    it = iter(vals)
+
+    def walk(tree):
+        if isinstance(tree, dict):
+            if "router" in tree and "w_in" in tree:
+                out = dict(tree)
+                for name in _EXPERT_LEAF_NAMES:
+                    if name in tree:
+                        out[name] = stage_expert_rows(tree[name], rows,
+                                                      next(it))
+                return out
+            return {k: walk(v) for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(walk(v) for v in tree)
+        return tree
+    return walk(params)
+
+
 def _swap_replica_weights(params, rows):
     """Gather expert weight rows into every replica leaf of the parameter
     tree.  ``rows`` [G*R] indexes the rank-major stacked expert-row axis
@@ -1236,7 +1426,9 @@ def engine_config_for(cfg, *, max_slots: int, prompt_len: int,
                       top_k: int = 0, top_p: float = 1.0,
                       moe_policy: Optional[str] = None,
                       rebalance_interval: int = 0,
-                      replica_slots: int = 0) -> EngineConfig:
+                      replica_slots: int = 0,
+                      resident_experts: int = 0,
+                      prefetch_policy: str = "predictive") -> EngineConfig:
     """Derive serving shapes from a workload: pool length covers prompt +
     generation, the prefill chunk divides the (padded) prompt, and the
     padded prompt fits every layer's KV capacity (sliding-window layers
@@ -1280,4 +1472,6 @@ def engine_config_for(cfg, *, max_slots: int, prompt_len: int,
         speculative_policy=speculative_policy,
         temperature=temperature, top_k=top_k, top_p=top_p,
         moe_policy=moe_policy, rebalance_interval=rebalance_interval,
-        replica_slots=replica_slots)
+        replica_slots=replica_slots,
+        resident_experts=resident_experts,
+        prefetch_policy=prefetch_policy)

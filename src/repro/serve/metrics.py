@@ -19,8 +19,11 @@ drafted/accepted/committed token counts per verify step, reported as a
 per committed token).  ``record_phase`` accumulates a per-phase kernel
 breakdown (prefill / prefix_tail / decode / verify tokens-per-second and
 analytic attention KV bytes-touched), reported as ``phases``.
-``report()`` is JSON-safe on an empty measurement window: percentile
-reductions over zero requests come back as ``None``, never NaN.
+With tiered expert residency the engine attaches a ``residency``
+sub-dict (hit_rate, stall_units, swaps, prefetches, bytes_staged) from
+the residency manager's window counters.  ``report()`` is JSON-safe on
+an empty measurement window: percentile reductions over zero requests
+come back as ``None``, never NaN.
 """
 from __future__ import annotations
 
@@ -127,6 +130,11 @@ class ServeMetrics:
         self.phase_seconds: Dict[str, float] = {}
         self.phase_kv_bytes: Dict[str, int] = {}
         self.phase_steps: Dict[str, int] = {}
+        # --- tiered expert residency (serve/residency.py) ---
+        # window counter dict (hits, misses, lookups, swaps, prefetches,
+        # stall_units, bytes_staged, hit_rate) set by the engine's
+        # report() from the residency manager; None = residency off
+        self.residency: Optional[Dict[str, Any]] = None
         self._t_first_arrival: Optional[float] = None
         self._t_last_finish: float = 0.0
 
@@ -272,6 +280,8 @@ class ServeMetrics:
         if self.moe_diags:
             rep["moe"] = {k: float(np.mean(v))
                           for k, v in self.moe_diags.items()}
+        if self.residency is not None:
+            rep["residency"] = dict(self.residency)
         lb = self._load_balance()
         if lb:
             rep["load_balance"] = lb

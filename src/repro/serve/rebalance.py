@@ -31,7 +31,7 @@ exactly one jit cache entry across any number of swaps (asserted by
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -78,14 +78,26 @@ class ExpertRebalancer:
         self.ema_alpha = float(ema_alpha)
         self.hot_threshold = float(hot_threshold)
         self.ema: Optional[np.ndarray] = None        # [Ep] float64
+        # optional per-layer EMAs (observe(layer=...)): distinct MoE
+        # layers can run disjoint hot sets, and a global EMA blurs them —
+        # the residency manager's prefetch predictor reads these, while
+        # hot()/propose() keep reading the global EMA (replica slots are
+        # shared across layers, so placement stays layer-agnostic)
+        self.layer_ema: Dict[int, np.ndarray] = {}
         self.steps_observed = 0
         self._lsl = local_slot_of(topo)              # [G, Ep]
         self._last_ids = np.full(
             (topo.num_ranks, self.R), -1, np.int32)  # init state: all empty
 
     # ---------------------------------------------------------------- observe
-    def observe(self, expert_load: np.ndarray) -> None:
-        """Fold one step's [Ep] global expert-load vector into the EMA."""
+    def observe(self, expert_load: np.ndarray,
+                layer: Optional[int] = None) -> None:
+        """Fold one step's [Ep] global expert-load vector into the EMA.
+
+        With ``layer`` the load is *additionally* folded into that
+        layer's own EMA (``layer_ema[layer]``, created on first use) —
+        the global EMA updates identically either way, so callers that
+        never pass ``layer`` see exactly the historical behavior."""
         v = np.asarray(expert_load, np.float64).reshape(-1)
         if v.shape[0] != self.topo.padded_experts:
             raise ValueError(
@@ -95,6 +107,10 @@ class ExpertRebalancer:
             self.ema = v.copy()
         else:
             self.ema = (1.0 - self.ema_alpha) * self.ema + self.ema_alpha * v
+        if layer is not None:
+            prev = self.layer_ema.get(int(layer))
+            self.layer_ema[int(layer)] = v.copy() if prev is None \
+                else (1.0 - self.ema_alpha) * prev + self.ema_alpha * v
         self.steps_observed += 1
 
     # ---------------------------------------------------------------- propose

@@ -1,0 +1,235 @@
+"""Property-based fuzz of the tiered expert-residency bookkeeping.
+
+Random interleavings of lookup/stage/evict/pin/unpin against
+``ResidencyCache`` must preserve, after every single operation:
+
+* budget — the working set never exceeds ``capacity``;
+* pinning — a pinned (current-layer) expert is never evicted, neither
+  explicitly (``evict`` returns False) nor by staging pressure (``stage``
+  picks the least-recent *unpinned* victim, or refuses with None when
+  every slot is pinned);
+* accounting — ``hits + misses == lookups`` and the eviction/stage
+  counters move in lockstep with the observed transitions;
+* order — evictions take the least-recently-used unpinned expert.
+
+A second program fuzzes ``ExpertResidencyManager.step`` with random
+per-layer load matrices and checks the decision-level invariants: the
+``[G, W]`` table stays within each rank's own shard with unique ids,
+stage rows index real weight rows, policy ``none`` never stages, and a
+fully-resident budget never misses.
+
+Runs under real ``hypothesis`` when installed (derandomized) and under
+``tests/_hypothesis_shim.py`` otherwise — coverage is deterministic
+either way.
+"""
+import random
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                   # pragma: no cover
+    from _hypothesis_shim import given, settings, strategies as st
+
+from repro.core.topology import EPTopology, make_topology
+from repro.serve.residency import (ExpertResidencyManager, ResidencyCache,
+                                   TierCostModel)
+
+
+# ----------------------------------------------------------------------
+# ResidencyCache op-program fuzz
+# ----------------------------------------------------------------------
+def check_cache(c: ResidencyCache) -> None:
+    res = c.resident
+    assert len(res) == len(set(res)) <= c.capacity
+    assert set(res) <= set(c.eligible)
+    assert c.hits + c.misses == c.lookups
+    assert c.pinned <= frozenset(c.eligible)
+
+
+def run_cache_program(seed: int, *, n_ops: int = 80) -> ResidencyCache:
+    rng = random.Random(seed)
+    shard = list(range(rng.randint(2, 10)))
+    cap = rng.randint(1, len(shard))
+    c = ResidencyCache(cap, shard)
+    foreign = max(shard) + 1
+
+    for _ in range(n_ops):
+        op = rng.choice(["lookup", "lookup", "stage", "stage", "evict",
+                         "pin", "unpin", "foreign"])
+        before = c.resident                    # LRU order snapshot
+        pinned = set(c.pinned)
+        counters = (c.hits, c.misses, c.lookups, c.evictions, c.stages)
+        e = rng.choice(shard)
+        if op == "lookup":
+            hit = c.lookup(e)
+            assert hit == (e in before)
+            if hit:
+                assert c.resident[-1] == e     # refreshed to most-recent
+                assert c.hits == counters[0] + 1
+            else:
+                assert c.misses == counters[1] + 1
+            assert c.lookups == counters[2] + 1
+        elif op == "stage":
+            out = c.stage(e)
+            if e in before:
+                assert out == -1               # refresh, nothing evicted
+                assert set(c.resident) == set(before)
+            elif len(before) < c.capacity:
+                assert out == -1
+                assert set(c.resident) == set(before) | {e}
+            else:
+                victims = [v for v in before if v not in pinned]
+                if not victims:
+                    assert out is None         # all pinned: refused
+                    assert c.resident == before
+                else:
+                    assert out == victims[0]   # least-recent unpinned
+                    assert out not in c.resident
+                    assert c.evictions == counters[3] + 1
+                    assert set(c.resident) == \
+                        (set(before) - {out}) | {e}
+        elif op == "evict":
+            ok = c.evict(e)
+            assert ok == (e in before and e not in pinned)
+            if ok:
+                assert e not in c.resident
+                assert c.evictions == counters[3] + 1
+            else:
+                assert c.resident == before
+        elif op == "pin":
+            sub = rng.sample(shard, rng.randint(0, len(shard)))
+            c.pin(sub)
+            assert c.pinned == frozenset(sub)
+        elif op == "unpin":
+            c.unpin()
+            assert c.pinned == frozenset()
+        elif op == "foreign":
+            with pytest.raises(KeyError):
+                c.lookup(foreign)
+            with pytest.raises(KeyError):
+                c.stage(foreign)
+            assert c.lookups == counters[2]    # foreign ids never counted
+        # pinned residents survive every operation
+        assert pinned & set(before) <= set(c.pinned) | set(c.resident)
+        check_cache(c)
+    return c
+
+
+@settings(max_examples=40, deadline=None, derandomize=True)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_cache_random_interleavings(seed):
+    run_cache_program(seed)
+
+
+def test_cache_validation():
+    with pytest.raises(ValueError):
+        ResidencyCache(0, [0, 1])
+    with pytest.raises(ValueError):
+        ResidencyCache(3, [0, 1])
+
+
+def test_cache_all_pinned_refuses_stage():
+    c = ResidencyCache(2, [0, 1, 2, 3])
+    assert c.stage(0) == -1 and c.stage(1) == -1
+    c.pin([0, 1])
+    assert c.stage(2) is None          # no unpinned victim
+    assert set(c.resident) == {0, 1}
+    c.unpin()
+    assert c.stage(2) == 0             # LRU unpinned victim
+
+
+# ----------------------------------------------------------------------
+# ExpertResidencyManager step-program fuzz
+# ----------------------------------------------------------------------
+def check_decision(mgr: ExpertResidencyManager, dec) -> None:
+    topo = mgr.topo
+    G, epr, W = topo.num_ranks, topo.experts_per_rank, mgr.W
+    assert dec.residency_ids.shape == (G, W)
+    for g in range(G):
+        ids = [int(e) for e in dec.residency_ids[g] if e >= 0]
+        assert len(ids) == len(set(ids)) <= W
+        assert set(ids) <= {int(e) for e in topo.slot_map[g]}
+        assert len(mgr.caches[g]) <= W
+        assert not mgr.caches[g].pinned            # unpinned between steps
+    rows = dec.stage_rows
+    assert rows.tolist() == sorted(set(rows.tolist()))
+    assert all(0 <= r < G * epr for r in rows.tolist())
+    assert dec.hits >= 0 and dec.misses >= 0
+    w = mgr.counters()
+    assert w["hits"] + w["misses"] == w["lookups"]
+
+
+def run_manager_program(seed: int, *, n_steps: int = 12) -> None:
+    rng = random.Random(seed)
+    G = rng.choice([1, 2, 4])
+    E = G * rng.randint(1, 4)
+    topo = make_topology(num_ranks=G, num_experts=E)
+    assert isinstance(topo, EPTopology)
+    epr = topo.experts_per_rank
+    W = rng.randint(1, epr)
+    policy = rng.choice(["predictive", "on_demand", "none"])
+    mgr = ExpertResidencyManager(topo, W * G, policy=policy,
+                                 cost=TierCostModel())
+    load_rng = np.random.default_rng(seed)
+    n_layers = rng.randint(1, 3)
+    first_ids = mgr._last_ids.copy()
+    for _ in range(n_steps):
+        # sparse random per-layer loads (zeros = expert unused that layer)
+        loads = load_rng.integers(0, 3, (n_layers, topo.padded_experts))
+        dec = mgr.step(loads.astype(np.float64))
+        check_decision(mgr, dec)
+        if policy == "none":
+            # frozen working set: no staging, table never changes
+            assert dec.stage_rows.size == 0
+            assert not dec.changed
+            assert np.array_equal(dec.residency_ids, first_ids)
+        if mgr.fully_resident:
+            assert dec.misses == 0 and dec.stall_units == 0.0
+    w = mgr.counters()
+    if policy == "none":
+        assert w["swaps"] == 0 and w["bytes_staged"] == 0.0
+    if mgr.fully_resident:
+        assert w["misses"] == 0 and (w["hit_rate"] in (None, 1.0))
+
+
+@settings(max_examples=40, deadline=None, derandomize=True)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_manager_random_streams(seed):
+    run_manager_program(seed)
+
+
+def test_manager_validation():
+    topo = make_topology(num_ranks=2, num_experts=8)
+    with pytest.raises(ValueError):
+        ExpertResidencyManager(topo, 0)
+    with pytest.raises(ValueError):
+        ExpertResidencyManager(topo, 3)            # not a multiple of G
+    with pytest.raises(ValueError):
+        ExpertResidencyManager(topo, 10)           # W > experts_per_rank
+    with pytest.raises(ValueError):
+        ExpertResidencyManager(topo, 2, policy="psychic")
+
+
+def test_predictive_prefetch_hides_the_stall():
+    """Two MoE layers routing to disjoint expert pairs, W = 4 of 8: the
+    predictive policy prefetches layer 1's pair during layer 0's compute
+    window (bytes move, no stall), ``on_demand`` stalls once per expert
+    on first touch, and ``none`` stalls on every single use — the
+    module-level ordering the BENCH residency section measures end to
+    end."""
+    topo = make_topology(num_ranks=1, num_experts=8)
+    slots = [int(e) for e in topo.slot_map[0]]
+    loads = np.zeros((2, topo.padded_experts))
+    loads[0, slots[0]] = loads[0, slots[1]] = 3.0   # layer 0: in the seed set
+    loads[1, slots[4]] = loads[1, slots[5]] = 3.0   # layer 1: outside it
+    stall = {}
+    for policy in ("predictive", "on_demand", "none"):
+        mgr = ExpertResidencyManager(topo, 4, policy=policy,
+                                     cost=TierCostModel())
+        stall[policy] = sum(mgr.step(loads).stall_units for _ in range(5))
+        assert mgr.counters()["hits"] + mgr.counters()["misses"] == 20
+    assert stall["predictive"] == 0.0        # both misses prefetched
+    assert stall["on_demand"] == 2.0         # one stall per first touch
+    assert stall["none"] == 10.0             # stalls every step, forever

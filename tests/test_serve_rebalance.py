@@ -74,6 +74,42 @@ def test_ema_tracks_shifting_hotspot():
     assert dec.changed
 
 
+def test_per_layer_ema_is_independent_of_the_global_one():
+    """``observe(load, layer=l)`` feeds the residency predictor's
+    per-layer EMAs without perturbing anything the replication policy
+    reads: the global EMA, ``hot()`` and ``propose()`` are bit-identical
+    whether or not callers tag their observations with a layer."""
+    topo = make_topology(4, 8)
+    a = np.full(8, 1.0)
+    a[2] = 50.0
+    b = np.full(8, 1.0)
+    b[6] = 50.0
+    plain = ExpertRebalancer(topo, 1, ema_alpha=0.5)
+    tagged = ExpertRebalancer(topo, 1, ema_alpha=0.5)
+    for load, layer in ((a, 0), (b, 1), (a, 0), (b, 1)):
+        plain.observe(load)
+        tagged.observe(load, layer=layer)
+    assert np.array_equal(plain.ema, tagged.ema)
+    assert plain.hot() == tagged.hot()
+    assert (plain.propose().replica_ids == tagged.propose().replica_ids).all()
+
+    # never tagging leaves the per-layer table empty...
+    assert plain.layer_ema == {}
+    # ...and tagged layers fold separately: layer 0 only ever saw ``a``
+    # (seed copy then one alpha=0.5 fold of the same vector => exactly a)
+    assert set(tagged.layer_ema) == {0, 1}
+    assert np.array_equal(tagged.layer_ema[0], a.astype(np.float64))
+    assert np.array_equal(tagged.layer_ema[1], b.astype(np.float64))
+    assert tagged.layer_ema[0][2] == 50.0 and tagged.layer_ema[0][6] == 1.0
+
+    # a drifting layer follows the fold: 0.5 * 50 + 0.5 * 1 on slot 2
+    tagged.observe(b, layer=0)
+    assert tagged.layer_ema[0][2] == pytest.approx(25.5)
+    assert tagged.layer_ema[0][6] == pytest.approx(25.5)
+    # layer 1 untouched by layer 0's update
+    assert np.array_equal(tagged.layer_ema[1], b.astype(np.float64))
+
+
 def test_top_r_limit_and_threshold():
     rb = ExpertRebalancer(make_topology(4, 8), 2, hot_threshold=1.5)
     load = np.array([100.0, 90.0, 80.0, 1, 1, 1, 1, 1])
