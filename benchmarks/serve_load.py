@@ -40,6 +40,14 @@ machine-readable ``BENCH_serve.json``:
   the real scheduler under ``non_local`` demotion — the headline is
   predictive prefetch stalling strictly less than on-demand staging at
   the same budget while recovering ~all fully-resident throughput;
+* ``fleet`` — multi-replica serving through the ``FleetRouter``:
+  prefix-affinity routing vs load-only / round-robin on a two-group
+  shared-prefix trace (affinity pins each prefix group to the replica
+  whose radix cache holds it — fewer cold prefill chunks, lower TTFT
+  p50), and prefill/decode disaggregation vs two unified replicas under
+  a steady-decode + long-prompt-burst mix (the decode-role replica never
+  runs prompt prefills, so burst prefill chunks cannot stall in-flight
+  decodes — lower TPOT p99 at equal device count);
 * ``decode_attention`` — microbench of the per-step decode-attention
   primitive, reference block-table gather vs the fused Pallas kernel,
   sweeping the active sequence length against ``L_max``: the reference
@@ -81,7 +89,8 @@ from repro.configs import get_config                          # noqa: E402
 from repro.configs.base import ParallelConfig                 # noqa: E402
 from repro.launch.mesh import make_host_mesh                  # noqa: E402
 from repro.models.model import MeshShape, build_model         # noqa: E402
-from repro.serve import (ServeEngine, engine_config_for,      # noqa: E402
+from repro.serve import (FleetRouter, ServeEngine, WallClock,  # noqa: E402
+                         engine_config_for, merge_requests,
                          poisson_requests)
 
 ARCH = "mixtral-8x7b"
@@ -1083,11 +1092,211 @@ def phases_breakdown():
             "summary": summary}
 
 
+def build_fleet(roles, *, routing="load", affinity_weight=1.0,
+                prompt_len=PROMPT_LEN, gen=GEN, slots=SLOTS,
+                num_kv_blocks=0, prefix_sharing=False,
+                prefill_chunk=PREFILL_CHUNK):
+    """N virtual replicas on the 2-device group: one model + one set of
+    weights, one engine (and KV pool) per role entry, one shared wall
+    clock, a ``FleetRouter`` on top."""
+    # window disabled: the fleet cells run 64-token prompts plus decode,
+    # and reduced() clamps the arch to a 64-token window that would
+    # reject the block-rounded paged pool
+    cfg = get_config(ARCH).reduced().replace(sliding_window=0)
+    cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, policy="harmoeny"))
+    mesh = make_host_mesh(data=1, model=MODEL_PAR)
+    ms = MeshShape(tuple(zip(mesh.axis_names, mesh.devices.shape)))
+    model = build_model(cfg, ParallelConfig(attn_chunk=min(512, prompt_len)),
+                        batch=slots, seq_len=prompt_len,
+                        mesh_shape=ms, mesh=mesh)
+    with mesh:
+        params = model.init(jax.random.PRNGKey(0))
+    clock = WallClock()
+    engines = [ServeEngine(
+        model, params,
+        engine_config_for(cfg, max_slots=slots, prompt_len=prompt_len,
+                          max_new_tokens=gen, prefill_chunk=prefill_chunk,
+                          skew_seed=1, paged=True, kv_block_size=KV_BLOCK,
+                          num_kv_blocks=num_kv_blocks,
+                          prefix_sharing=prefix_sharing, role=role),
+        mesh=mesh, clock=clock) for role in roles]
+    fleet = FleetRouter(engines, policy=routing,
+                        affinity_weight=affinity_weight)
+    fleet.warmup()
+    return cfg, fleet
+
+
+def _fleet_cell(rep, **extra):
+    fl = rep["fleet"]
+    agg, routing = fl["aggregate"], fl["routing"]
+    return {
+        **extra,
+        "n_requests": agg["n_requests"],
+        "ttft_p50_ms": agg["ttft"]["p50"] * 1e3,
+        "ttft_p99_ms": agg["ttft"]["p99"] * 1e3,
+        "tpot_p50_ms": agg["tpot"]["p50"] * 1e3,
+        "tpot_p99_ms": agg["tpot"]["p99"] * 1e3,
+        "e2e_p50_ms": agg["e2e"]["p50"] * 1e3,
+        "queue_delay_p50_ms": agg["queue_delay"]["p50"] * 1e3,
+        "tok_s": agg["throughput_tok_s"],
+        "goodput_req_s": agg["goodput_req_s"],
+        "prefix_hit_rate": agg["prefix_hit_rate"],
+        "routed_per_replica": routing["per_replica"],
+        "affinity_hit_rate": routing["affinity_hit_rate"],
+        "affinity_hit_tokens": routing["affinity_hit_tokens"],
+        "prefill_chunks_total": sum(r["prefill_chunks"]
+                                    for r in rep["replica_reports"]),
+        "preemptions": agg["preemptions"],
+        "handoffs_moved": fl["handoffs"]["moved"],
+        "handoff_mib": fl["handoffs"]["bytes"] / 2 ** 20,
+        "recompiled_after_warmup": [
+            bool(r.get("recompiled_after_warmup"))
+            for r in rep["replica_reports"]],
+    }
+
+
+def fleet_compare():
+    """Fleet serving: prefix-affinity routing and prefill/decode
+    disaggregation vs their single-policy baselines.
+
+    * **routing cells** — 2 unified replicas with prefix sharing on a
+      THREE-group shared-prefix trace (three 56-token system prompts,
+      8-token tails) under a block budget that fits about two cached
+      prefixes plus active chains per replica.  ``load`` routing balances
+      instantaneous queued+KV tokens and ignores cache state, so all
+      three groups keep landing on both replicas and the LRU prefix cache
+      thrashes — repeated cold 4-chunk prefills; ``prefix_affinity``
+      probes each replica's radix index (LRU-neutral) and pins each group
+      where its prefix is already resident, so each replica serves a
+      stable subset of prefixes from cache and followers prefill only
+      their 8-token tail.  Fewer prefill chunks is the deterministic
+      work-saved signal; lower TTFT p50 is the headline.
+    * **disaggregation cells** — a steady short-prompt/long-decode stream
+      plus a mid-run burst of long-prompt prefill-only requests
+      (``max_new_tokens=1``: the first token finishes them, so they never
+      hand off), on 2 unified replicas vs 1 prefill-role + 1 decode-role
+      replica (KV handoff).  Unified replicas interleave the burst's
+      prefill chunks with in-flight decode steps, stalling every decode
+      slot they share an engine with; the disaggregated decode replica
+      never runs prompt prefills, so the burst cannot touch its decode
+      cadence — lower TPOT p99 at equal device count is the headline.
+    """
+    cells = {"routing": [], "disaggregation": []}
+
+    # -------------- routing: three prefix groups, 2 unified replicas ---
+    # budget: a 56-token prefix caches as 7 blocks; 30 blocks hold two
+    # prefixes plus active chains, NOT all three — cache-blind routing
+    # thrashes, affinity partitions the groups across the replicas
+    plen, tail_gen, prefix_len, n_per_group = 64, 8, 56, 8
+    for routing in ("load", "round_robin", "prefix_affinity"):
+        # weight 3: a 56-token cached prefix offsets ~168 tokens of load
+        # (≈ 2.5 queued prompts), so a warm replica keeps its group even
+        # while briefly busier — weight 1 lets one queued prompt push the
+        # group onto a cold replica and duplicate its cache footprint
+        cfg, fleet = build_fleet(["unified"] * 2, routing=routing,
+                                 affinity_weight=3.0,
+                                 prompt_len=plen, gen=tail_gen, slots=3,
+                                 num_kv_blocks=30, prefix_sharing=True)
+        groups = [poisson_requests(
+            n_per_group, rate=6.0, vocab_size=cfg.vocab_size,
+            prompt_len=plen, max_new_tokens=tail_gen, seed=20 + g,
+            shared_prefix_len=prefix_len, rid_base=100 * g)
+            for g in range(3)]
+        rep = fleet.run(merge_requests(*groups))
+        cell = _fleet_cell(rep, routing=routing, replicas=2,
+                           prefix_groups=3, shared_prefix_len=prefix_len,
+                           prompt_len=plen)
+        cells["routing"].append(cell)
+        print(f"[bench] fleet-routing {routing:15s} "
+              f"ttft_p50={cell['ttft_p50_ms']:7.1f}ms "
+              f"p99={cell['ttft_p99_ms']:7.1f}ms "
+              f"prefill_chunks={cell['prefill_chunks_total']:3d} "
+              f"hit={cell['prefix_hit_rate']} "
+              f"affinity={cell['affinity_hit_rate']}")
+
+    # ------------- disaggregation: steady decode + long-prompt burst ---
+    plen, gen_steady = 64, 24
+    def workload(cfg):
+        steady = poisson_requests(
+            8, rate=6.0, vocab_size=cfg.vocab_size, prompt_len=16,
+            max_new_tokens=gen_steady, seed=30)
+        # prefill-only burst: max_new_tokens=1 means the sampled first
+        # token finishes each request on whatever engine prefilled it
+        burst = [dataclasses.replace(r, arrival_time=0.25)
+                 for r in poisson_requests(
+                     8, rate=0.0, vocab_size=cfg.vocab_size,
+                     prompt_len=plen, max_new_tokens=1, seed=31,
+                     rid_base=500)]
+        return merge_requests(steady, burst)
+
+    for name, roles in (("unified", ["unified"] * 2),
+                        ("disaggregated", ["prefill", "decode"])):
+        cfg, fleet = build_fleet(roles, prompt_len=plen, gen=gen_steady,
+                                 slots=6)
+        rep = fleet.run(workload(cfg))
+        cell = _fleet_cell(rep, mode=name, replicas=2,
+                           steady_requests=8, burst_requests=8,
+                           burst_prompt_len=plen)
+        cells["disaggregation"].append(cell)
+        print(f"[bench] fleet-disagg {name:14s} "
+              f"tpot_p50={cell['tpot_p50_ms']:6.2f}ms "
+              f"p99={cell['tpot_p99_ms']:7.2f}ms "
+              f"ttft_p50={cell['ttft_p50_ms']:7.1f}ms "
+              f"handoffs={cell['handoffs_moved']}")
+
+    by_r = {c["routing"]: c for c in cells["routing"]}
+    by_d = {c["mode"]: c for c in cells["disaggregation"]}
+    headline = {
+        "affinity_ttft_p50_ms": by_r["prefix_affinity"]["ttft_p50_ms"],
+        "load_ttft_p50_ms": by_r["load"]["ttft_p50_ms"],
+        "affinity_beats_load_ttft":
+            by_r["prefix_affinity"]["ttft_p50_ms"]
+            < by_r["load"]["ttft_p50_ms"],
+        "affinity_prefill_chunks_saved":
+            by_r["load"]["prefill_chunks_total"]
+            - by_r["prefix_affinity"]["prefill_chunks_total"],
+        "disagg_tpot_p99_ms": by_d["disaggregated"]["tpot_p99_ms"],
+        "unified_tpot_p99_ms": by_d["unified"]["tpot_p99_ms"],
+        "disagg_beats_unified_tpot_p99":
+            by_d["disaggregated"]["tpot_p99_ms"]
+            < by_d["unified"]["tpot_p99_ms"],
+        "no_replica_recompiled": not any(
+            any(c["recompiled_after_warmup"])
+            for sec in cells.values() for c in sec),
+    }
+    print(f"[bench] fleet headline: affinity ttft_p50 "
+          f"{headline['affinity_ttft_p50_ms']:.1f}ms vs load "
+          f"{headline['load_ttft_p50_ms']:.1f}ms "
+          f"(beats: {headline['affinity_beats_load_ttft']}, "
+          f"chunks saved: {headline['affinity_prefill_chunks_saved']}); "
+          f"disagg tpot_p99 {headline['disagg_tpot_p99_ms']:.2f}ms vs "
+          f"unified {headline['unified_tpot_p99_ms']:.2f}ms "
+          f"(beats: {headline['disagg_beats_unified_tpot_p99']})")
+    return {"cells": cells, "headline": headline}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "..", "BENCH_serve.json"))
+    ap.add_argument("--only", default="", choices=["", "fleet"],
+                    help="run a single section and merge it into an "
+                         "existing --out file (fresh runs leave this "
+                         "empty and produce the full file)")
     args = ap.parse_args()
+
+    if args.only == "fleet":
+        fleet = fleet_compare()
+        out = {}
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                out = json.load(f)
+        out["fleet"] = fleet
+        with open(args.out, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"[bench] merged fleet section -> "
+              f"{os.path.abspath(args.out)}")
+        return
 
     results = sweep()
     capacity, gains, more = capacity_compare()
@@ -1096,6 +1305,7 @@ def main():
         speculative_compare()
     skew = skew_compare()
     residency = residency_compare()
+    fleet = fleet_compare()
     decode_attn = decode_attention_microbench()
     phases = phases_breakdown()
 
@@ -1131,6 +1341,7 @@ def main():
         },
         "skew": skew,
         "residency": residency,
+        "fleet": fleet,
         "decode_attention": decode_attn,
         "phases": phases,
     }
@@ -1142,6 +1353,8 @@ def main():
           f"{len(skew['engine_cells'])}+{len(skew['modeled_cells'])} skew + "
           f"{len(residency['engine_cells'])}+"
           f"{len(residency['modeled_cells'])} residency + "
+          f"{len(fleet['cells']['routing'])}+"
+          f"{len(fleet['cells']['disaggregation'])} fleet + "
           f"{len(decode_attn['cells'])} decode-attention + "
           f"{len(phases['cells'])} phase-breakdown cells)")
 

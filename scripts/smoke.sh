@@ -87,6 +87,31 @@ echo "== 2-device CPU serve smoke (skew 0.9, harmoeny + replication) =="
 serve --paged --kv-block-size 8 --moe-policy harmoeny --q-tokens 1 \
     --replica-slots 1 --rebalance-interval 4
 
+# Fleet cells: 2 virtual replicas (one set of weights, one engine + KV
+# pool each) behind the FleetRouter on one shared clock. Load-only vs
+# prefix-affinity routing on a shared-prefix stream, then one
+# disaggregated cell (prefill-role -> decode-role KV handoff). A
+# 1-replica fleet is bit-identical to the bare engine and disaggregation
+# is token-identical to unified serving — both asserted by
+# tests/test_serve_fleet.py; here the cells have to serve the stream and
+# print populated fleet routing / handoff reports.
+CELL="fleet: 2 replicas, load routing"
+echo "== 2-device CPU serve smoke (fleet: 2 replicas, load routing) =="
+serve --paged --kv-block-size 8 --prefill-chunk 16 \
+    --prefix-sharing --shared-prefix-len 24 \
+    --replicas 2 --routing-policy load
+
+CELL="fleet: 2 replicas, prefix-affinity routing"
+echo "== 2-device CPU serve smoke (fleet: 2 replicas, prefix-affinity) =="
+serve --paged --kv-block-size 8 --prefill-chunk 16 \
+    --prefix-sharing --shared-prefix-len 24 \
+    --replicas 2 --routing-policy prefix_affinity --affinity-weight 3
+
+CELL="fleet: disaggregated prefill/decode"
+echo "== 2-device CPU serve smoke (fleet: prefill/decode disaggregation) =="
+serve --paged --kv-block-size 8 --prefill-chunk 16 \
+    --replicas 2 --disaggregate
+
 CELL="tiered residency: predictive prefetch"
 echo "== 2-device CPU serve smoke (tiered residency, predictive prefetch) =="
 # --resident-experts 4 of the reduced model's 8 expert rows (W=2 per

@@ -19,6 +19,14 @@ truncated sampling.
 Reports per-request TTFT/TPOT percentiles, decode tokens/s, and the
 HarMoEny schedule diagnostics (moved units, drops, load balance) — the
 paper's §5 metrics.
+
+``--replicas N`` scales out to a fleet of N engine replicas behind a
+``FleetRouter`` (virtual replicas: one set of weights on one device
+group, one engine + KV pool each, one shared clock) with
+``--routing-policy`` load / prefix_affinity / round_robin;
+``--disaggregate`` splits the fleet into prefill-role and decode-role
+engines connected by the KV handoff path. Fleet runs report aggregate
+and per-replica metrics plus routing / handoff diagnostics.
 """
 from __future__ import annotations
 
@@ -34,7 +42,8 @@ from repro.configs.base import ParallelConfig
 from repro.core.topology import static_opt_placement
 from repro.launch.mesh import make_host_mesh
 from repro.models.model import MeshShape, build_model
-from repro.serve import (ServeEngine, engine_config_for, load_trace,
+from repro.serve import (FleetRouter, ROUTING_POLICIES, ServeEngine,
+                         WallClock, engine_config_for, load_trace,
                          poisson_requests)
 
 
@@ -77,14 +86,7 @@ def config_from_args(args):
     return cfg.replace(moe=moe)
 
 
-def build_serving_engine(args, cfg=None, *, prompt_len=None, gen=None):
-    """Config + model + engine from CLI args (shared with examples).
-
-    ``prompt_len``/``gen`` override the CLI shapes (trace-driven runs size
-    the engine from the trace, not the defaults)."""
-    cfg = cfg if cfg is not None else config_from_args(args)
-    prompt_len = prompt_len or args.prompt_len
-    gen = gen or args.gen
+def _mesh_and_model(args, cfg, prompt_len):
     pcfg = ParallelConfig(attn_chunk=min(512, prompt_len))
     if args.data_par > 1:
         raise NotImplementedError(
@@ -96,7 +98,11 @@ def build_serving_engine(args, cfg=None, *, prompt_len=None, gen=None):
                         mesh_shape=ms, mesh=mesh)
     with mesh:
         params = model.init(jax.random.PRNGKey(0))
-    ecfg = engine_config_for(
+    return mesh, model, params
+
+
+def _engine_cfg(args, cfg, prompt_len, gen, role="unified"):
+    return engine_config_for(
         cfg, max_slots=args.batch, prompt_len=prompt_len,
         max_new_tokens=gen, prefill_chunk=args.prefill_chunk,
         skew_seed=args.seed + 1, paged=args.paged,
@@ -111,9 +117,52 @@ def build_serving_engine(args, cfg=None, *, prompt_len=None, gen=None):
         rebalance_interval=args.rebalance_interval,
         replica_slots=args.replica_slots,
         resident_experts=getattr(args, "resident_experts", 0),
-        prefetch_policy=getattr(args, "prefetch_policy", "predictive"))
+        prefetch_policy=getattr(args, "prefetch_policy", "predictive"),
+        role=role)
+
+
+def build_serving_engine(args, cfg=None, *, prompt_len=None, gen=None):
+    """Config + model + engine from CLI args (shared with examples).
+
+    ``prompt_len``/``gen`` override the CLI shapes (trace-driven runs size
+    the engine from the trace, not the defaults)."""
+    cfg = cfg if cfg is not None else config_from_args(args)
+    prompt_len = prompt_len or args.prompt_len
+    gen = gen or args.gen
+    mesh, model, params = _mesh_and_model(args, cfg, prompt_len)
+    ecfg = _engine_cfg(args, cfg, prompt_len, gen)
     engine = ServeEngine(model, params, ecfg, mesh=mesh)
     return cfg, engine
+
+
+def build_fleet(args, cfg=None, *, prompt_len=None, gen=None):
+    """N virtual replicas behind a ``FleetRouter``: one set of weights on
+    one device group, one engine (and KV pool) each, one shared wall
+    clock. ``--disaggregate`` makes the first ``replicas // 2`` engines
+    prefill-role and the rest decode-role (requires ``--paged``)."""
+    cfg = cfg if cfg is not None else config_from_args(args)
+    prompt_len = prompt_len or args.prompt_len
+    gen = gen or args.gen
+    mesh, model, params = _mesh_and_model(args, cfg, prompt_len)
+    if args.disaggregate:
+        if args.replicas < 2:
+            raise ValueError("--disaggregate needs --replicas >= 2 "
+                             "(at least one prefill + one decode engine)")
+        if not args.paged:
+            raise ValueError("--disaggregate hands KV off through the "
+                             "paged block machinery; add --paged")
+        n_pf = max(1, args.replicas // 2)
+        roles = ["prefill"] * n_pf + ["decode"] * (args.replicas - n_pf)
+    else:
+        roles = ["unified"] * args.replicas
+    clock = WallClock()
+    engines = [ServeEngine(model, params,
+                           _engine_cfg(args, cfg, prompt_len, gen, role),
+                           mesh=mesh, clock=clock)
+               for role in roles]
+    fleet = FleetRouter(engines, policy=args.routing_policy,
+                        affinity_weight=args.affinity_weight)
+    return cfg, fleet
 
 
 def serve(args):
@@ -129,6 +178,8 @@ def serve(args):
             prompt_len=args.prompt_len, max_new_tokens=args.gen,
             seed=args.seed, shared_prefix_len=args.shared_prefix_len)
         prompt_len, gen = args.prompt_len, args.gen
+    if args.replicas > 1 or args.disaggregate:
+        return serve_fleet(args, cfg, requests, prompt_len, gen)
     cfg, engine = build_serving_engine(args, cfg, prompt_len=prompt_len,
                                        gen=gen)
     engine.warmup()                      # compile outside the TTFT window
@@ -207,6 +258,47 @@ def serve(args):
         with open(args.out, "w") as f:
             json.dump(rep, f, indent=2)
         print(f"[serve] report -> {args.out}")
+    return rep
+
+
+def serve_fleet(args, cfg, requests, prompt_len, gen):
+    cfg, fleet = build_fleet(args, cfg, prompt_len=prompt_len, gen=gen)
+    fleet.warmup()                       # compile outside the TTFT window
+    rep = fleet.run(requests)
+    fl = rep["fleet"]
+    agg, routing, hand = fl["aggregate"], fl["routing"], fl["handoffs"]
+    ttft, tpot = agg["ttft"], agg["tpot"]
+    print(f"[fleet] arch={args.arch} replicas={fl['n_replicas']} "
+          f"policy={routing['policy']} "
+          f"disaggregated={fl['disaggregated']} "
+          f"requests={agg['n_requests']} rate={args.rate}")
+    print(f"[fleet] TTFT p50 {ttft['p50'] * 1e3:.1f} ms  "
+          f"p99 {ttft['p99'] * 1e3:.1f} ms   "
+          f"TPOT p50 {tpot['p50'] * 1e3:.2f} ms   "
+          f"decode {agg['throughput_tok_s']:.1f} tok/s   "
+          f"goodput {agg['goodput_req_s']:.2f} req/s")
+    hit = routing["affinity_hit_rate"]
+    print(f"[fleet] routing: per_replica={routing['per_replica']}  "
+          f"affinity_hits={routing['affinity_hits']} "
+          f"(rate={hit if hit is None else f'{hit:.2f}'}, "
+          f"{routing['affinity_hit_tokens']} cached tokens)")
+    if fl["disaggregated"]:
+        print(f"[fleet] handoffs: moved={hand['moved']} "
+              f"bytes={hand['bytes'] / 2 ** 20:.2f} MiB "
+              f"pending={hand['pending']}")
+    for r in fl["replicas"]:
+        rt = r["ttft"]["p50"]
+        print(f"[fleet]   replica {r['index']} role={r['role']:8s} "
+              f"routed={r['routed']:3d} finished={r['n_requests']:3d} "
+              f"steps={r['steps']:4d} "
+              f"ttft_p50={'-' if rt is None else f'{rt * 1e3:.1f}ms'}")
+    recompiled = [bool(rr.get("recompiled_after_warmup"))
+                  for rr in rep["replica_reports"]]
+    print(f"[fleet] recompiled_after_warmup={recompiled}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rep, f, indent=2)
+        print(f"[fleet] report -> {args.out}")
     return rep
 
 
@@ -300,6 +392,23 @@ def main():
     ap.add_argument("--top-p", type=float, default=1.0,
                     help="nucleus sampling: keep the smallest token set "
                          "with cumulative probability >= top-p (1 = off)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas behind the fleet router (>1 "
+                         "enables fleet mode; virtual replicas share one "
+                         "set of weights on one device group)")
+    ap.add_argument("--routing-policy", default="load",
+                    choices=list(ROUTING_POLICIES),
+                    help="fleet routing: load = least queued+KV tokens, "
+                         "prefix_affinity = load minus cached-prefix "
+                         "match (needs --prefix-sharing to matter), "
+                         "round_robin = baseline")
+    ap.add_argument("--affinity-weight", type=float, default=1.0,
+                    help="tokens of load one cached prefix token offsets "
+                         "under prefix_affinity routing")
+    ap.add_argument("--disaggregate", action="store_true",
+                    help="split the fleet into prefill-role and decode-"
+                         "role engines linked by KV handoff (needs "
+                         "--paged and --replicas >= 2)")
     ap.add_argument("--trace", default="",
                     help="JSON trace file of arrival records")
     ap.add_argument("--out", default="", help="write the report JSON here")

@@ -1,9 +1,16 @@
 """repro.serve — continuous-batching serving engine (see README.md)."""
 from repro.serve.arrivals import (AdmissionQueue, VirtualClock, WallClock,
-                                  load_trace, poisson_requests,
+                                  load_trace, merge_requests,
+                                  poisson_requests, split_seeds,
                                   trace_requests)
-from repro.serve.engine import EngineConfig, ServeEngine, engine_config_for
-from repro.serve.metrics import RequestRecord, ServeMetrics, percentiles
+from repro.serve.engine import (ENGINE_ROLES, EngineConfig, ServeEngine,
+                                engine_config_for)
+from repro.serve.fleet import FleetRouter, ROUTING_POLICIES
+from repro.serve.frontend import AdmissionFront
+from repro.serve.kvstore import HandoffRecord, KVOwner
+from repro.serve.metrics import (RequestRecord, ServeMetrics, aggregate_fleet,
+                                 percentiles)
+from repro.serve.stepcore import StepCore
 from repro.serve.paging import (NULL_BLOCK, BlockAllocator, blocks_for_tokens,
                                 copy_block, gather_prefix_blocks,
                                 make_paged_pool, write_chunk_blocks)
@@ -18,17 +25,21 @@ from repro.serve.speculative import (DraftProposer, NGramProposer,
                                      rejection_verify)
 
 __all__ = [
-    "AdmissionQueue", "BlockAllocator", "DraftProposer", "EngineConfig",
-    "ExpertResidencyManager", "NGramProposer", "NULL_BLOCK",
+    "AdmissionFront", "AdmissionQueue", "BlockAllocator", "DraftProposer",
+    "ENGINE_ROLES", "EngineConfig",
+    "ExpertResidencyManager", "FleetRouter", "HandoffRecord", "KVOwner",
+    "NGramProposer", "NULL_BLOCK",
     "PREFETCH_POLICIES",
+    "ROUTING_POLICIES",
     "Request", "RequestRecord", "RequestState", "RequestStatus",
     "ResidencyCache", "ResidencyDecision",
-    "ServeEngine", "ServeMetrics", "TierCostModel", "VirtualClock",
-    "WallClock",
+    "ServeEngine", "ServeMetrics", "StepCore", "TierCostModel",
+    "VirtualClock", "WallClock",
+    "aggregate_fleet",
     "blocks_for_tokens", "copy_block", "engine_config_for",
     "gather_prefix_blocks", "greedy_verify", "load_trace",
-    "make_paged_pool", "make_proposer", "nucleus_mask",
+    "make_paged_pool", "make_proposer", "merge_requests", "nucleus_mask",
     "percentiles", "poisson_requests", "rejection_verify", "sample_np",
-    "sample_tokens", "trace_requests", "truncated_probs_np",
+    "sample_tokens", "split_seeds", "trace_requests", "truncated_probs_np",
     "write_chunk_blocks",
 ]

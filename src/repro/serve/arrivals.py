@@ -75,7 +75,7 @@ class VirtualClock:
 # ----------------------------------------------------------------------
 def poisson_requests(n: int, *, rate: float, vocab_size: int,
                      prompt_len: int, max_new_tokens: int,
-                     seed: int = 0,
+                     seed: int = 0, rid_base: int = 0,
                      prompt_len_range: Optional[Tuple[int, int]] = None,
                      shared_prefix_len: int = 0,
                      eos_id: Optional[int] = None) -> List[Request]:
@@ -87,6 +87,9 @@ def poisson_requests(n: int, *, rate: float, vocab_size: int,
     ``shared_prefix_len=k`` makes the first ``min(k, prompt_len)`` tokens
     of every prompt identical (one draw shared across the batch) — the
     system-prompt/few-shot-template regime prefix caching targets.
+    ``rid_base`` offsets the assigned rids so several sub-streams (one
+    per replica / prefix group, seeded via ``split_seeds``) can be merged
+    without rid collisions.
     """
     rng = np.random.default_rng(seed)
     prefix = rng.integers(0, vocab_size,
@@ -105,9 +108,34 @@ def poisson_requests(n: int, *, rate: float, vocab_size: int,
         k = min(len(prefix), plen)
         if k:
             toks[:k] = prefix[:k]
-        out.append(Request(rid=i, tokens=toks, max_new_tokens=max_new_tokens,
+        out.append(Request(rid=rid_base + i, tokens=toks,
+                           max_new_tokens=max_new_tokens,
                            arrival_time=t, eos_id=eos_id))
     return out
+
+
+def split_seeds(seed: int, n: int) -> List[int]:
+    """n statistically independent child seeds spawned from one root seed
+    (``numpy.random.SeedSequence.spawn``) — one per replica / sub-stream,
+    so a multi-replica fleet run is replayable from a single seed and no
+    two sub-streams share an underlying bit stream (unlike ``seed + i``
+    offsets, which can correlate)."""
+    return [int(ss.generate_state(1)[0])
+            for ss in np.random.SeedSequence(seed).spawn(n)]
+
+
+def merge_requests(*streams: Sequence[Request]) -> List[Request]:
+    """Merge per-replica/per-group sub-streams into one arrival-ordered
+    trace.  Stable on arrival-time ties (earlier stream first), so the
+    merged order is deterministic given deterministic sub-streams.  Rids
+    are left untouched — generate sub-streams with disjoint ``rid_base``
+    ranges."""
+    out = [r for s in streams for r in s]
+    rids = [r.rid for r in out]
+    if len(set(rids)) != len(rids):
+        raise ValueError("merged request streams have colliding rids; "
+                         "generate sub-streams with disjoint rid_base")
+    return sorted(out, key=lambda r: r.arrival_time)
 
 
 def trace_requests(records: Iterable[dict], *, vocab_size: int,
@@ -154,6 +182,11 @@ class AdmissionQueue:
 
     def __len__(self) -> int:
         return len(self._heap)
+
+    def queued_tokens(self) -> int:
+        """Total prompt tokens waiting in the queue (arrived or not) —
+        the fleet router's measure of committed-but-unserved work."""
+        return sum(r.prompt_len for _, _, r in self._heap)
 
     def next_arrival(self) -> Optional[float]:
         return self._heap[0][0] if self._heap else None

@@ -1,7 +1,21 @@
 """Continuous-batching serving engine.
 
-The engine owns a static-shape KV pool and drives jitted functions with
-fixed signatures:
+The engine is composed from three components (one file each):
+
+* ``serve/frontend.py`` — ``AdmissionFront``: the arrival queue, free-slot
+  pool, prefill pipeline, and preempted-recompute queue, plus the
+  admission loop;
+* ``serve/stepcore.py`` — ``StepCore``: the jitted prefill/decode/verify
+  drivers and their deterministic key streams;
+* ``serve/kvstore.py`` — ``KVOwner``: the physical KV pool (slab or
+  paged), block allocator + prefix index, prefill scratch, and the jitted
+  KV-movement primitives — including the prefill→decode *handoff*
+  (``HandoffRecord``) that serializes a finished prefill's block-chain
+  contents for a decode-role engine to import token-exactly.
+
+``ServeEngine`` keeps the scheduling state that ties them together (slot
+vectors, the decode batch, preemption, metrics) and drives jitted
+functions with fixed signatures:
 
 * ``model.prefill_chunk`` on a ``[1, prefill_chunk]`` scratch cache —
   newcomers' prompts are consumed chunk-by-chunk, interleaved with decode
@@ -37,9 +51,25 @@ Two pool layouts:
   cached-free list until allocation pressure evicts them (see
   ``paging.py`` and README "Prefix caching").
 
+Engine **roles** (``EngineConfig.role``; paged only for the split roles):
+
+* ``unified`` (default) — prefill and decode on one engine, as above.
+* ``prefill`` — runs admission + chunked prefill only.  When a request's
+  prefill finishes (first token sampled), instead of joining the decode
+  batch it is exported as a ``HandoffRecord`` (block-chain KV + committed
+  tokens + timestamps), its blocks are released (indexed prefixes stay
+  cached), and the record is queued for ``pop_handoffs()``.
+* ``decode`` — admits work only via ``import_handoff(record)``: the KV is
+  scattered into its own pool through the same jitted
+  ``write_chunk_blocks`` entry ordinary prefill uses, and the request
+  joins the decode batch exactly where the exporter left it.  Greedy
+  streams are token-identical to a unified engine serving the same
+  requests.  (A decode-role engine still prefills when it must: a
+  preempted request's recompute runs on the importing engine.)
+
 Because every array shape — including the block table — is fixed at engine
 construction, the jit caches hold exactly one entry each across admissions,
-slot recycling, block growth, preemption, and EOS —
+slot recycling, block growth, preemption, EOS, and role handoffs —
 ``report()["jit_entries"]`` asserts this is so.
 
 Requests enter through an ``AdmissionQueue`` (Poisson or trace-driven
@@ -70,20 +100,21 @@ from repro.configs.base import round_up
 from repro.core.prefetch import stage_expert_rows
 from repro.kernels.paged_attention.ops import largest_block_divisor
 from repro.models import attention as attention_dispatch
-from repro.serve.arrivals import AdmissionQueue, WallClock
+from repro.serve.arrivals import WallClock
+from repro.serve.frontend import AdmissionFront
+from repro.serve.kvstore import HandoffRecord, KVOwner
+from repro.serve.metrics import ServeMetrics
+from repro.serve.paging import NULL_BLOCK, blocks_for_tokens
 from repro.serve.rebalance import ExpertRebalancer
+from repro.serve.request import Request, RequestState, RequestStatus
 from repro.serve.residency import (PREFETCH_POLICIES, ExpertResidencyManager,
                                    TierCostModel)
-from repro.serve.metrics import ServeMetrics
-from repro.serve.paging import (NULL_BLOCK, BlockAllocator,
-                                blocks_for_tokens, copy_block,
-                                gather_prefix_blocks, write_chunk_blocks)
-from repro.serve.request import Request, RequestState, RequestStatus
-from repro.serve.sampling import sample_np, sample_tokens
+from repro.serve.sampling import sample_np
 from repro.serve.speculative import (greedy_verify, make_proposer,
                                      rejection_verify)
-from repro.serve.slots import (discover_batch_axes, discover_seq_axes,
-                               min_kv_capacity, write_slot)
+from repro.serve.stepcore import StepCore
+
+ENGINE_ROLES = ("unified", "prefill", "decode")
 
 
 @dataclass(frozen=True)
@@ -95,6 +126,11 @@ class EngineConfig:
     chunks_per_step: int = 1    # prefill chunks interleaved per engine step
     eos_id: Optional[int] = None
     skew_seed: int = 0          # synthetic router-skew + sampling key stream
+    # --- engine role (fleet disaggregation; see module docstring) ---
+    # "unified" serves prefill + decode; "prefill" exports finished
+    # prefills as HandoffRecords; "decode" imports them.  The split roles
+    # hand KV off through the block machinery, so they require paged.
+    role: str = "unified"
     # --- paged KV pool ---
     paged: bool = False
     kv_block_size: int = 16     # tokens per physical KV block
@@ -143,6 +179,13 @@ class EngineConfig:
     prefetch_policy: str = "predictive"
 
     def __post_init__(self):
+        if self.role not in ENGINE_ROLES:
+            raise ValueError(f"unknown engine role {self.role!r}; choose "
+                             f"one of {ENGINE_ROLES}")
+        if self.role != "unified" and not self.paged:
+            raise ValueError(
+                "prefill/decode engine roles hand KV off through the paged "
+                "block machinery; they require EngineConfig.paged=True")
         if self.prefix_sharing and not self.paged:
             raise ValueError("prefix_sharing requires the paged KV pool "
                              "(EngineConfig.paged=True)")
@@ -224,6 +267,7 @@ class ServeEngine:
         self.mesh = mesh
         self.clock = clock or WallClock()
         self.metrics = ServeMetrics()
+        self.role = ecfg.role
 
         self._skew = bool(cfg.is_moe and cfg.moe.router_skew > 0)
         self._sample = ecfg.temperature > 0
@@ -295,14 +339,11 @@ class ServeEngine:
             self._stage_fn = jax.jit(_stage_resident_weights)
         self._proposer = (make_proposer(ecfg.speculative_policy)
                           if self._spec else None)
-        self._base_key = jax.random.PRNGKey(ecfg.skew_seed)
-        self._pf_key = jax.random.fold_in(self._base_key, 0)
-        self._dec_key = jax.random.fold_in(self._base_key, 1)
-        self._samp_rng = (np.random.default_rng(ecfg.skew_seed + 101)
-                          if self._sample else None)
 
-        self._seq_axes = discover_seq_axes(model.init_cache,
-                                           ecfg.max_seq_len)
+        # --- jitted step drivers + key streams (serve/stepcore.py) ---
+        self.core = StepCore(model, ecfg, skew=self._skew,
+                             moe_policy=self._moe_policy,
+                             layer_diags=self._residency is not None)
 
         self._paged = ecfg.paged
         self._sharing = ecfg.prefix_sharing
@@ -314,11 +355,11 @@ class ServeEngine:
             # prefill writes whole padded chunks, so a slot's chain must
             # cover the chunk-rounded logical length (one extra chunk with
             # prefix sharing — see paged_pool_len)
-            self._s_pad = paged_pool_len(ecfg.max_seq_len, C, self._sharing,
-                                         ecfg.speculative_k)
-            self.blocks_per_slot = blocks_for_tokens(self._s_pad, bs)
+            s_pad = paged_pool_len(ecfg.max_seq_len, C, self._sharing,
+                                   ecfg.speculative_k)
+            bps = blocks_for_tokens(s_pad, bs)
             w = cfg.sliding_window or 0
-            if 0 < w < self.blocks_per_slot * bs:
+            if 0 < w < bps * bs:
                 # paged decode attends window-free over the logical range;
                 # a window shorter than the block-rounded pool length
                 # (the attention layer's L_max) could bind and be silently
@@ -328,100 +369,32 @@ class ServeEngine:
                     f"paged KV serves window-free attention, but "
                     f"{cfg.name} has sliding_window={w} < the "
                     f"block-rounded pool length "
-                    f"{self.blocks_per_slot * bs}: windowed layers would "
+                    f"{bps * bs}: windowed layers would "
                     f"lose their window. Shrink max_seq_len/prefill_chunk/"
                     f"kv_block_size so the pool fits the window, or use "
                     f"the slab ring-buffer pool")
-            usable = ecfg.num_kv_blocks or B * self.blocks_per_slot
-            if usable < self.blocks_per_slot:
-                raise ValueError(
-                    f"num_kv_blocks={usable} cannot hold even one "
-                    f"worst-case request ({self.blocks_per_slot} blocks)")
-            self._alloc = BlockAllocator(usable + 1, bs,   # +1: null block
-                                         prefix_cache=self._sharing)
-            self.block_table = np.full((B, self.blocks_per_slot),
-                                       NULL_BLOCK, np.int32)
-            self.kv_capacity = self._s_pad
-            with self._ctx():
-                # init_paged_cache validates pageability at s_pad (rejects
-                # window-clamped ring buffers and SSM state)
-                self.pool = model.init_paged_cache(
-                    self._alloc.num_blocks, bs, self._s_pad,
-                    seq_axes=self._seq_axes)
-                self._scratch = model.init_cache(1, self._s_pad)
-            self._write_fn = jax.jit(
-                lambda pool, scratch, bt_row, start: write_chunk_blocks(
-                    pool, scratch, bt_row, start, chunk=C, block_size=bs,
-                    seq_axes=self._seq_axes))
-            if self._spec:
-                # speculative verify IS the decode step: one [B, k+1]
-                # multi-token forward returning logits at every window
-                # position; acceptance/sampling run host-side
-                self._decode_fn = jax.jit(
-                    lambda p, t, c, pos, bt, k, a, rep, res:
-                        self._verify_core(p, t, c, pos, k, a, bt, rep, res))
-            else:
-                self._decode_fn = jax.jit(
-                    lambda p, t, c, pos, bt, k, a, rep, res:
-                        self._decode_core(p, t, c, pos, k, a, bt, rep, res))
-            if self._sharing:
-                self._gather_fn = jax.jit(
-                    lambda pool, scratch, bt_row, n: gather_prefix_blocks(
-                        pool, scratch, bt_row, n, s_pad=self._s_pad,
-                        block_size=bs, seq_axes=self._seq_axes))
-                self._copy_fn = jax.jit(
-                    lambda pool, src, dst: copy_block(
-                        pool, src, dst, block_size=bs,
-                        seq_axes=self._seq_axes))
         else:
-            self._alloc = None
-            self.block_table = None
-            self._batch_axes = discover_batch_axes(model.init_cache,
-                                                   ecfg.max_seq_len)
-            self.kv_capacity = min_kv_capacity(
-                model.init_cache, ecfg.max_seq_len, self._seq_axes)
-            with self._ctx():
-                self.pool = model.init_cache(B, ecfg.max_seq_len)
-                self._scratch = model.init_cache(1, ecfg.max_seq_len)
-            self._write_fn = jax.jit(
-                lambda pool, scratch, slot: write_slot(pool, scratch, slot,
-                                                       self._batch_axes))
-            self._decode_fn = jax.jit(
-                lambda p, t, c, pos, k, a, rep, res: self._decode_core(
-                    p, t, c, pos, k, a, None, rep, res))
-        # replica ids ride along as a trailing traced arg so between-window
-        # weight swaps never re-trace (None = no replica slots: an empty
-        # pytree, same trace either way).  With fused_paged_attention the
-        # prefill chunk ALSO runs the q-tiled Pallas kernel: the slab
-        # scratch is viewed as contiguous per-row blocks inside
-        # attention_block's continue_prefill branch (strict — an
-        # inapplicable fused path raises at warmup instead of silently
-        # gathering); fused_moe_gmm routes the chunk's Bc * C expert
-        # tokens through the grouped-GEMM kernel.
-        pf_fused_attn = True if ecfg.fused_paged_attention else None
-        pf_fused_moe = True if ecfg.fused_moe_gmm else None
-        self._prefill_fn = jax.jit(
-            lambda p, t, c, pos, last, key, rep: model.prefill_chunk(
-                p, t, c, pos, last, key, moe_replica_ids=rep,
-                fused_attention=pf_fused_attn, fused_moe=pf_fused_moe))
+            s_pad = ecfg.max_seq_len
+        # --- KV pool + allocator + movement (serve/kvstore.py) ---
+        self.kv = KVOwner(model, ecfg, s_pad=s_pad, ctx=self._ctx)
+        # --- admission/scheduling front (serve/frontend.py) ---
+        self.front = AdmissionFront(B)
 
         self.pos = np.zeros((B,), np.int32)      # per-slot sequence length
         self.tok = np.zeros((B,), np.int32)      # per-slot last token
         self.active = np.zeros((B,), bool)       # slot in the decode batch
-        self.state_by_slot: List[Optional[RequestState]] = [None] * B
-        self.free_slots: deque = deque(range(B))
-        self.queue = AdmissionQueue()
-        self._pf: Optional[RequestState] = None      # prefill in flight
-        self._pf_queue: deque = deque()              # slot reserved, waiting
-        self._resume: deque = deque()                # preempted, to recompute
-        self.slot_history: List[Tuple[int, int]] = []  # (rid, slot) admits
         self._step_idx = 0
         self._chunk_idx = 0
-        self._admit_seq = 0
         # allocator lifetime counters at window start (report() deltas)
         self._evict0 = 0
         self._cow0 = 0
         self._warm_counts: Optional[Dict[str, int]] = None
+        # --- prefill→decode handoff state (split roles) ---
+        self._handoffs_out: deque = deque()      # exported, awaiting pickup
+        self.handoffs_exported = 0
+        self.handoffs_imported = 0
+        self.handoff_bytes_out = 0
+        self.handoff_bytes_in = 0
         # --- per-phase attention byte model (metrics.record_phase) ---
         # bytes one KV token costs to read across the stack (K + V, every
         # layer), and the slab block size the fused prefill path derives —
@@ -431,7 +404,7 @@ class ServeEngine:
         self._kv_token_bytes = (2 * cfg.num_layers
                                 * (cfg.num_kv_heads or cfg.num_heads)
                                 * cfg.resolved_head_dim * kvb)
-        self._scratch_len = self._s_pad if self._paged else ecfg.max_seq_len
+        self._scratch_len = self.kv.s_pad
         self._slab_bs = largest_block_divisor(self._scratch_len)
         # attention dispatch-log snapshot taken right after warmup's traces;
         # when warmup() is skipped (tests drive run() directly) report()
@@ -441,6 +414,127 @@ class ServeEngine:
         attention_dispatch.reset_dispatch_log()
 
     # ------------------------------------------------------------------
+    # component delegation — the pre-refactor attribute surface.  Tests,
+    # benchmarks, and the fleet router address engine state through these
+    # names; they forward to the owning component.
+    # ------------------------------------------------------------------
+    @property
+    def _alloc(self):
+        return self.kv.alloc
+
+    @property
+    def pool(self):
+        return self.kv.pool
+
+    @pool.setter
+    def pool(self, v):
+        self.kv.pool = v
+
+    @property
+    def _scratch(self):
+        return self.kv.scratch
+
+    @_scratch.setter
+    def _scratch(self, v):
+        self.kv.scratch = v
+
+    @property
+    def block_table(self):
+        return self.kv.block_table
+
+    @property
+    def blocks_per_slot(self):
+        return self.kv.blocks_per_slot
+
+    @property
+    def kv_capacity(self):
+        return self.kv.kv_capacity
+
+    @property
+    def _s_pad(self):
+        return self.kv.s_pad
+
+    @property
+    def _seq_axes(self):
+        return self.kv.seq_axes
+
+    @property
+    def _write_fn(self):
+        return self.kv.write_fn
+
+    @property
+    def _gather_fn(self):
+        return self.kv.gather_fn
+
+    @property
+    def _copy_fn(self):
+        return self.kv.copy_fn
+
+    @property
+    def _prefill_fn(self):
+        return self.core.prefill_fn
+
+    @property
+    def _decode_fn(self):
+        return self.core.decode_fn
+
+    @property
+    def _base_key(self):
+        return self.core.base_key
+
+    @property
+    def _pf_key(self):
+        return self.core.pf_key
+
+    @property
+    def _dec_key(self):
+        return self.core.dec_key
+
+    @property
+    def _samp_rng(self):
+        return self.core.samp_rng
+
+    @property
+    def queue(self):
+        return self.front.queue
+
+    @property
+    def free_slots(self):
+        return self.front.free_slots
+
+    @property
+    def state_by_slot(self):
+        return self.front.state_by_slot
+
+    @property
+    def slot_history(self):
+        return self.front.slot_history
+
+    @property
+    def _pf(self):
+        return self.front.pf
+
+    @_pf.setter
+    def _pf(self, v):
+        self.front.pf = v
+
+    @property
+    def _pf_queue(self):
+        return self.front.pf_queue
+
+    @property
+    def _resume(self):
+        return self.front.resume
+
+    @property
+    def _admit_seq(self):
+        return self.front.admit_seq
+
+    @_admit_seq.setter
+    def _admit_seq(self, v):
+        self.front.admit_seq = v
+
+    # ------------------------------------------------------------------
     def _ctx(self):
         return self.mesh if self.mesh is not None else contextlib.nullcontext()
 
@@ -448,58 +542,12 @@ class ServeEngine:
         """Per-request EOS override, falling back to the engine default."""
         return req.eos_id if req.eos_id is not None else self.ecfg.eos_id
 
-    def _decode_core(self, params, tok, pool, pos, key, active, bt, rep,
-                     res=None):
-        skew_key = samp_key = None
-        if self._skew and self._sample:
-            skew_key = jax.random.fold_in(key, 0)
-            samp_key = jax.random.fold_in(key, 1)
-        elif self._skew:
-            skew_key = key
-        elif self._sample:
-            samp_key = key
-        kw: Dict[str, Any] = {}
-        if bt is not None:
-            kw = dict(block_table=bt, block_size=self.ecfg.kv_block_size)
-            if self.ecfg.fused_paged_attention:
-                kw["fused_attention"] = True
-        if self.ecfg.fused_moe_gmm:
-            kw["fused_moe"] = True
-        logits, pool, _, diags = self.model.decode_step(
-            params, tok, pool, pos, skew_key=skew_key, active_mask=active,
-            moe_policy=self._moe_policy, moe_replica_ids=rep,
-            moe_residency_ids=res,
-            moe_layer_diags=self._residency is not None, **kw)
-        nxt = sample_tokens(logits, samp_key,
-                            temperature=self.ecfg.temperature,
-                            top_k=self.ecfg.top_k, top_p=self.ecfg.top_p)
-        return nxt, pool, diags
-
-    def _verify_core(self, params, toks, pool, pos, key, active, bt, rep,
-                     res=None):
-        """Speculative verify step: ``toks`` [B, k+1] (window position 0 =
-        the committed last token, 1..k = drafts) -> logits [B, k+1, V] at
-        every window position.  No in-jit sampling — greedy acceptance /
-        rejection sampling run host-side on the returned logits (the key
-        feeds router skew only, folded exactly like ``_decode_core``)."""
-        skew_key = None
-        if self._skew:
-            skew_key = jax.random.fold_in(key, 0) if self._sample else key
-        kw: Dict[str, Any] = dict(block_table=bt,
-                                  block_size=self.ecfg.kv_block_size)
-        if self.ecfg.fused_paged_attention:
-            kw["fused_attention"] = True
-        if self.ecfg.fused_moe_gmm:
-            kw["fused_moe"] = True
-        logits, pool, _, diags = self.model.decode_step(
-            params, toks, pool, pos, skew_key=skew_key, active_mask=active,
-            moe_policy=self._moe_policy, moe_replica_ids=rep,
-            moe_residency_ids=res,
-            moe_layer_diags=self._residency is not None, **kw)
-        return logits, pool, diags
-
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
+        if self.role == "decode":
+            raise ValueError(
+                "decode-role engine takes work via import_handoff(), not "
+                "submit(); route arrivals to a prefill or unified engine")
         L, C = req.prompt_len, self.ecfg.prefill_chunk
         if round_up(L, C) > self.kv_capacity:
             raise ValueError(
@@ -520,46 +568,20 @@ class ServeEngine:
         """Admitted work whose timestamps already live on the current clock
         (queued-but-unadmitted requests carry none — their arrival_time is
         relative to the measurement window, not the clock origin).
-        Preempted requests hold timestamps too."""
-        return bool(self._pf is not None or self._pf_queue or self._resume
-                    or self.active.any())
+        Preempted requests and exported-but-unclaimed handoffs hold
+        timestamps too."""
+        return self.front.in_flight(bool(self.active.any())) \
+            or bool(self._handoffs_out)
 
     # ------------------------------------------------------------------
     # admission (block-aware in paged mode; preempted requests first)
     # ------------------------------------------------------------------
     def _share_plan(self, tokens, resumed: bool) -> Tuple[int, List[int],
                                                           int, bool]:
-        """Admission plan for a (re)prefill over ``tokens``:
-        ``(start_pf, shared_blocks, n_fresh, cow_last)``.
-
-        ``shared_blocks`` is the longest indexed prefix at block
-        granularity (empty without prefix sharing) and ``start_pf`` the
-        offset prefill resumes from — normally the end of the shared
-        prefix.  On a *full*-sequence hit a fresh request still needs the
-        last position's logits, so it restarts at ``len - 1``; that write
-        lands inside the last shared block, which must be CoW'd first
-        (``cow_last``).  A resumed request needs no logits (its pending
-        last token is already committed), so a full hit skips prefill
-        entirely.  ``n_fresh`` counts the fresh tail blocks covering the
-        chunk-padded prefill writes."""
-        C, bs = self.ecfg.prefill_chunk, self.ecfg.kv_block_size
-        L = len(tokens)
-        shared = self._alloc.match_prefix(tokens) if self._sharing else []
-        P = len(shared) * bs
-        cow_last = False
-        if P >= L:                         # full hit (only when L % bs == 0)
-            start = L if resumed else L - 1
-            cow_last = not resumed
-        else:
-            start = P
-        cover = start + (round_up(L - start, C) if L > start else 0)
-        n_fresh = max(blocks_for_tokens(cover, bs), len(shared)) \
-            - len(shared)
-        return start, shared, n_fresh, cow_last
+        return self.kv.share_plan(tokens, resumed)
 
     def _can_admit(self, plan) -> bool:
-        start, shared, n_fresh, cow_last = plan
-        return self._alloc.can_allocate(n_fresh + int(cow_last), shared)
+        return self.kv.can_admit(plan)
 
     def _place(self, st: RequestState, now: float, plan=None) -> None:
         slot = self.free_slots.popleft()
@@ -603,10 +625,7 @@ class ServeEngine:
     def _bt_row(self, st: RequestState) -> np.ndarray:
         """This request's block-table row, built from its live chain (the
         engine-visible table row may still be parked on the null block)."""
-        row = np.full((self.blocks_per_slot,), NULL_BLOCK, np.int32)
-        chain = self._alloc.chain(st.req.rid)
-        row[:len(chain)] = chain
-        return row
+        return self.kv.bt_row(st.req.rid)
 
     def _activate(self, st: RequestState, pos: int, tok: int) -> None:
         """Move a finished prefill into the decode batch."""
@@ -619,28 +638,8 @@ class ServeEngine:
             self.block_table[s] = self._bt_row(st)
 
     def _admit(self, now: float) -> None:
-        while self.free_slots:
-            if self._resume:
-                st = self._resume[0]
-                plan = None
-                if self._paged:
-                    plan = self._share_plan(st.prefill_tokens, st.resumed)
-                    if not self._can_admit(plan):
-                        return
-                self._resume.popleft()
-                self._place(st, now, plan)
-                continue
-            req = self.queue.peek_ready(now)
-            if req is None:
-                return
-            plan = None
-            if self._paged:
-                plan = self._share_plan(req.tokens, False)
-                if not self._can_admit(plan):
-                    return
-            self.queue.pop_ready(now)
-            self._place(RequestState(req=req, slot=-1, admitted_time=now),
-                        now, plan)
+        self.front.admit(now, paged=self._paged, plan_fn=self._share_plan,
+                         can_admit_fn=self._can_admit, place_fn=self._place)
 
     # ------------------------------------------------------------------
     # preemption (paged): reclaim the youngest holder's blocks, recompute
@@ -777,9 +776,7 @@ class ServeEngine:
 
     # ------------------------------------------------------------------
     def _next_key(self, stream_key, idx: int):
-        if not (self._skew or self._sample):
-            return None
-        return jax.random.fold_in(stream_key, idx)
+        return self.core.next_key(stream_key, idx)
 
     def _prefill_work(self, now: float) -> bool:
         did = False
@@ -860,6 +857,11 @@ class ServeEngine:
                 if (eos is not None and first == eos) \
                         or st.n_generated >= st.req.max_new_tokens:
                     self._finish(st, now)
+                elif self.role == "prefill":
+                    # prefill role: the request leaves this engine here —
+                    # the scratch still holds its full committed K/V, so
+                    # export before the next chunk overwrites it
+                    self._export_handoff(st)
                 else:
                     self._activate(st, L, first)
                 self._pf = None
@@ -1009,6 +1011,130 @@ class ServeEngine:
                 self.tok[s] = st.output[-1]
         self.metrics.record_phase("verify", total_commit, dt, verify_bytes)
         return True
+
+    # ------------------------------------------------------------------
+    # prefill→decode handoff (split engine roles; serve/kvstore.py)
+    # ------------------------------------------------------------------
+    def _export_handoff(self, st: RequestState) -> None:
+        """Package a finished prefill as a ``HandoffRecord`` and release
+        its slot + blocks.  The scratch cache still holds the request's
+        full committed K/V (gathered cached prefix included), so the
+        export is a pure host-side slice; indexed prefix blocks stay on
+        the cached-free list, so the prefill side's prefix cache keeps
+        serving later arrivals."""
+        C = self.ecfg.prefill_chunk
+        pad = round_up(st.prefill_len, C)
+        rec = HandoffRecord(
+            rid=st.req.rid, prompt_tokens=st.req.tokens.copy(),
+            output=list(st.output), pos=st.prefill_len, pad_len=pad,
+            prefill_chunk=C, max_new_tokens=st.req.max_new_tokens,
+            eos_id=st.req.eos_id, kv=self.kv.export_kv(pad),
+            cached_prefix_tokens=int(st.cached_prefix_tokens or 0),
+            arrival_time=st.req.arrival_time,
+            admitted_time=st.admitted_time,
+            first_token_time=st.first_token_time)
+        self._handoffs_out.append(rec)
+        self.handoffs_exported += 1
+        self.handoff_bytes_out += rec.nbytes
+        st.status = RequestStatus.HANDED_OFF
+        s = st.slot
+        self.state_by_slot[s] = None
+        self.free_slots.append(s)
+        self._alloc.release(st.req.rid)
+        self.block_table[s, :] = NULL_BLOCK
+
+    def pop_handoffs(self) -> List[HandoffRecord]:
+        """Drain the exported-handoff queue (prefill role; the fleet
+        router moves these to a decode-role engine)."""
+        out = list(self._handoffs_out)
+        self._handoffs_out.clear()
+        return out
+
+    def import_handoff(self, rec: HandoffRecord) -> bool:
+        """Adopt a handed-off request: allocate a slot + block chain,
+        scatter the record's KV into this engine's pool, and join the
+        decode batch at the exporter's committed position.  Returns False
+        (record untouched, retry later) when no slot or not enough blocks
+        are free right now; raises when the record can never fit this
+        engine's shapes."""
+        if not self._paged:
+            raise RuntimeError("import_handoff needs the paged KV pool")
+        C, bs = self.ecfg.prefill_chunk, self.ecfg.kv_block_size
+        if rec.prefill_chunk != C:
+            raise ValueError(
+                f"handoff was prefilled with chunk {rec.prefill_chunk}, "
+                f"this engine uses {C}; the import replays the exporter's "
+                f"chunk-aligned scatters, so the two must match")
+        L = len(rec.prompt_tokens)
+        if L + rec.max_new_tokens > self.ecfg.max_seq_len:
+            raise ValueError(
+                f"handoff {rec.rid}: prompt {L} + max_new "
+                f"{rec.max_new_tokens} exceeds max_seq_len "
+                f"{self.ecfg.max_seq_len}")
+        if rec.pad_len > self.kv_capacity:
+            raise ValueError(
+                f"handoff {rec.rid}: padded prefill {rec.pad_len} exceeds "
+                f"the per-layer KV capacity {self.kv_capacity}")
+        if not self.free_slots:
+            return False
+        n_blocks = blocks_for_tokens(rec.pad_len, bs)
+        if not self._alloc.can_allocate(n_blocks, []):
+            return False
+        req = Request(rid=rec.rid, tokens=rec.prompt_tokens,
+                      max_new_tokens=rec.max_new_tokens,
+                      arrival_time=rec.arrival_time, eos_id=rec.eos_id)
+        st = RequestState(req=req, slot=-1,
+                          admitted_time=rec.admitted_time,
+                          first_token_time=rec.first_token_time,
+                          output=list(rec.output), prefill_pos=rec.pos,
+                          cached_prefix_tokens=rec.cached_prefix_tokens)
+        slot = self.free_slots.popleft()
+        st.slot = slot
+        st.admit_seq = self._admit_seq
+        self._admit_seq += 1
+        self.state_by_slot[slot] = st
+        self.slot_history.append((req.rid, slot))
+        chain = self._alloc.alloc_chain(req.rid, n_blocks)
+        assert chain is not None          # gated by can_allocate above
+        self.kv.import_kv(rec.kv, rec.pad_len, self.kv.bt_row(req.rid))
+        if self._sharing:
+            # the imported K/V is bit-identical to a local prefill's, so
+            # its full blocks are index-worthy here too
+            self._alloc.commit_prefix(req.rid,
+                                      st.prefill_tokens[:rec.pos])
+        self.handoffs_imported += 1
+        self.handoff_bytes_in += rec.nbytes
+        self._activate(st, rec.pos, st.output[-1])
+        return True
+
+    # ------------------------------------------------------------------
+    # fleet routing probes (serve/fleet.py)
+    # ------------------------------------------------------------------
+    def load_stats(self) -> Dict[str, Any]:
+        """Cheap scheduler-state snapshot the fleet router scores replicas
+        by — no device sync, no allocator mutation."""
+        if self._paged:
+            bs = self.ecfg.kv_block_size
+            kv_tokens = self._alloc.blocks_in_use * bs
+            kv_util = (self._alloc.blocks_in_use
+                       / max(self._alloc.usable_blocks, 1))
+        else:
+            kv_tokens = int(self.pos.sum())
+            kv_util = float(self.active.sum()) / self.ecfg.max_slots
+        return {
+            "queued_tokens": self.front.queued_tokens(),
+            "kv_tokens": int(kv_tokens),
+            "kv_utilization": float(kv_util),
+            "active_slots": int(self.active.sum()),
+            "free_slots": len(self.free_slots),
+            "pending_handoffs": len(self._handoffs_out),
+        }
+
+    def probe_prefix(self, tokens) -> int:
+        """Longest cached-prefix match for ``tokens`` in this engine's
+        prefix index, in tokens (0 without prefix sharing).  Pure lookup —
+        probing a replica that is not chosen never perturbs its LRU."""
+        return self.kv.probe_prefix(tokens)
 
     # ------------------------------------------------------------------
     # between-window hot-expert replication (serve/rebalance.py)
@@ -1193,9 +1319,18 @@ class ServeEngine:
         # once per layer, so this is the engine's kernel-coverage map
         self._attn_dispatch = attention_dispatch.dispatch_log()
 
-    def step(self) -> None:
-        """One scheduler tick: admit, prefill chunk(s), decode the batch."""
-        now = self.clock.now()
+    def step(self, now: Optional[float] = None, *,
+             wait_when_idle: bool = True) -> bool:
+        """One scheduler tick: admit, prefill chunk(s), decode the batch.
+
+        ``now`` lets a fleet router drive several replicas off one shared
+        clock reading per tick (each engine-side ``clock.now()`` call
+        advances a VirtualClock, so per-replica reads would skew time);
+        ``wait_when_idle=False`` defers the idle wait to the router, which
+        knows every replica's next arrival.  Returns whether any prefill
+        or decode work ran."""
+        if now is None:
+            now = self.clock.now()
         self._admit(now)
         did = self._prefill_work(now)
         did = self._decode_work(now) or did
@@ -1205,10 +1340,11 @@ class ServeEngine:
                 and self._step_idx % self.ecfg.rebalance_interval == 0 \
                 and self._rebalancer.steps_observed > 0:
             self._rebalance_now()
-        if not did:
+        if not did and wait_when_idle:
             nxt = self.queue.next_arrival()
             if nxt is not None:
                 self.clock.wait(min(max(nxt - now, 0.0), 0.01))
+        return did
 
     def run(self, requests: Sequence[Request] = (), *,
             max_steps: int = 1_000_000) -> Dict[str, Any]:
@@ -1261,6 +1397,7 @@ class ServeEngine:
             "kv_capacity": self.kv_capacity,
             "steps": self._step_idx,
             "paged": self._paged,
+            "role": self.role,
         }
         if self._paged:
             rep["engine"]["kv_block_size"] = self.ecfg.kv_block_size
@@ -1273,6 +1410,15 @@ class ServeEngine:
             if self._spec:
                 rep["engine"]["speculative_policy"] = \
                     self.ecfg.speculative_policy
+        if self.role != "unified" or self.handoffs_exported \
+                or self.handoffs_imported:
+            rep["engine"]["handoffs"] = {
+                "exported": self.handoffs_exported,
+                "imported": self.handoffs_imported,
+                "bytes_out": self.handoff_bytes_out,
+                "bytes_in": self.handoff_bytes_in,
+                "pending": len(self._handoffs_out),
+            }
         if self.cfg.is_moe:
             rep["engine"]["moe_policy"] = \
                 self._moe_policy or self.cfg.moe.policy
@@ -1313,15 +1459,7 @@ class ServeEngine:
         return rep
 
     def _jit_counts(self) -> Dict[str, int]:
-        counts = {
-            "prefill_chunk": self._prefill_fn._cache_size(),
-            "decode": self._decode_fn._cache_size(),
-            ("write_blocks" if self._paged else "write_slot"):
-                self._write_fn._cache_size(),
-        }
-        if self._paged and self._sharing:
-            counts["gather_prefix"] = self._gather_fn._cache_size()
-            counts["copy_block"] = self._copy_fn._cache_size()
+        counts = {**self.core.jit_counts(), **self.kv.jit_counts()}
         if self._rebalancer is not None:
             counts["replica_swap"] = self._swap_fn._cache_size()
         if self._residency is not None:
@@ -1415,7 +1553,8 @@ def _swap_replica_weights(params, rows):
 def engine_config_for(cfg, *, max_slots: int, prompt_len: int,
                       max_new_tokens: int, prefill_chunk: int = 0,
                       eos_id: Optional[int] = None,
-                      skew_seed: int = 0, paged: bool = False,
+                      skew_seed: int = 0, role: str = "unified",
+                      paged: bool = False,
                       kv_block_size: int = 16, num_kv_blocks: int = 0,
                       prefix_sharing: bool = False,
                       fused_paged_attention: bool = False,
@@ -1464,6 +1603,7 @@ def engine_config_for(cfg, *, max_slots: int, prompt_len: int,
         max_slots=max_slots,
         max_seq_len=max_seq,
         prefill_chunk=chunk, eos_id=eos_id, skew_seed=skew_seed,
+        role=role,
         paged=paged, kv_block_size=kv_block_size,
         num_kv_blocks=num_kv_blocks, prefix_sharing=prefix_sharing,
         fused_paged_attention=fused_paged_attention,

@@ -320,3 +320,39 @@ class ServeMetrics:
                     sec[f"{drop}_total"] = float(np.sum(vals))
             out[phase] = sec
         return out
+
+
+# ----------------------------------------------------------------------
+def aggregate_fleet(reports: List[Dict[str, Any]]) -> Dict[str, Any]:
+    """Pool several engine ``report()`` dicts into fleet-level latency
+    aggregates.  Works on the JSON-safe per-request rows each report
+    carries, so it composes across replicas regardless of role: in a
+    disaggregated fleet the decode engines own the completion records
+    (handoffs carry the true arrival/TTFT timestamps across), so summing
+    per-replica rows double-counts nothing.  All replicas must share one
+    clock — the timestamps are only comparable on a common timebase."""
+    rows = [r for rep in reports for r in rep.get("requests", ())]
+    total_new = sum(r["n_generated"] for r in rows)
+    finishes = [r["arrival_time"] + r["e2e"] for r in rows]
+    span = (max(finishes) - min(r["arrival_time"] for r in rows)
+            if rows else 0.0)
+    agg: Dict[str, Any] = {
+        "n_requests": len(rows),
+        "total_new_tokens": total_new,
+        "ttft": percentiles(r["ttft"] for r in rows),
+        "tpot": percentiles(r["tpot"] for r in rows
+                            if r["n_generated"] > 1),
+        "e2e": percentiles(r["e2e"] for r in rows),
+        "queue_delay": percentiles(r["queue_delay"] for r in rows),
+        "throughput_tok_s": total_new / span if span > 0
+        else float("nan"),
+        # goodput: finished requests per second of fleet wall time — the
+        # serving papers' service-level throughput
+        "goodput_req_s": len(rows) / span if span > 0 else float("nan"),
+        "preemptions": sum(rep.get("preemptions", 0) for rep in reports),
+        "prefix_hit_rate": (
+            sum(r["cached_prefix_tokens"] for r in rows)
+            / sum(r["prompt_len"] for r in rows)
+            if sum(r["prompt_len"] for r in rows) else None),
+    }
+    return _json_safe(agg)

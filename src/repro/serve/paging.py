@@ -248,11 +248,14 @@ class BlockAllocator:
         bs = self.block_size
         return (parent, tuple(int(t) for t in tokens[j * bs:(j + 1) * bs]))
 
-    def match_prefix(self, tokens) -> List[int]:
+    def match_prefix(self, tokens, touch: bool = True) -> List[int]:
         """Physical blocks of the longest indexed prefix of ``tokens``, at
         block granularity.  Pure lookup — no refcounts change (map the
         result via ``alloc_chain(shared=...)``); matched cached blocks are
-        touched to the LRU's MRU end."""
+        touched to the LRU's MRU end.  ``touch=False`` skips the LRU
+        touch: a fleet router probing every replica's index for prefix
+        affinity must not perturb the eviction order of replicas it does
+        not pick."""
         if not self.prefix_cache:
             return []
         out: List[int] = []
@@ -265,9 +268,10 @@ class BlockAllocator:
             parent = node.nid
         # LRU touch tail-to-root so a prefix root always outlives its
         # descendants (evicting a root drops the whole subtree's entries)
-        for blk in reversed(out):
-            if blk in self._cached:
-                self._cached.move_to_end(blk)
+        if touch:
+            for blk in reversed(out):
+                if blk in self._cached:
+                    self._cached.move_to_end(blk)
         return out
 
     def commit_prefix(self, rid: int, tokens) -> int:

@@ -1,0 +1,346 @@
+"""Fleet router + engine-role tests on tiny CPU models.
+
+Covers the ISSUE-mandated invariants: router scoring (load,
+prefix-affinity, tie-breaking, round-robin, explicit assignment); a
+1-replica fleet is bit-identical to the bare engine (tokens AND
+timestamps — the shared-clock lockstep drive makes the reduction exact);
+prefill→decode disaggregation is token-identical to a unified engine
+(plain, prefix-sharing, and speculative-decode variants); fixed routing
+assignments make token streams invariant across routing policies; no
+replica recompiles after warmup; and the HandoffRecord wire form
+round-trips bfloat16 KV exactly.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.models.model import build_model
+from repro.serve import (FleetRouter, HandoffRecord, Request, ServeEngine,
+                         VirtualClock, engine_config_for, merge_requests,
+                         poisson_requests, split_seeds)
+from repro.serve.arrivals import AdmissionQueue
+
+from _serve_helpers import captured_run
+
+TINY = ModelConfig(name="tiny", family="dense", num_layers=2, d_model=32,
+                   num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=64,
+                   head_dim=16, dtype="float32")
+
+
+def _model(cfg, batch, seq_len):
+    m = build_model(cfg, ParallelConfig(attn_chunk=8, loss_chunk=8),
+                    batch=batch, seq_len=seq_len)
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+def _engine(cfg, model, params, clock, *, slots, prompt_len, max_new,
+            chunk, **kw):
+    ecfg = engine_config_for(cfg, max_slots=slots, prompt_len=prompt_len,
+                             max_new_tokens=max_new, prefill_chunk=chunk,
+                             **kw)
+    return ServeEngine(model, params, ecfg, clock=clock)
+
+
+def _captured_fleet_run(router, reqs):
+    """Capture every replica's emitted token streams (hooked at
+    ``_finish`` like tests/_serve_helpers.captured_run)."""
+    outputs = {}
+    for eng in router.engines:
+        orig = eng._finish
+
+        def capture(st, now, _orig=orig):
+            outputs[st.req.rid] = list(st.output)
+            _orig(st, now)
+
+        eng._finish = capture
+    rep = router.run(reqs)
+    return outputs, rep
+
+
+# ----------------------------------------------------------------------
+# router units (stub engines: no devices, no jit)
+# ----------------------------------------------------------------------
+class _StubEngine:
+    def __init__(self, clock, *, role="unified", load=0, prefix=0):
+        self.role = role
+        self.clock = clock
+        self._load = load
+        self._prefix = prefix
+        self.queue = AdmissionQueue()
+        self.submitted = []
+
+    def load_stats(self):
+        return {"queued_tokens": self._load, "kv_tokens": 0,
+                "kv_utilization": 0.0, "active_slots": 0, "free_slots": 4,
+                "pending_handoffs": 0}
+
+    def probe_prefix(self, tokens):
+        return self._prefix
+
+    def submit(self, req):
+        self.submitted.append(req)
+
+
+def _req(rid, n=8):
+    return Request(rid=rid, tokens=np.arange(n, dtype=np.int32) % 7,
+                   max_new_tokens=4)
+
+
+def test_route_load_picks_least_loaded():
+    clock = VirtualClock()
+    engines = [_StubEngine(clock, load=50), _StubEngine(clock, load=10),
+               _StubEngine(clock, load=30)]
+    fleet = FleetRouter(engines, policy="load")
+    assert fleet._route(_req(0)) == 1
+
+
+def test_route_ties_break_to_lowest_index():
+    clock = VirtualClock()
+    engines = [_StubEngine(clock, load=10), _StubEngine(clock, load=10)]
+    fleet = FleetRouter(engines, policy="load")
+    assert fleet._route(_req(0)) == 0
+    # prefix_affinity with equal matches ties the same way
+    fleet2 = FleetRouter([_StubEngine(clock, load=5, prefix=8),
+                          _StubEngine(clock, load=5, prefix=8)],
+                         policy="prefix_affinity")
+    assert fleet2._route(_req(1)) == 0
+
+
+def test_route_prefix_affinity_beats_load():
+    """A big cached-prefix match outweighs a moderate load gap (and the
+    hit is counted); with affinity_weight=0 the same fleet degenerates
+    to pure load routing."""
+    clock = VirtualClock()
+    engines = [_StubEngine(clock, load=10, prefix=0),
+               _StubEngine(clock, load=40, prefix=64)]
+    fleet = FleetRouter(engines, policy="prefix_affinity",
+                        affinity_weight=1.0)
+    assert fleet._route(_req(0)) == 1
+    assert fleet._affinity_hits == 1
+    assert fleet._affinity_hit_tokens == 64
+    flat = FleetRouter([_StubEngine(clock, load=10, prefix=0),
+                        _StubEngine(clock, load=40, prefix=64)],
+                       policy="prefix_affinity", affinity_weight=0.0)
+    assert flat._route(_req(1)) == 0
+
+
+def test_route_round_robin_cycles():
+    clock = VirtualClock()
+    engines = [_StubEngine(clock), _StubEngine(clock), _StubEngine(clock)]
+    fleet = FleetRouter(engines, policy="round_robin")
+    assert [fleet._route(_req(i)) for i in range(6)] == [0, 1, 2, 0, 1, 2]
+
+
+def test_route_assignment_overrides_policy():
+    clock = VirtualClock()
+    engines = [_StubEngine(clock, load=0), _StubEngine(clock, load=999)]
+    fleet = FleetRouter(engines, policy="load", assignment={7: 1})
+    assert fleet._route(_req(7)) == 1
+    assert fleet._decisions[-1]["policy"] == "assignment"
+
+
+def test_router_validation():
+    clock = VirtualClock()
+    with pytest.raises(ValueError, match="at least one engine"):
+        FleetRouter([])
+    with pytest.raises(ValueError, match="routing policy"):
+        FleetRouter([_StubEngine(clock)], policy="nope")
+    with pytest.raises(ValueError, match="own clock"):
+        FleetRouter([_StubEngine(clock), _StubEngine(VirtualClock())])
+    with pytest.raises(ValueError, match="no unified/prefill"):
+        FleetRouter([_StubEngine(clock, role="decode")])
+    with pytest.raises(ValueError, match="no .*decode-role"):
+        FleetRouter([_StubEngine(clock, role="prefill")])
+
+
+def test_engine_role_config_validation():
+    with pytest.raises(ValueError, match="unknown engine role"):
+        engine_config_for(TINY, max_slots=1, prompt_len=8,
+                          max_new_tokens=4, role="verify", paged=True)
+    with pytest.raises(ValueError, match="require EngineConfig.paged"):
+        engine_config_for(TINY, max_slots=1, prompt_len=8,
+                          max_new_tokens=4, role="prefill")
+
+
+# ----------------------------------------------------------------------
+# arrivals: seeded sub-stream splitting
+# ----------------------------------------------------------------------
+def test_split_seeds_and_merge_requests():
+    seeds = split_seeds(123, 3)
+    assert len(set(seeds)) == 3
+    assert seeds == split_seeds(123, 3)          # replayable
+    streams = [poisson_requests(4, rate=2.0, vocab_size=64, prompt_len=8,
+                                max_new_tokens=4, seed=s, rid_base=100 * i)
+               for i, s in enumerate(seeds)]
+    merged = merge_requests(*streams)
+    assert len(merged) == 12
+    times = [r.arrival_time for r in merged]
+    assert times == sorted(times)
+    with pytest.raises(ValueError, match="colliding rids"):
+        merge_requests(streams[0], streams[0])
+
+
+# ----------------------------------------------------------------------
+# handoff wire form
+# ----------------------------------------------------------------------
+def test_handoff_record_npz_roundtrip_bfloat16():
+    rng = np.random.default_rng(0)
+    kv = [np.asarray(jnp.asarray(rng.standard_normal((8, 1, 2, 16)),
+                                 jnp.bfloat16)),
+          rng.standard_normal((8, 1, 2, 16)).astype(np.float32)]
+    rec = HandoffRecord(
+        rid=3, prompt_tokens=np.arange(6, dtype=np.int32), output=[11],
+        pos=6, pad_len=8, prefill_chunk=4, max_new_tokens=5, eos_id=None,
+        kv=kv, cached_prefix_tokens=0, arrival_time=0.25,
+        admitted_time=0.5, first_token_time=1.0)
+    back = HandoffRecord.from_npz_bytes(rec.to_npz_bytes())
+    assert back.rid == 3 and back.pos == 6 and back.pad_len == 8
+    assert back.eos_id is None and back.output == [11]
+    assert back.first_token_time == 1.0
+    np.testing.assert_array_equal(back.prompt_tokens, rec.prompt_tokens)
+    for a, b in zip(kv, back.kv):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(a.view(np.uint8), b.view(np.uint8))
+    assert back.nbytes == rec.nbytes
+
+
+# ----------------------------------------------------------------------
+# 1-replica fleet == bare engine (tokens AND timestamps)
+# ----------------------------------------------------------------------
+def test_single_replica_fleet_matches_bare_engine():
+    L, gen = 10, 5
+    model, params = _model(TINY, 1, L)
+    kw = dict(slots=2, prompt_len=L, max_new=gen, chunk=4, paged=True,
+              kv_block_size=4)
+    reqs = lambda: poisson_requests(5, rate=2.0, vocab_size=TINY.vocab_size,
+                                    prompt_len=L, max_new_tokens=gen,
+                                    seed=7)
+
+    bare = _engine(TINY, model, params, VirtualClock(0.5), **kw)
+    want, bare_rep = captured_run(bare, reqs())
+
+    eng = _engine(TINY, model, params, VirtualClock(0.5), **kw)
+    fleet = FleetRouter([eng], policy="load")
+    got, fleet_rep = _captured_fleet_run(fleet, reqs())
+
+    assert got == want
+    # the lockstep drive keeps the shared clock call-for-call identical,
+    # so per-request timestamps (not just tokens) match exactly
+    rows = {r["rid"]: r for r in fleet_rep["replica_reports"][0]["requests"]}
+    for r in bare_rep["requests"]:
+        assert rows[r["rid"]]["ttft"] == r["ttft"]
+        assert rows[r["rid"]]["e2e"] == r["e2e"]
+    agg = fleet_rep["fleet"]["aggregate"]
+    assert agg["n_requests"] == bare_rep["n_requests"]
+    assert agg["ttft"]["p50"] == bare_rep["ttft"]["p50"]
+
+
+# ----------------------------------------------------------------------
+# prefill→decode disaggregation == unified engine (token identity)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("variant", ["plain", "prefix", "spec"])
+def test_disaggregated_matches_unified_tokens(variant):
+    L, gen = 10, 6
+    model, params = _model(TINY, 1, L)
+    base = dict(slots=2, prompt_len=L, max_new=gen, chunk=4, paged=True,
+                kv_block_size=4)
+    sharing = variant == "prefix"
+    spec_k = 4 if variant == "spec" else 0
+    shared_prefix = 8 if sharing else 0
+    reqs = lambda: poisson_requests(6, rate=2.0,
+                                    vocab_size=TINY.vocab_size,
+                                    prompt_len=L, max_new_tokens=gen,
+                                    seed=11,
+                                    shared_prefix_len=shared_prefix)
+
+    uni = _engine(TINY, model, params, VirtualClock(0.5), **base,
+                  prefix_sharing=sharing)
+    want, _ = captured_run(uni, reqs())
+
+    clock = VirtualClock(0.5)
+    pf = _engine(TINY, model, params, clock, **base, role="prefill",
+                 prefix_sharing=sharing)
+    dec = _engine(TINY, model, params, clock, **base, role="decode",
+                  prefix_sharing=sharing, speculative_k=spec_k)
+    fleet = FleetRouter([pf, dec], policy="load")
+    assert fleet.disaggregated
+    got, rep = _captured_fleet_run(fleet, reqs())
+
+    assert got == want
+    hand = rep["fleet"]["handoffs"]
+    assert hand["moved"] == 6 and hand["pending"] == 0
+    assert hand["bytes"] > 0
+    roles = {r["role"]: r for r in rep["fleet"]["replicas"]}
+    assert roles["prefill"]["handoffs"]["exported"] == 6
+    assert roles["decode"]["handoffs"]["imported"] == 6
+    # every completion record lives on the decode side, with the true
+    # (prefill-stamped) TTFT carried across the handoff
+    assert roles["decode"]["n_requests"] == 6
+    assert roles["prefill"]["n_requests"] == 0
+
+
+def test_decode_role_rejects_submit():
+    model, params = _model(TINY, 1, 8)
+    dec = _engine(TINY, model, params, VirtualClock(0.5), slots=1,
+                  prompt_len=8, max_new=4, chunk=4, paged=True,
+                  kv_block_size=4, role="decode")
+    with pytest.raises(ValueError, match="import_handoff"):
+        dec.submit(_req(0))
+
+
+# ----------------------------------------------------------------------
+# routing only places work: fixed assignment => identical streams
+# ----------------------------------------------------------------------
+def test_fixed_assignment_identical_across_policies():
+    L, gen = 10, 5
+    model, params = _model(TINY, 1, L)
+    kw = dict(slots=2, prompt_len=L, max_new=gen, chunk=4, paged=True,
+              kv_block_size=4, prefix_sharing=True)
+    reqs = lambda: poisson_requests(6, rate=2.0,
+                                    vocab_size=TINY.vocab_size,
+                                    prompt_len=L, max_new_tokens=gen,
+                                    seed=5, shared_prefix_len=8)
+
+    def run(policy, assignment=None):
+        clock = VirtualClock(0.5)
+        engines = [_engine(TINY, model, params, clock, **kw)
+                   for _ in range(2)]
+        fleet = FleetRouter(engines, policy=policy, assignment=assignment)
+        outs, rep = _captured_fleet_run(fleet, reqs())
+        decisions = {d["rid"]: d["replica"]
+                     for d in rep["fleet"]["routing"]["decisions"]}
+        return outs, decisions
+
+    out_load, placed = run("load")
+    # replay the load policy's placement under every other policy: the
+    # assignment overrides scoring, so the streams must be bit-identical
+    for policy in ("prefix_affinity", "round_robin"):
+        out_replay, placed_replay = run(policy, assignment=placed)
+        assert placed_replay == placed
+        assert out_replay == out_load
+
+
+# ----------------------------------------------------------------------
+# fleet warmup: zero post-warmup recompiles on every replica
+# ----------------------------------------------------------------------
+def test_fleet_zero_recompiles_after_warmup():
+    L, gen = 10, 5
+    model, params = _model(TINY, 1, L)
+    clock = VirtualClock(0.5)
+    engines = [_engine(TINY, model, params, clock, slots=2, prompt_len=L,
+                       max_new=gen, chunk=4, paged=True, kv_block_size=4,
+                       prefix_sharing=True) for _ in range(2)]
+    fleet = FleetRouter(engines, policy="prefix_affinity")
+    fleet.warmup()
+    rep = fleet.run(poisson_requests(6, rate=2.0,
+                                     vocab_size=TINY.vocab_size,
+                                     prompt_len=L, max_new_tokens=gen,
+                                     seed=3, shared_prefix_len=8))
+    for rrep in rep["replica_reports"]:
+        assert rrep["recompiled_after_warmup"] is False
+    routing = rep["fleet"]["routing"]
+    assert sum(routing["per_replica"]) == 6
+    assert rep["fleet"]["aggregate"]["n_requests"] == 6
