@@ -48,6 +48,15 @@ machine-readable ``BENCH_serve.json``:
   a steady-decode + long-prompt-burst mix (the decode-role replica never
   runs prompt prefills, so burst prefill chunks cannot stall in-flight
   decodes — lower TPOT p99 at equal device count);
+* ``state_pool`` — sequence-state stores under long-context + bursty
+  pressure through the ``SequenceStateStore`` surface: a pure-SSM
+  (mamba2) engine on the slotted recurrent-state pool under smooth vs
+  bursty arrivals at the same mean rate (bursts oversubscribe the fixed
+  slot pool, visible in TTFT p99, while ``state_bytes_per_slot`` stays
+  length-independent), a hybrid (zamba2-style) long/short prompt mix,
+  and the paged engine serving prompts far beyond its sliding window as
+  fixed-size ring-buffer chains (O(window) KV per slot, chains never
+  grow);
 * ``decode_attention`` — microbench of the per-step decode-attention
   primitive, reference block-table gather vs the fused Pallas kernel,
   sweeping the active sequence length against ``L_max``: the reference
@@ -90,7 +99,8 @@ from repro.configs.base import ParallelConfig                 # noqa: E402
 from repro.launch.mesh import make_host_mesh                  # noqa: E402
 from repro.models.model import MeshShape, build_model         # noqa: E402
 from repro.serve import (FleetRouter, ServeEngine, WallClock,  # noqa: E402
-                         engine_config_for, merge_requests,
+                         bursty_requests, engine_config_for,
+                         long_context_requests, merge_requests,
                          poisson_requests)
 
 ARCH = "mixtral-8x7b"
@@ -1275,26 +1285,161 @@ def fleet_compare():
     return {"cells": cells, "headline": headline}
 
 
+def _state_pool_cell(rep, **labels):
+    cell = dict(labels)
+    cell.update({
+        "n_requests": rep["n_requests"],
+        "ttft_p50_ms": rep["ttft"]["p50"] * 1e3,
+        "ttft_p99_ms": rep["ttft"]["p99"] * 1e3,
+        "tpot_p50_ms": rep["tpot"]["p50"] * 1e3,
+        "throughput_tok_s": rep["throughput_tok_s"],
+        "mean_occupancy": rep["mean_occupancy"],
+        "preemptions": rep["preemptions"],
+        "state_pool": rep["state_pool"],
+        "recompiled_after_warmup": rep.get("recompiled_after_warmup"),
+    })
+    return cell
+
+
+def state_pool_compare():
+    """Sequence-state stores under long-context + bursty pressure.
+
+    Four cells through the ``SequenceStateStore`` surface:
+
+    * ``ssm_smooth`` / ``ssm_bursty`` — a pure-SSM (mamba2) engine on the
+      slotted recurrent-state pool, the same request mix arriving as a
+      smooth Poisson stream vs bursts at the same mean rate: bursts
+      oversubscribe the fixed slot pool at one instant, so queueing shows
+      up in TTFT p99 while the state pool itself stays fixed-size
+      (``state_bytes_per_slot`` is length-independent — the SSM serving
+      argument);
+    * ``hybrid_long_context`` — a zamba2-style hybrid engine serving a
+      long/short prompt mix near the pool ceiling: SSM leaves + attention
+      slabs compose in one slot store;
+    * ``ring_long_bursty`` — the paged transformer engine with prompts
+      far beyond its sliding window, bursty arrivals: window-clamped
+      layers serve as fixed-size ring-buffer chains (allocated whole at
+      admission, never grown), so long contexts cost O(window) KV, not
+      O(length).
+    """
+    cells = []
+
+    def run(arch, label, reqs_fn, *, slots, prompt_len, gen, chunk,
+            paged=False, **labels):
+        cfg = get_config(arch).reduced()
+        pcfg = ParallelConfig(attn_chunk=min(64, prompt_len))
+        if arch == ARCH:
+            # the MoE arch runs expert/model-parallel like every other cell
+            mesh = make_host_mesh(data=1, model=MODEL_PAR)
+            ms = MeshShape(tuple(zip(mesh.axis_names, mesh.devices.shape)))
+            model = build_model(cfg, pcfg, batch=slots, seq_len=prompt_len,
+                                mesh_shape=ms, mesh=mesh)
+            with mesh:
+                params = model.init(jax.random.PRNGKey(0))
+        else:
+            mesh = None
+            model = build_model(cfg, pcfg, batch=slots, seq_len=prompt_len)
+            params = model.init(jax.random.PRNGKey(0))
+        ecfg = engine_config_for(cfg, max_slots=slots,
+                                 prompt_len=prompt_len,
+                                 max_new_tokens=gen, prefill_chunk=chunk,
+                                 paged=paged, kv_block_size=KV_BLOCK)
+        eng = ServeEngine(model, params, ecfg, mesh=mesh)
+        eng.warmup()
+        rep = eng.run(reqs_fn(cfg, ecfg))
+        cell = _state_pool_cell(rep, arch=arch, workload=label,
+                                paged=paged, **labels)
+        cells.append(cell)
+        sp = cell["state_pool"]
+        print(f"[bench] state-pool {label:20s} kind={sp['kind']:5s} "
+              f"ttft_p50={cell['ttft_p50_ms']:7.1f}ms "
+              f"p99={cell['ttft_p99_ms']:7.1f}ms "
+              f"occ={cell['mean_occupancy']:.2f} "
+              f"preempt={cell['preemptions']}")
+        return cell
+
+    # --- SSM: smooth Poisson vs bursty at the same 8 req/s mean rate ---
+    n, plen, gen = 12, 64, 8
+    run("mamba2-2.7b", "ssm_smooth",
+        lambda cfg, ecfg: poisson_requests(
+            n, rate=8.0, vocab_size=cfg.vocab_size, prompt_len=plen,
+            max_new_tokens=gen, seed=40),
+        slots=3, prompt_len=plen, gen=gen, chunk=16, arrivals="poisson")
+    run("mamba2-2.7b", "ssm_bursty",
+        lambda cfg, ecfg: bursty_requests(
+            n, vocab_size=cfg.vocab_size, prompt_len=plen,
+            max_new_tokens=gen, burst_size=6, burst_gap=0.75, seed=40),
+        slots=3, prompt_len=plen, gen=gen, chunk=16, arrivals="bursty")
+
+    # --- hybrid: long/short prompt mix near the pool ceiling ---
+    run("zamba2-7b", "hybrid_long_context",
+        lambda cfg, ecfg: long_context_requests(
+            8, vocab_size=cfg.vocab_size, max_seq_len=ecfg.max_seq_len,
+            max_new_tokens=gen, rate=8.0, long_frac=0.5, short_len=16,
+            seed=41),
+        slots=3, prompt_len=96, gen=gen, chunk=16, arrivals="poisson")
+
+    # --- paged ring: prompts ~2x beyond the 64-token sliding window ---
+    ring_cell = run(ARCH, "ring_long_bursty",
+                    lambda cfg, ecfg: bursty_requests(
+                        8, vocab_size=cfg.vocab_size, prompt_len=120,
+                        max_new_tokens=gen, burst_size=4, burst_gap=0.75,
+                        seed=42,
+                        prompt_len_range=(72, 120)),
+                    slots=3, prompt_len=120, gen=gen, chunk=16,
+                    paged=True, arrivals="bursty")
+
+    by_label = {c["workload"]: c for c in cells}
+    headline = {
+        "ssm_smooth_ttft_p99_ms": by_label["ssm_smooth"]["ttft_p99_ms"],
+        "ssm_bursty_ttft_p99_ms": by_label["ssm_bursty"]["ttft_p99_ms"],
+        "bursty_pressure_visible":
+            by_label["ssm_bursty"]["ttft_p99_ms"]
+            > by_label["ssm_smooth"]["ttft_p99_ms"],
+        "ssm_state_bytes_per_slot":
+            by_label["ssm_smooth"]["state_pool"]["state_bytes_per_slot"],
+        "ring_engaged": bool(ring_cell["state_pool"].get("window_ring")),
+        "ring_tokens": ring_cell["state_pool"].get("ring_tokens"),
+        "no_cell_recompiled": not any(c["recompiled_after_warmup"]
+                                      for c in cells),
+    }
+    print(f"[bench] state-pool headline: bursty ttft_p99 "
+          f"{headline['ssm_bursty_ttft_p99_ms']:.1f}ms vs smooth "
+          f"{headline['ssm_smooth_ttft_p99_ms']:.1f}ms "
+          f"(pressure: {headline['bursty_pressure_visible']}); "
+          f"ring engaged: {headline['ring_engaged']} "
+          f"(M={headline['ring_tokens']}); "
+          f"recompiles: {not headline['no_cell_recompiled']}")
+    return {"cells": cells, "headline": headline}
+
+
+ONLY_SECTIONS = {"fleet": ("fleet", lambda: fleet_compare()),
+                 "state_pool": ("state_pool",
+                                lambda: state_pool_compare())}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "..", "BENCH_serve.json"))
-    ap.add_argument("--only", default="", choices=["", "fleet"],
+    ap.add_argument("--only", default="",
+                    choices=["", *ONLY_SECTIONS],
                     help="run a single section and merge it into an "
                          "existing --out file (fresh runs leave this "
                          "empty and produce the full file)")
     args = ap.parse_args()
 
-    if args.only == "fleet":
-        fleet = fleet_compare()
+    if args.only:
+        key, fn = ONLY_SECTIONS[args.only]
+        section = fn()
         out = {}
         if os.path.exists(args.out):
             with open(args.out) as f:
                 out = json.load(f)
-        out["fleet"] = fleet
+        out[key] = section
         with open(args.out, "w") as f:
             json.dump(out, f, indent=2)
-        print(f"[bench] merged fleet section -> "
+        print(f"[bench] merged {key} section -> "
               f"{os.path.abspath(args.out)}")
         return
 
@@ -1306,6 +1451,7 @@ def main():
     skew = skew_compare()
     residency = residency_compare()
     fleet = fleet_compare()
+    state_pool = state_pool_compare()
     decode_attn = decode_attention_microbench()
     phases = phases_breakdown()
 
@@ -1342,6 +1488,7 @@ def main():
         "skew": skew,
         "residency": residency,
         "fleet": fleet,
+        "state_pool": state_pool,
         "decode_attention": decode_attn,
         "phases": phases,
     }
@@ -1355,6 +1502,7 @@ def main():
           f"{len(residency['modeled_cells'])} residency + "
           f"{len(fleet['cells']['routing'])}+"
           f"{len(fleet['cells']['disaggregation'])} fleet + "
+          f"{len(state_pool['cells'])} state-pool + "
           f"{len(decode_attn['cells'])} decode-attention + "
           f"{len(phases['cells'])} phase-breakdown cells)")
 

@@ -67,6 +67,22 @@ echo "== 2-device CPU serve smoke (1k prompt, fused q-tiled prefill + fused MoE)
 serve --paged --kv-block-size 64 --prefill-chunk 128 --prompt-len 1024 \
     --requests 2 --sliding-window 0 --fused-attention --fused-moe
 
+CELL="SSM slot state pool (mamba2)"
+echo "== CPU serve smoke (mamba2 SSM, slotted recurrent-state pool) =="
+# recurrent-state family: the engine picks the SlotStateStore (fixed
+# per-slot SSM state, prefill-continuation carry, scratch reset between
+# requests); --skew/--policy are ignored for a moe-less config, and the
+# paged pool is rejected for this family so the cell stays slab
+serve --arch mamba2-2.7b --model-par 1 --requests 4
+
+CELL="sliding-window ring (prompt beyond window)"
+echo "== 2-device CPU serve smoke (paged ring, 96-token prompts > 64-token window) =="
+# prompts beyond the reduced model's 64-token sliding window used to be
+# a loud rejection in the paged engine; window-clamped layers now serve
+# as fixed-size ring-buffer chains (allocated whole at admission, never
+# grown), token-identical to the windowed slab oracle
+serve --paged --kv-block-size 8 --prompt-len 96 --requests 4
+
 # Skew cells: same heavy-skew stream (--skew 0.9 is already the serve()
 # default above) through the round_robin baseline and the HarMoEny
 # schedule; --q-tokens 1 so decode-scale batches clear the movement

@@ -42,9 +42,95 @@ from repro.configs.base import ParallelConfig
 from repro.core.topology import static_opt_placement
 from repro.launch.mesh import make_host_mesh
 from repro.models.model import MeshShape, build_model
-from repro.serve import (FleetRouter, ROUTING_POLICIES, ServeEngine,
-                         WallClock, engine_config_for, load_trace,
-                         poisson_requests)
+from repro.serve import (EngineConfig, FleetRouter, ROUTING_POLICIES,
+                         ServeEngine, WallClock, engine_config_for,
+                         load_trace, poisson_requests)
+
+# ----------------------------------------------------------------------
+# EngineConfig-derived flag plumbing.  Every engine knob used to be wired
+# three times — argparse declaration, args attribute, engine_config_for
+# kwarg — and each new knob repeated the dance.  Now one table row names
+# the flag and the ``EngineConfig`` field it sets: the argparse type and
+# default come from the dataclass field itself (``add_engine_flags``),
+# and the kwargs for ``engine_config_for`` are extracted generically
+# (``engine_overrides``).  A ``default`` override in the row marks
+# CLI-level "0 = auto" semantics that ``engine_config_for`` resolves
+# before ``EngineConfig`` validation sees them.
+# ----------------------------------------------------------------------
+ENGINE_FLAGS = [
+    ("--prefill-chunk", "prefill_chunk",
+     dict(default=0, help="prompt tokens per prefill chunk (0 = auto)")),
+    ("--paged", "paged",
+     dict(help="paged KV pool: block-table attention, block-aware "
+               "admission, preemption-by-recompute")),
+    ("--kv-block-size", "kv_block_size",
+     dict(help="tokens per physical KV block (paged mode)")),
+    ("--kv-blocks", "num_kv_blocks",
+     dict(help="usable KV blocks (0 = worst case: slab parity)")),
+    ("--prefix-sharing", "prefix_sharing",
+     dict(help="prefix-sharing KV cache: copy-on-write blocks, radix "
+               "prefix index, LRU eviction (needs --paged)")),
+    ("--fused-attention", "fused_paged_attention",
+     dict(help="fused Pallas attention on every phase: q-tiled paged "
+               "attention for prefill / prefix-tail / verify and "
+               "block-table decode attention (needs --paged for decode; "
+               "interpret mode off-TPU). Strict: raises instead of "
+               "silently falling back")),
+    ("--fused-moe", "fused_moe_gmm",
+     dict(help="grouped-GEMM Pallas expert FFN on prefill/decode/verify "
+               "token batches (MoE archs only; interpret mode off-TPU)")),
+    ("--speculative-k", "speculative_k",
+     dict(help="speculative decoding: verify up to k self-drafted tokens "
+               "per decode step in one static [B, k+1] forward (needs "
+               "--paged; greedy streams stay token-identical)")),
+    ("--speculative-policy", "speculative_policy",
+     dict(help="draft proposer (ngram = prompt-lookup self-drafting)")),
+    ("--temperature", "temperature",
+     dict(help="sampling temperature (0 = greedy)")),
+    ("--top-k", "top_k",
+     dict(help="truncate sampling to the top-k logits (0 = full)")),
+    ("--top-p", "top_p",
+     dict(help="nucleus sampling: keep the smallest token set with "
+               "cumulative probability >= top-p (1 = off)")),
+    ("--replica-slots", "replica_slots",
+     dict(help="static hot-expert replica slots per rank (0 = "
+               "replication off); swaps never recompile")),
+    ("--rebalance-interval", "rebalance_interval",
+     dict(help="engine steps between hot-expert weight swaps (0 = "
+               "never; needs --replica-slots)")),
+    ("--resident-experts", "resident_experts",
+     dict(help="tiered expert residency: pod-total HBM working-set "
+               "budget in experts (0 = off; must be a multiple of the "
+               "EP degree)")),
+    ("--prefetch-policy", "prefetch_policy",
+     dict(choices=["predictive", "on_demand", "none"],
+          help="residency staging policy: predictive = EMA-driven "
+               "next-layer prefetch (stalls hidden), on_demand = stage "
+               "on first touch, none = frozen initial working set")),
+]
+
+
+def add_engine_flags(ap: argparse.ArgumentParser) -> None:
+    """Declare one CLI flag per ``ENGINE_FLAGS`` row, typed and defaulted
+    from the ``EngineConfig`` field it maps to (bool fields become
+    ``store_true`` switches).  ``dest`` is the field name, so the parsed
+    namespace mirrors the config and ``engine_overrides`` needs no
+    per-flag mapping."""
+    fields = {f.name: f for f in dataclasses.fields(EngineConfig)}
+    for flag, name, extra in ENGINE_FLAGS:
+        extra = dict(extra)
+        default = extra.pop("default", fields[name].default)
+        if isinstance(default, bool):
+            ap.add_argument(flag, dest=name, action="store_true", **extra)
+        else:
+            ap.add_argument(flag, dest=name, type=type(default),
+                            default=default, **extra)
+
+
+def engine_overrides(args) -> dict:
+    """The parsed values of every ``ENGINE_FLAGS`` knob, keyed by
+    ``EngineConfig`` field name — splat into ``engine_config_for``."""
+    return {name: getattr(args, name) for _, name, _ in ENGINE_FLAGS}
 
 
 def skew_profile(moe, skew: float) -> np.ndarray:
@@ -104,21 +190,9 @@ def _mesh_and_model(args, cfg, prompt_len):
 def _engine_cfg(args, cfg, prompt_len, gen, role="unified"):
     return engine_config_for(
         cfg, max_slots=args.batch, prompt_len=prompt_len,
-        max_new_tokens=gen, prefill_chunk=args.prefill_chunk,
-        skew_seed=args.seed + 1, paged=args.paged,
-        kv_block_size=args.kv_block_size, num_kv_blocks=args.kv_blocks,
-        prefix_sharing=args.prefix_sharing,
-        fused_paged_attention=args.fused_attention,
-        fused_moe_gmm=getattr(args, "fused_moe", False),
-        speculative_k=args.speculative_k,
-        speculative_policy=args.speculative_policy,
-        temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
-        moe_policy=args.moe_policy or None,
-        rebalance_interval=args.rebalance_interval,
-        replica_slots=args.replica_slots,
-        resident_experts=getattr(args, "resident_experts", 0),
-        prefetch_policy=getattr(args, "prefetch_policy", "predictive"),
-        role=role)
+        max_new_tokens=gen, skew_seed=args.seed + 1,
+        moe_policy=args.moe_policy or None, role=role,
+        **engine_overrides(args))
 
 
 def build_serving_engine(args, cfg=None, *, prompt_len=None, gen=None):
@@ -320,22 +394,6 @@ def main():
                     help="decode-time scheduling policy override (default: "
                          "--policy everywhere); lets one set of weights "
                          "serve prefill and decode under different policies")
-    ap.add_argument("--replica-slots", type=int, default=0,
-                    help="static hot-expert replica slots per rank "
-                         "(0 = replication off); swaps never recompile")
-    ap.add_argument("--rebalance-interval", type=int, default=0,
-                    help="engine steps between hot-expert weight swaps "
-                         "(0 = never; needs --replica-slots)")
-    ap.add_argument("--resident-experts", type=int, default=0,
-                    help="tiered expert residency: pod-total HBM "
-                         "working-set budget in experts (0 = off; must be "
-                         "a multiple of the EP degree)")
-    ap.add_argument("--prefetch-policy", default="predictive",
-                    choices=["predictive", "on_demand", "none"],
-                    help="residency staging policy: predictive = "
-                         "EMA-driven next-layer prefetch (stalls hidden), "
-                         "on_demand = stage on first touch, none = frozen "
-                         "initial working set")
     ap.add_argument("--q-tokens", type=int, default=0,
                     help="scheduler token-unit granularity override (0 = "
                          "auto threshold; small values let tiny decode "
@@ -343,55 +401,21 @@ def main():
     ap.add_argument("--data-par", type=int, default=0)
     ap.add_argument("--model-par", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
-    # --- serving-engine knobs (new) ---
+    # --- serving-engine knobs ---
+    # every EngineConfig knob comes from the ENGINE_FLAGS table (one
+    # declaration per knob, typed/defaulted from the dataclass field)
+    add_engine_flags(ap)
     ap.add_argument("--requests", type=int, default=0,
                     help="total requests (default: one closed batch)")
     ap.add_argument("--rate", type=float, default=0.0,
                     help="Poisson arrival rate req/s (0 = all at t=0)")
-    ap.add_argument("--prefill-chunk", type=int, default=0,
-                    help="prompt tokens per prefill chunk (0 = auto)")
-    ap.add_argument("--paged", action="store_true",
-                    help="paged KV pool: block-table attention, block-aware "
-                         "admission, preemption-by-recompute")
-    ap.add_argument("--kv-block-size", type=int, default=16,
-                    help="tokens per physical KV block (paged mode)")
-    ap.add_argument("--kv-blocks", type=int, default=0,
-                    help="usable KV blocks (0 = worst case: slab parity)")
-    ap.add_argument("--fused-attention", action="store_true",
-                    help="fused Pallas attention on every phase: q-tiled "
-                         "paged attention for prefill / prefix-tail / "
-                         "verify and block-table decode attention (needs "
-                         "--paged for decode; interpret mode off-TPU). "
-                         "Strict: raises instead of silently falling back")
-    ap.add_argument("--fused-moe", action="store_true",
-                    help="grouped-GEMM Pallas expert FFN on prefill/decode/"
-                         "verify token batches (MoE archs only; interpret "
-                         "mode off-TPU)")
     ap.add_argument("--sliding-window", type=int, default=-1,
                     help="override the arch's sliding window (-1 = keep; "
                          "0 = full attention — needed for long-context "
                          "paged cells on reduced window archs)")
-    ap.add_argument("--speculative-k", type=int, default=0,
-                    help="speculative decoding: verify up to k self-drafted "
-                         "tokens per decode step in one static [B, k+1] "
-                         "forward (needs --paged; greedy streams stay "
-                         "token-identical)")
-    ap.add_argument("--speculative-policy", default="ngram",
-                    help="draft proposer (ngram = prompt-lookup "
-                         "self-drafting)")
-    ap.add_argument("--prefix-sharing", action="store_true",
-                    help="prefix-sharing KV cache: copy-on-write blocks, "
-                         "radix prefix index, LRU eviction (needs --paged)")
     ap.add_argument("--shared-prefix-len", type=int, default=0,
                     help="synthetic prompts share their first K tokens "
                          "(the system-prompt regime prefix caching targets)")
-    ap.add_argument("--temperature", type=float, default=0.0,
-                    help="sampling temperature (0 = greedy)")
-    ap.add_argument("--top-k", type=int, default=0,
-                    help="truncate sampling to the top-k logits (0 = full)")
-    ap.add_argument("--top-p", type=float, default=1.0,
-                    help="nucleus sampling: keep the smallest token set "
-                         "with cumulative probability >= top-p (1 = off)")
     ap.add_argument("--replicas", type=int, default=1,
                     help="engine replicas behind the fleet router (>1 "
                          "enables fleet mode; virtual replicas share one "

@@ -253,6 +253,49 @@ def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
     return out.transpose(0, 2, 1, 3).astype(q.dtype)
 
 
+def paged_ring_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
+                                v_pool: jnp.ndarray,
+                                block_table: jnp.ndarray,
+                                cache_len: jnp.ndarray, *, window: int,
+                                block_size: int,
+                                softcap: float = 0.0) -> jnp.ndarray:
+    """Single-query decode through a paged pool whose logical positions wrap
+    a ring of M = round_up(window, block_size) positions.
+
+    Absolute position p lives at ring slot p % M (block ``(p % M) //
+    block_size`` of the row's chain), so a chain of M/block_size blocks
+    serves an unbounded logical length: the decode write at
+    ``(cache_len - 1) % M`` overwrites the age-M position, which the window
+    (window <= M) has already expired.  Ring slot r holds absolute position
+    ``cache_len - 1 - ((cache_len - 1 - r) mod M)`` — valid iff that age is
+    < min(window, cache_len).  K is stored post-RoPE at its absolute
+    position, exactly as in the slab ring, so scores stay position-exact
+    across wraps.
+    """
+    B = q.shape[0]
+    M = -(-window // block_size) * block_size
+    r = jnp.arange(M)
+    phys = block_table[:, r // block_size] * block_size \
+        + r % block_size                                    # [B, M]
+    k = k_pool[0, phys]                                     # [B, M, Hkv, hd]
+    v = v_pool[0, phys]
+    cl = jnp.broadcast_to(
+        jnp.asarray(cache_len, jnp.int32).reshape(-1), (B,))
+    age = jnp.mod(cl[:, None] - 1 - r[None, :], M)          # [B, M]
+    valid = (age < window) & (age < cl[:, None])
+    H, hd = q.shape[2], q.shape[3]
+    rep = H // k.shape[2]
+    kr = _repeat_kv(k, rep)
+    vr = _repeat_kv(v, rep)
+    qf = (q.astype(jnp.float32) * hd ** -0.5)[:, 0]         # [B, H, hd]
+    s = jnp.einsum("bhd,bkhd->bhk", qf, kr.astype(jnp.float32))
+    s = _softcap(s, softcap)
+    s = jnp.where(valid[:, None, :], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhk,bkhd->bhd", p, vr.astype(jnp.float32))
+    return out[:, None].astype(q.dtype)
+
+
 class AttnCache(NamedTuple):
     k: jnp.ndarray   # [B, S_max, Hkv, hd]
     v: jnp.ndarray
@@ -405,26 +448,39 @@ def attention_block(x: jnp.ndarray, p: Dict[str, jnp.ndarray],
         # Inactive rows (cache_len=S, all-null table) write into the null
         # block — garbage that the validity mask keeps unread.
         L_max = block_table.shape[1] * block_size
-        if 0 < window < L_max:
-            # both attention paths below attend window-free over the
-            # logical range; a window >= L_max can never mask anything
-            # (q_pos - kv_pos <= L_max - 1), so only a binding window is
-            # an error — refuse it loudly instead of silently dropping it
+        # ring mode: a binding sliding window wraps the logical position
+        # into a ring of M = round_up(window, block_size) positions, so a
+        # chain of M/block_size blocks serves unbounded logical lengths.
+        # window > L_max cannot bind (the engine caps logical positions at
+        # L_max there) and keeps the window-free path; window == L_max is
+        # equivalent under either arithmetic (cl <= M => pos % M == pos).
+        ring = 0 < window <= L_max
+        if ring and S > 1:
             raise NotImplementedError(
-                f"paged decode attends window-free over the logical KV "
-                f"range (up to {L_max} tokens) and cannot express a "
-                f"binding sliding window of {window} < {L_max}; serve "
-                f"sliding-window layers with the slab ring-buffer cache "
-                f"(paged ring buffers are a ROADMAP follow-on)")
+                f"paged sliding-window ring decode (window={window}) is "
+                f"single-query only; speculative verify windows are "
+                f"rejected for windowed models at EngineConfig validation")
         cl = jnp.broadcast_to(
             jnp.asarray(cache_len, jnp.int32).reshape(-1), (B,))
         pos = cl[:, None] - S + jnp.arange(S)[None]         # [B, S]
+        if ring:
+            M = -(-window // block_size) * block_size
+            pos = pos % M
         widx = block_table[jnp.arange(B)[:, None], pos // block_size] \
             * block_size + pos % block_size                 # [B, S]
         k_cache = cache.k.at[0, widx].set(k.astype(cache.k.dtype))
         v_cache = cache.v.at[0, widx].set(v.astype(cache.v.dtype))
         branch = "verify" if S > 1 else "decode"
-        if use_pallas:
+        if ring:
+            _record_dispatch(
+                "decode_ring", fused=False, requested=use_pallas,
+                strict=strict_pallas,
+                reason=f"sliding-window ring decode (window={window}) has "
+                       f"no fused kernel")
+            out = paged_ring_decode_attention(
+                q, k_cache, v_cache, block_table, cl, window=window,
+                block_size=block_size, softcap=softcap)
+        elif use_pallas:
             from repro.kernels.paged_attention.ops import paged_attention
             _record_dispatch(branch, fused=True, requested=True)
             out = paged_attention(q, k_cache, v_cache, block_table, cl,

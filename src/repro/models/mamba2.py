@@ -69,16 +69,31 @@ def init_mamba(key: jax.Array, cfg: ModelConfig, dtype) -> Dict[str, jnp.ndarray
 
 
 def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
-                 state: Optional[jnp.ndarray] = None
+                 state: Optional[jnp.ndarray] = None,
+                 valid_len: Optional[jnp.ndarray] = None
                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Depthwise causal conv + silu. x: [B, L, C]; w: [W, C]; state: last W-1
-    inputs (for decode continuity)."""
+    inputs (for decode continuity). ``valid_len`` [B] or scalar: only the
+    first ``valid_len`` positions of ``x`` are real tokens — the carried
+    ``new_state`` then holds the last W-1 *valid* inputs, so a padded final
+    prefill chunk does not fold pad activations into the state."""
     W = w.shape[0]
     if state is None:
         state = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
     xp = jnp.concatenate([state, x], axis=1)
     y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(W))
-    new_state = xp[:, -(W - 1):, :] if W > 1 else state
+    if W > 1:
+        if valid_len is None:
+            new_state = xp[:, -(W - 1):, :]
+        else:
+            # valid x tokens occupy xp[:, W-1 : W-1+vl]; the last W-1 valid
+            # inputs (state included, for vl < W-1) are xp[:, vl : vl+W-1].
+            vl = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32),
+                                  (x.shape[0],))
+            idx = vl[:, None] + jnp.arange(W - 1)[None, :]        # [B, W-1]
+            new_state = jnp.take_along_axis(xp, idx[:, :, None], axis=1)
+    else:
+        new_state = state
     return jax.nn.silu(y + b[None, None, :]), new_state
 
 
@@ -173,8 +188,16 @@ def ssd_recurrent_ref(xh, dt, A, Bs, Cs):
 
 def mamba_block(x: jnp.ndarray, p: Dict[str, jnp.ndarray], cfg: ModelConfig,
                 *, state: Optional[MambaState] = None,
+                valid_len: Optional[jnp.ndarray] = None,
                 ) -> Tuple[jnp.ndarray, Optional[MambaState]]:
-    """x: [B, L, d] -> [B, L, d]. state given => stateful (decode or resume)."""
+    """x: [B, L, d] -> [B, L, d]. state given => stateful (decode or resume).
+
+    ``valid_len`` ([B] or scalar) marks the first ``valid_len`` positions as
+    real tokens: pad positions get dt = 0 (an exact identity SSD update —
+    dA = exp(0) = 1 with a zero input term) and the conv states slice at the
+    last valid input, so a padded final prefill chunk leaves ``new_state``
+    token-exact. Outputs at pad positions are garbage either way.
+    """
     dm = mamba_dims(cfg)
     dtype = x.dtype
     z = x @ p["wz"]
@@ -185,10 +208,13 @@ def mamba_block(x: jnp.ndarray, p: Dict[str, jnp.ndarray], cfg: ModelConfig,
     cx = state.conv_x if state is not None else None
     cB = state.conv_B if state is not None else None
     cC = state.conv_C if state is not None else None
-    xc, ncx = _causal_conv(xc, p["conv_x"], p["conv_bx"], cx)
-    Bs, ncB = _causal_conv(Bs, p["conv_B"], p["conv_bB"], cB)
-    Cs, ncC = _causal_conv(Cs, p["conv_C"], p["conv_bC"], cC)
+    xc, ncx = _causal_conv(xc, p["conv_x"], p["conv_bx"], cx, valid_len)
+    Bs, ncB = _causal_conv(Bs, p["conv_B"], p["conv_bB"], cB, valid_len)
+    Cs, ncC = _causal_conv(Cs, p["conv_C"], p["conv_bC"], cC, valid_len)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    if valid_len is not None:
+        vl = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (x.shape[0],))
+        dt = dt * (jnp.arange(x.shape[1])[None, :] < vl[:, None])[..., None]
     A = -jnp.exp(p["A_log"])
     xh = xc.reshape(*xc.shape[:2], dm.n_heads, dm.head_dim)
 

@@ -208,7 +208,8 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
             h, new_cache, diags = T.run_hybrid(
                 h, params["stack"], cfg, pc, mode=mode, cache=cache,
                 cache_len=cache_len, q_offset=q_offset, mesh=mesh,
-                constrain=constrain)
+                constrain=constrain, continue_prefill=continue_prefill,
+                valid_mask=valid_mask)
         elif is_encdec:
             h, new_cache, diags = _run_encdec_decoder(
                 h, params, cfg, pc, mode=mode, cache=cache,
@@ -279,12 +280,13 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
         return loss, diags
 
     # ------------------------------------------------------------------
-    def init_cache(b: int, s_max: int):
+    def init_cache(b: int, s_max: int, clamp_window: bool = True):
         cache: Dict[str, Any] = {}
         if cfg.family == "hybrid":
             cache["stack"] = T.init_hybrid_cache(cfg, b, s_max, dtype)
         else:
-            cache["stack"] = T.init_stack_cache(cfg, b, s_max, dtype)
+            cache["stack"] = T.init_stack_cache(cfg, b, s_max, dtype,
+                                                clamp_window)
         if is_encdec:
             # encoder K/V per decoder layer; contents filled by prefill
             hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
@@ -294,21 +296,26 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
         return cache
 
     def init_paged_cache(num_blocks: int, block_size: int,
-                         s_ref: Optional[int] = None, seq_axes: Any = None):
+                         s_ref: Optional[int] = None, seq_axes: Any = None,
+                         clamp_window: bool = True):
         """Paged variant of ``init_cache``: a batch-1 *physical* block pool
         of ``num_blocks * block_size`` KV positions per leaf, addressed
         through block tables in ``decode_step``.  ``s_ref`` (default the
         model's ``seq_len``) is the logical length the layout is validated
         at — every leaf must expose a full, unclamped KV axis there.
         ``seq_axes`` skips re-discovery when the caller (the serve engine)
-        already holds the per-leaf KV-axis pytree."""
+        already holds the per-leaf KV-axis pytree.  ``clamp_window=False``
+        builds the pool over unclamped (full-length) leaves — the serve
+        engine's sliding-window ring mode."""
         from repro.serve.paging import make_paged_pool
         from repro.serve.slots import discover_seq_axes
         s = s_ref or seq_len
+
+        def _ic(b, s_max):
+            return init_cache(b, s_max, clamp_window)
         if seq_axes is None:
-            seq_axes = discover_seq_axes(init_cache, s)
-        return make_paged_pool(init_cache, s, seq_axes, num_blocks,
-                               block_size)
+            seq_axes = discover_seq_axes(_ic, s)
+        return make_paged_pool(_ic, s, seq_axes, num_blocks, block_size)
 
     def prefill(params, batch_in, s_max: Optional[int] = None):
         tokens = batch_in["tokens"]
@@ -367,8 +374,10 @@ def build_model(cfg: ModelConfig, pcfg: ParallelConfig, *, batch: int,
         new_pos = pos + C
         # pad tokens beyond last_index are dead: keep them out of MoE
         # routing/capacity (their K/V writes are masked by cache_len anyway)
+        # and out of SSM recurrent-state updates (state has no cache_len to
+        # mask behind — pad tokens would fold in permanently)
         vmask = None
-        if cfg.is_moe and last_index is not None:
+        if (cfg.is_moe or cfg.ssm is not None) and last_index is not None:
             li = jnp.asarray(last_index, jnp.int32)
             vmask = jnp.arange(C)[None, :] <= (li[..., None] if li.ndim
                                                else li)

@@ -93,8 +93,11 @@ def _apply_one_layer(x: jnp.ndarray, p: Dict[str, Any], kind: str,
     diag: Dict[str, jnp.ndarray] = {}
     x = constrain(x, mode)
     if kind == "mamba":
+        # a prefix valid_mask (padded final prefill chunk) becomes a per-row
+        # valid length so pad tokens don't fold into the recurrent state
+        vlen = valid_mask.sum(axis=1) if valid_mask is not None else None
         h, new_state = M.mamba_block(norm(x, p["norm1"], cfg.norm), p["mamba"],
-                                     cfg, state=cache)
+                                     cfg, state=cache, valid_len=vlen)
         return x + h, new_state, diag
 
     is_global = (kind != "attn_local")
@@ -155,26 +158,32 @@ def init_stack(key: jax.Array, cfg: ModelConfig,
 
 
 def _layer_cache_init(kind: str, cfg: ModelConfig, batch: int, s_max: int,
-                      dtype) -> Any:
+                      dtype, clamp_window: bool = True) -> Any:
     if kind == "mamba":
         return M.init_state(batch, cfg, dtype)
     hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
     window = cfg.sliding_window
-    if kind == "attn_local" or (window and not cfg.global_attn_every):
+    if clamp_window and (kind == "attn_local"
+                         or (window and not cfg.global_attn_every)):
         s_max = min(s_max, window)  # ring buffer for pure-SWA caches
     return A.AttnCache(jnp.zeros((batch, s_max, hkv, hd), dtype),
                        jnp.zeros((batch, s_max, hkv, hd), dtype))
 
 
-def init_stack_cache(cfg: ModelConfig, batch: int, s_max: int, dtype) -> Dict[str, Any]:
+def init_stack_cache(cfg: ModelConfig, batch: int, s_max: int, dtype,
+                     clamp_window: bool = True) -> Dict[str, Any]:
+    """``clamp_window=False`` keeps every attention leaf at full ``s_max``
+    even for sliding-window layers (the serve engine's paged mode: windows
+    are then enforced by ring-index arithmetic / masks, not by storage)."""
     pattern, n_steps, lead = layer_pattern(cfg)
     def one(kind):
-        c = _layer_cache_init(kind, cfg, batch, s_max, dtype)
+        c = _layer_cache_init(kind, cfg, batch, s_max, dtype, clamp_window)
         return jax.tree.map(lambda x: jnp.broadcast_to(x, (n_steps,) + x.shape), c)
     cache: Dict[str, Any] = {
         "blocks": {f"sub{j}": one(pattern[j]) for j in range(len(pattern))}}
     if lead:
-        cache["lead"] = [_layer_cache_init("dense", cfg, batch, s_max, dtype)
+        cache["lead"] = [_layer_cache_init("dense", cfg, batch, s_max, dtype,
+                                           clamp_window)
                          for _ in range(lead)]
     return cache
 
@@ -316,11 +325,14 @@ def init_hybrid_cache(cfg: ModelConfig, batch: int, s_max: int, dtype):
 
 def run_hybrid(x: jnp.ndarray, params, cfg: ModelConfig, pcfg: ParallelConfig,
                *, mode: str, cache=None, cache_len=None, q_offset=0,
-               mesh=None, constrain=lambda x, mode="none": x) -> Tuple[jnp.ndarray, Any, Dict]:
+               mesh=None, constrain=lambda x, mode="none": x,
+               continue_prefill: bool = False,
+               valid_mask=None) -> Tuple[jnp.ndarray, Any, Dict]:
     per = cfg.attn_every
     n_groups = cfg.num_layers // per
     rem = cfg.num_layers - n_groups * per
     shared = params["shared"]
+    vlen = valid_mask.sum(axis=1) if valid_mask is not None else None
 
     def group_step(carry, inp):
         x = carry
@@ -332,7 +344,8 @@ def run_hybrid(x: jnp.ndarray, params, cfg: ModelConfig, pcfg: ParallelConfig,
             c_i = (jax.tree.map(lambda t: t[i], c_grp["mamba"])
                    if c_grp is not None else None)
             h, nm = M.mamba_block(norm(x, p_i["norm1"], cfg.norm),
-                                  p_i["mamba"], cfg, state=c_i)
+                                  p_i["mamba"], cfg, state=c_i,
+                                  valid_len=vlen)
             x = x + h
             new_m.append(nm)
         # shared attention(+MLP) block — same weights every group
@@ -341,7 +354,8 @@ def run_hybrid(x: jnp.ndarray, params, cfg: ModelConfig, pcfg: ParallelConfig,
         h, nc_a = A.attention_block(h, shared["attn"], cfg, causal=True,
                                     q_offset=q_offset, cache=c_a,
                                     cache_len=cache_len,
-                                    attn_chunk=pcfg.attn_chunk)
+                                    attn_chunk=pcfg.attn_chunk,
+                                    continue_prefill=continue_prefill)
         x = x + h
         x = x + mlp(norm(x, shared["norm2"], cfg.norm), shared["mlp"], cfg.act)
         new_cache = None
@@ -371,7 +385,7 @@ def run_hybrid(x: jnp.ndarray, params, cfg: ModelConfig, pcfg: ParallelConfig,
         c_i = cache["tail"][i] if cache is not None else None
         p_i = params["tail"][i]
         h, nt = M.mamba_block(norm(x, p_i["norm1"], cfg.norm), p_i["mamba"],
-                              cfg, state=c_i)
+                              cfg, state=c_i, valid_len=vlen)
         x = x + h
         new_tail.append(nt)
     if cache is not None and rem:

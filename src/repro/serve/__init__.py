@@ -1,6 +1,7 @@
 """repro.serve — continuous-batching serving engine (see README.md)."""
 from repro.serve.arrivals import (AdmissionQueue, VirtualClock, WallClock,
-                                  load_trace, merge_requests,
+                                  bursty_requests, load_trace,
+                                  long_context_requests, merge_requests,
                                   poisson_requests, split_seeds,
                                   trace_requests)
 from repro.serve.engine import (ENGINE_ROLES, EngineConfig, ServeEngine,
@@ -10,6 +11,8 @@ from repro.serve.frontend import AdmissionFront
 from repro.serve.kvstore import HandoffRecord, KVOwner
 from repro.serve.metrics import (RequestRecord, ServeMetrics, aggregate_fleet,
                                  percentiles)
+from repro.serve.statestore import (SequenceStateStore, SlotStateStore,
+                                    make_state_store)
 from repro.serve.stepcore import StepCore
 from repro.serve.paging import (NULL_BLOCK, BlockAllocator, blocks_for_tokens,
                                 copy_block, gather_prefix_blocks,
@@ -33,12 +36,16 @@ __all__ = [
     "ROUTING_POLICIES",
     "Request", "RequestRecord", "RequestState", "RequestStatus",
     "ResidencyCache", "ResidencyDecision",
-    "ServeEngine", "ServeMetrics", "StepCore", "TierCostModel",
+    "SequenceStateStore", "ServeEngine", "ServeMetrics", "SlotStateStore",
+    "StepCore", "TierCostModel",
     "VirtualClock", "WallClock",
     "aggregate_fleet",
-    "blocks_for_tokens", "copy_block", "engine_config_for",
+    "blocks_for_tokens", "bursty_requests", "copy_block",
+    "engine_config_for",
     "gather_prefix_blocks", "greedy_verify", "load_trace",
-    "make_paged_pool", "make_proposer", "merge_requests", "nucleus_mask",
+    "long_context_requests",
+    "make_paged_pool", "make_proposer", "make_state_store",
+    "merge_requests", "nucleus_mask",
     "percentiles", "poisson_requests", "rejection_verify", "sample_np",
     "sample_tokens", "split_seeds", "trace_requests", "truncated_probs_np",
     "write_chunk_blocks",

@@ -114,6 +114,73 @@ def poisson_requests(n: int, *, rate: float, vocab_size: int,
     return out
 
 
+def long_context_requests(n: int, *, vocab_size: int, max_seq_len: int,
+                          max_new_tokens: int, rate: float = 0.0,
+                          long_frac: float = 0.5, short_len: int = 32,
+                          seed: int = 0, rid_base: int = 0,
+                          eos_id: Optional[int] = None) -> List[Request]:
+    """A long-context mix: ``long_frac`` of the requests carry prompts
+    drawn near the pool ceiling (uniform in ``[max_seq_len // 2,
+    max_seq_len - max_new_tokens]``), the rest are short (``short_len``)
+    interactive prompts.  Long prompts dominate state-pool residency while
+    the short ones queue behind them — the regime that exercises
+    sliding-window clamping (prompts far beyond the window) and state-pool
+    admission pressure.  Prompt lengths are intentionally *not* rounded to
+    chunk or block multiples, so partial final chunks are always present.
+    """
+    if not 0.0 <= long_frac <= 1.0:
+        raise ValueError("long_frac must be in [0, 1]")
+    rng = np.random.default_rng(seed)
+    hi = max(max_seq_len - max_new_tokens, 1)
+    lo = max(min(max_seq_len // 2, hi - 1), 1)
+    t = 0.0
+    out: List[Request] = []
+    for i in range(n):
+        if rate > 0:
+            t += float(rng.exponential(1.0 / rate))
+        if rng.random() < long_frac:
+            plen = int(rng.integers(lo, hi + 1))
+        else:
+            plen = max(min(short_len, hi), 1)
+        toks = rng.integers(0, vocab_size, (plen,)).astype(np.int32)
+        out.append(Request(rid=rid_base + i, tokens=toks,
+                           max_new_tokens=max_new_tokens,
+                           arrival_time=t, eos_id=eos_id))
+    return out
+
+
+def bursty_requests(n: int, *, vocab_size: int, prompt_len: int,
+                    max_new_tokens: int, burst_size: int = 4,
+                    burst_gap: float = 1.0, seed: int = 0,
+                    rid_base: int = 0,
+                    prompt_len_range: Optional[Tuple[int, int]] = None,
+                    eos_id: Optional[int] = None) -> List[Request]:
+    """Bursty arrivals: requests land in bursts of ``burst_size`` that
+    arrive simultaneously, with ``burst_gap`` seconds of silence between
+    bursts.  Each burst oversubscribes slots/blocks at one instant — the
+    preemption + re-admission regime a smooth Poisson stream at the same
+    mean rate rarely triggers — while the gaps let the engine drain, so
+    queueing does not grow without bound over the trace."""
+    if burst_size < 1:
+        raise ValueError("burst_size must be >= 1")
+    if burst_gap < 0:
+        raise ValueError("burst_gap must be >= 0")
+    rng = np.random.default_rng(seed)
+    out: List[Request] = []
+    for i in range(n):
+        t = (i // burst_size) * burst_gap
+        if prompt_len_range is not None:
+            lo, hi = prompt_len_range
+            plen = int(rng.integers(lo, hi + 1))
+        else:
+            plen = prompt_len
+        toks = rng.integers(0, vocab_size, (plen,)).astype(np.int32)
+        out.append(Request(rid=rid_base + i, tokens=toks,
+                           max_new_tokens=max_new_tokens,
+                           arrival_time=t, eos_id=eos_id))
+    return out
+
+
 def split_seeds(seed: int, n: int) -> List[int]:
     """n statistically independent child seeds spawned from one root seed
     (``numpy.random.SeedSequence.spawn``) — one per replica / sub-stream,

@@ -78,11 +78,22 @@ arrivals); freed slots are immediately re-admitted from the queue
 (moved_units, drops, max_load), KV-block occupancy, and per-request
 TTFT/TPOT/e2e flow into ``ServeMetrics``.
 
-Scope (v1): decoder-only transformer families (dense and MoE); the mesh may
-shard the model/expert axis but not the batch axis.  Paged mode further
-requires every cache leaf to expose a full-length KV axis (no
-window-clamped ring buffers).  SSM/hybrid state caches, encoder-decoder,
-and prefix-embedding models are follow-ons.
+Per-sequence state is owned by a ``serve/statestore.py``
+``SequenceStateStore``: ``KVOwner`` (token-indexed K/V, slab or paged —
+sliding-window layers are served paged as ring buffers, see kvstore.py)
+for transformer families, and the slotted ``SlotStateStore`` for SSM and
+hybrid families, whose recurrent state is fixed-size per slot.  The
+engine addresses state only through the protocol (admission planning,
+begin-prefill scratch reset, the write/gather/release primitives), so
+scheduling — continuous batching, chunked prefill, preemption-by-
+recompute — is identical across state kinds.
+
+Scope: decoder-only transformer (dense and MoE), SSM, and hybrid
+families; the mesh may shard the model/expert axis but not the batch
+axis.  Encoder-decoder and prefix-embedding models are follow-ons; split
+roles, prefix sharing, and speculative decoding remain paged-transformer
+features (EngineConfig.validate + the ring/SSM checks here spell out
+each combination's status).
 """
 from __future__ import annotations
 
@@ -102,8 +113,9 @@ from repro.kernels.paged_attention.ops import largest_block_divisor
 from repro.models import attention as attention_dispatch
 from repro.serve.arrivals import WallClock
 from repro.serve.frontend import AdmissionFront
-from repro.serve.kvstore import HandoffRecord, KVOwner
+from repro.serve.kvstore import HandoffRecord
 from repro.serve.metrics import ServeMetrics
+from repro.serve.statestore import make_state_store
 from repro.serve.paging import NULL_BLOCK, blocks_for_tokens
 from repro.serve.rebalance import ExpertRebalancer
 from repro.serve.request import Request, RequestState, RequestStatus
@@ -179,6 +191,25 @@ class EngineConfig:
     prefetch_policy: str = "predictive"
 
     def __post_init__(self):
+        self.validate()
+
+    def validate(self) -> "EngineConfig":
+        """Every model-independent legality check, in one place.
+
+        ``__post_init__`` runs this on construction, so an ``EngineConfig``
+        that exists is valid; call sites that build configs field-by-field
+        (flag plumbing, tests) can also invoke it directly.  Model-
+        *dependent* checks (MoE-only knobs against non-MoE models, replica
+        slot counts, sliding-window ring restrictions, family/mesh
+        support) live in ``ServeEngine.__init__``/``make_state_store``,
+        where the model is in hand.  Returns ``self`` for chaining."""
+        # --- shapes ---
+        if self.max_slots < 1 or self.max_seq_len < 1:
+            raise ValueError("max_slots and max_seq_len must be >= 1")
+        if self.prefill_chunk < 1 or self.chunks_per_step < 1:
+            raise ValueError("prefill_chunk and chunks_per_step must be "
+                             ">= 1")
+        # --- role ---
         if self.role not in ENGINE_ROLES:
             raise ValueError(f"unknown engine role {self.role!r}; choose "
                              f"one of {ENGINE_ROLES}")
@@ -186,12 +217,19 @@ class EngineConfig:
             raise ValueError(
                 "prefill/decode engine roles hand KV off through the paged "
                 "block machinery; they require EngineConfig.paged=True")
+        # --- paged pool ---
+        if self.paged and self.kv_block_size < 1:
+            raise ValueError("kv_block_size must be >= 1")
+        if self.num_kv_blocks < 0:
+            raise ValueError("num_kv_blocks must be >= 0 (0 = slab-parity "
+                             "worst case)")
         if self.prefix_sharing and not self.paged:
             raise ValueError("prefix_sharing requires the paged KV pool "
                              "(EngineConfig.paged=True)")
         if self.fused_paged_attention and not self.paged:
             raise ValueError("fused_paged_attention is the paged decode "
                              "kernel; it requires EngineConfig.paged=True")
+        # --- speculative decoding ---
         if self.speculative_k < 0:
             raise ValueError("speculative_k must be >= 0")
         if self.speculative_k > 0 and not self.paged:
@@ -199,8 +237,12 @@ class EngineConfig:
                              "paged KV pool (rollback rides the block "
                              "machinery); it requires EngineConfig."
                              "paged=True")
+        # --- sampling ---
+        if self.temperature < 0 or self.top_k < 0:
+            raise ValueError("temperature and top_k must be >= 0")
         if not 0.0 < self.top_p <= 1.0:
             raise ValueError("top_p must be in (0, 1]")
+        # --- MoE serving knobs ---
         known = ("harmoeny", "round_robin", "even_split", "static_opt")
         if self.moe_policy is not None and self.moe_policy not in known:
             raise ValueError(f"unknown moe_policy {self.moe_policy!r}; "
@@ -217,6 +259,7 @@ class EngineConfig:
             raise ValueError(
                 f"unknown prefetch_policy {self.prefetch_policy!r}; choose "
                 f"one of {PREFETCH_POLICIES}")
+        return self
 
 
 def paged_pool_len(max_seq_len: int, prefill_chunk: int,
@@ -240,25 +283,19 @@ class ServeEngine:
     def __init__(self, model, params, ecfg: EngineConfig, *, mesh=None,
                  clock=None):
         cfg = model.cfg
-        if cfg.family in ("ssm", "hybrid") or cfg.is_encoder_decoder \
-                or cfg.num_prefix_embeddings:
+        if cfg.is_encoder_decoder or cfg.num_prefix_embeddings:
             raise NotImplementedError(
-                f"serve engine v1 supports decoder-only transformer "
-                f"families; got {cfg.name} ({cfg.family})")
+                f"serve engine supports decoder-only transformer, SSM, "
+                f"and hybrid families; got {cfg.name} ({cfg.family})")
         extra = 1
         for ax, n in model.mesh_shape.sizes.items():
             if ax != "model":
                 extra *= n
         if extra > 1:
             raise NotImplementedError(
-                "serve engine v1 shards the model/expert axis only; run "
+                "serve engine shards the model/expert axis only; run "
                 "with data=1 (data-parallel serving is an open item)")
-        if ecfg.prefill_chunk < 1 or ecfg.max_slots < 1 \
-                or ecfg.chunks_per_step < 1:
-            raise ValueError(
-                "prefill_chunk, max_slots, and chunks_per_step must be >= 1")
-        if ecfg.temperature < 0 or ecfg.top_k < 0:
-            raise ValueError("temperature and top_k must be >= 0")
+        ecfg.validate()        # field-by-field call sites bypass init
 
         self.model = model
         self.params = params
@@ -350,8 +387,6 @@ class ServeEngine:
         B, C = ecfg.max_slots, ecfg.prefill_chunk
         if self._paged:
             bs = ecfg.kv_block_size
-            if bs < 1:
-                raise ValueError("kv_block_size must be >= 1")
             # prefill writes whole padded chunks, so a slot's chain must
             # cover the chunk-rounded logical length (one extra chunk with
             # prefix sharing — see paged_pool_len)
@@ -359,26 +394,47 @@ class ServeEngine:
                                    ecfg.speculative_k)
             bps = blocks_for_tokens(s_pad, bs)
             w = cfg.sliding_window or 0
-            if 0 < w < bps * bs:
-                # paged decode attends window-free over the logical range;
-                # a window shorter than the block-rounded pool length
-                # (the attention layer's L_max) could bind and be silently
-                # dropped — refuse with the fix spelled out rather than
-                # rely on the structural leaf rejection
-                raise ValueError(
-                    f"paged KV serves window-free attention, but "
-                    f"{cfg.name} has sliding_window={w} < the "
-                    f"block-rounded pool length "
-                    f"{bps * bs}: windowed layers would "
-                    f"lose their window. Shrink max_seq_len/prefill_chunk/"
-                    f"kv_block_size so the pool fits the window, or use "
-                    f"the slab ring-buffer pool")
+            if 0 < w <= bps * bs:
+                # window-clamped layers are served as ring buffers
+                # (kvstore ring_mods + paged_ring_decode_attention):
+                # logical positions wrap modulo M = round_up(window, bs).
+                # Ring contents depend on a sequence's absolute length,
+                # and the ring gather is single-query — so the features
+                # that re-read or hand off block contents are out.
+                M = round_up(w, bs)
+                blockers = []
+                if ecfg.prefill_chunk > M:
+                    blockers.append(
+                        f"prefill_chunk {ecfg.prefill_chunk} > ring "
+                        f"{M} tokens (a chunk must never self-overlap "
+                        f"a ring slot; shrink prefill_chunk)")
+                if ecfg.speculative_k > 0:
+                    blockers.append("speculative verify is multi-query; "
+                                    "the ring gather is single-query")
+                if self._sharing:
+                    blockers.append("prefix sharing keys blocks by "
+                                    "content, but a ring slot's content "
+                                    "depends on absolute sequence length")
+                if ecfg.fused_paged_attention:
+                    blockers.append("the fused paged kernel has no ring "
+                                    "arithmetic")
+                if ecfg.role != "unified":
+                    blockers.append("KV handoff replays absolute-"
+                                    "position scatters, not ring writes")
+                if blockers:
+                    raise ValueError(
+                        f"{cfg.name} (sliding_window={w}) serves paged "
+                        f"through the window ring buffer, which rejects: "
+                        + "; ".join(blockers))
         else:
             s_pad = ecfg.max_seq_len
-        # --- KV pool + allocator + movement (serve/kvstore.py) ---
-        self.kv = KVOwner(model, ecfg, s_pad=s_pad, ctx=self._ctx)
+        # --- sequence-state store (serve/statestore.py): KVOwner for
+        # transformer K/V, SlotStateStore for SSM/hybrid recurrent state —
+        # the engine talks only to the SequenceStateStore protocol ---
+        self.kv = make_state_store(model, ecfg, s_pad=s_pad, ctx=self._ctx)
         # --- admission/scheduling front (serve/frontend.py) ---
         self.front = AdmissionFront(B)
+        self._register_sections()
 
         self.pos = np.zeros((B,), np.int32)      # per-slot sequence length
         self.tok = np.zeros((B,), np.int32)      # per-slot last token
@@ -642,7 +698,10 @@ class ServeEngine:
                          can_admit_fn=self._can_admit, place_fn=self._place)
 
     # ------------------------------------------------------------------
-    # preemption (paged): reclaim the youngest holder's blocks, recompute
+    # preemption: drop a request's state, recompute on re-admission.
+    # Allocator pressure triggers it in paged mode (reclaim the youngest
+    # holder's blocks); any store supports it — a slot store's state is
+    # rebuilt token-exactly by re-prefilling prompt + committed output.
     # ------------------------------------------------------------------
     def _youngest_holder(self) -> Optional[RequestState]:
         cands = [st for st in self.state_by_slot if st is not None]
@@ -650,8 +709,7 @@ class ServeEngine:
 
     def _preempt(self, st: RequestState) -> None:
         s = st.slot
-        self._alloc.release(st.req.rid)
-        self.block_table[s, :] = NULL_BLOCK
+        self.kv.release(st.req.rid, s)
         self.active[s] = False
         self.pos[s] = 0
         self.tok[s] = 0
@@ -718,6 +776,10 @@ class ServeEngine:
         writes all k + 1 window positions unconditionally; plain decode is
         the k = 0 case) — grow incrementally, oldest requests first so
         scarce blocks go to the work closest to finishing."""
+        if self.kv.ring_full_chain:
+            # every KV leaf wraps the fixed ring: chains were allocated
+            # whole at admission and never grow
+            return
         bs = self.ecfg.kv_block_size
         span = self.ecfg.speculative_k
         order = sorted(np.nonzero(self.active)[0],
@@ -786,6 +848,11 @@ class ServeEngine:
                 if not self._pf_queue:
                     break
                 self._pf = self._pf_queue.popleft()
+                # recurrent-state stores reset the scratch to the pristine
+                # zero state here: chunked prefill *carries* state across
+                # chunk calls (that is prefill continuation), so a new
+                # request must not inherit the previous one's fold
+                self.kv.begin_prefill()
             st = self._pf
             t0 = time.perf_counter()
             if self._sharing and st.prefill_pos > 0 and not st.prefix_loaded:
@@ -810,9 +877,11 @@ class ServeEngine:
                     np.int32(n - 1), key, self._replica_ids)
                 if self._paged:
                     # finished chunk -> straight into the allocated blocks
+                    # (valid_to diverts ring-leaf pad writes to the null
+                    # block so they cannot clobber in-window ring slots)
                     self.pool = self._write_fn(
                         self.pool, self._scratch, self._bt_row(st),
-                        np.int32(start))
+                        np.int32(start), np.int32(start + n))
                 jax.block_until_ready(logits)
             dt = time.perf_counter() - t0
             st.prefill_pos += n
@@ -834,9 +903,17 @@ class ServeEngine:
             did = True
             if st.prefill_done:
                 if st.resumed:
-                    # recompute finished: the re-prefill rebuilt K/V for
-                    # prompt + output[:-1]; the pending last token decodes
-                    # next step.  No TTFT restamp, no logits consumed.
+                    # recompute finished: the re-prefill rebuilt the state
+                    # for prompt + output[:-1]; the pending last token
+                    # decodes next step.  No TTFT restamp, no logits
+                    # consumed.  Paged chains were written chunk-by-chunk
+                    # above; a slab/slot store commits its rebuilt
+                    # scratch state to the slot now — without this the
+                    # resumed request would decode off the stale slot.
+                    if not self._paged:
+                        with self._ctx():
+                            self.pool = self._write_fn(
+                                self.pool, self._scratch, np.int32(st.slot))
                     self._activate(st, L, st.output[-1])
                     self._pf = None
                     continue
@@ -1215,10 +1292,10 @@ class ServeEngine:
         self.tok[s] = 0
         self.state_by_slot[s] = None
         self.free_slots.append(s)
-        if self._paged:
-            # immediate reclamation: blocks return to the free list now
-            self._alloc.release(st.req.rid)
-            self.block_table[s, :] = NULL_BLOCK
+        # immediate reclamation: paged blocks return to the free list now
+        # (slab/slot stores drop nothing — the row is overwritten whole at
+        # the next admission)
+        self.kv.release(st.req.rid, s)
 
     # ------------------------------------------------------------------
     def reset_metrics(self) -> None:
@@ -1231,6 +1308,7 @@ class ServeEngine:
         if self._in_flight():
             raise RuntimeError("cannot reset metrics while work is in flight")
         self.metrics = ServeMetrics()
+        self._register_sections()
         self.slot_history.clear()
         if self._paged:
             self._evict0 = self._alloc.evictions
@@ -1271,7 +1349,7 @@ class ServeEngine:
                     self.pool = self._write_fn(
                         self.pool, self._scratch,
                         np.full((self.blocks_per_slot,), NULL_BLOCK,
-                                np.int32), np.int32(0))
+                                np.int32), np.int32(0), np.int32(C))
                 else:
                     self.pool = self._write_fn(self.pool, self._scratch,
                                                np.int32(0))
@@ -1375,6 +1453,20 @@ class ServeEngine:
                 raise RuntimeError(f"serve engine exceeded {max_steps} steps "
                                    f"with work remaining")
         return self.report()
+
+    def _register_sections(self) -> None:
+        """Engine-owned report sections, attached through the metrics
+        section convention (metrics.py) — re-registered whenever the
+        metrics object is replaced (reset_metrics)."""
+        self.metrics.register_section("state_pool", self._state_pool_section)
+
+    def _state_pool_section(self) -> Dict[str, Any]:
+        """The sequence-state store's report section: pool kind plus
+        store-specific occupancy/counters (``SequenceStateStore.stats``),
+        with the scheduler-side pressure counters that give them meaning."""
+        sec = self.kv.stats()
+        sec["preemptions"] = self.metrics.preemptions
+        return sec
 
     def report(self) -> Dict[str, Any]:
         if self._paged:
@@ -1571,34 +1663,27 @@ def engine_config_for(cfg, *, max_slots: int, prompt_len: int,
     """Derive serving shapes from a workload: pool length covers prompt +
     generation, the prefill chunk divides the (padded) prompt, and the
     padded prompt fits every layer's KV capacity (sliding-window layers
-    clamp their cache to the window).  Paged mode needs every layer's KV
-    at the chunk-padded pool length — one chunk longer with prefix
-    sharing, whose prefill restarts are not chunk-aligned — so that too is
-    validated here against the window, with an actionable error instead of
-    the engine's late structural rejection."""
+    clamp their *slab* cache to the window; the paged pool serves them as
+    ring buffers instead, so only the chunk-vs-ring bound applies there).
+    Model-independent legality lives in ``EngineConfig.validate()``,
+    which the returned config has already passed."""
     chunk = prefill_chunk or min(max(prompt_len, 1), 32)
     window = cfg.sliding_window or 0
     pad = round_up(prompt_len, chunk)
-    if window and pad > window:
+    if window and not paged and pad > window:
+        # slab prefill writes into the window-clamped scratch; the paged
+        # pool has no such limit (windowed leaves wrap a ring of
+        # round_up(window, kv_block_size) positions — see kvstore.py)
         raise ValueError(
             f"padded prompt {pad} exceeds the sliding window {window}; "
-            f"chunked prefill must fit the window-clamped KV cache")
+            f"slab chunked prefill must fit the window-clamped KV cache "
+            f"(the paged ring buffer lifts this — pass paged=True)")
+    if window and paged and chunk > round_up(window, kv_block_size):
+        raise ValueError(
+            f"prefill_chunk {chunk} exceeds the sliding-window ring of "
+            f"{round_up(window, kv_block_size)} tokens; one chunk must "
+            f"never self-overlap a ring slot — shrink prefill_chunk")
     max_seq = max(prompt_len + max_new_tokens, pad)
-    if paged and window:
-        s_pad = paged_pool_len(max_seq, chunk, prefix_sharing,
-                               speculative_k)
-        l_max = blocks_for_tokens(s_pad, kv_block_size) * kv_block_size
-        if l_max > window:
-            raise ValueError(
-                f"paged pool needs every layer's KV window-free at the "
-                f"block-rounded padded length {l_max}"
-                + (" (prefix sharing pads one extra prefill chunk)"
-                   if prefix_sharing else "")
-                + (" (speculative decoding pads k extra tokens)"
-                   if speculative_k else "")
-                + f", but the sliding window clamps caches to {window}; "
-                f"shrink prompt+generation, prefill_chunk, or "
-                f"kv_block_size")
     return EngineConfig(
         max_slots=max_slots,
         max_seq_len=max_seq,

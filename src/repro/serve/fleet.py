@@ -49,6 +49,7 @@ from repro.serve.arrivals import AdmissionQueue
 from repro.serve.engine import ServeEngine
 from repro.serve.kvstore import HandoffRecord
 from repro.serve.metrics import aggregate_fleet
+from repro.serve.metrics import section as metrics_section
 from repro.serve.request import Request
 
 ROUTING_POLICIES = ("load", "prefix_affinity", "round_robin")
@@ -222,7 +223,12 @@ class FleetRouter:
     def report(self) -> Dict[str, Any]:
         reps = [e.report() for e in self.engines]
         routed = len(self._decisions)
-        fleet: Dict[str, Any] = {
+
+        # the "fleet" block is a report section like any other subsystem's
+        # (metrics.py "Section convention"); it attaches through the same
+        # helper the engine's state_pool and the metrics built-ins use
+        def fleet_section() -> Dict[str, Any]:
+            return {
             "n_replicas": len(self.engines),
             "disaggregated": self.disaggregated,
             "ticks": self._ticks,
@@ -253,5 +259,8 @@ class FleetRouter:
                 "bytes": self._handoff_bytes,
                 "pending": len(self._pending),
             },
-        }
-        return {"fleet": fleet, "replica_reports": reps}
+            }
+
+        out: Dict[str, Any] = {"replica_reports": reps}
+        metrics_section(out, "fleet", fleet_section)
+        return out

@@ -117,13 +117,28 @@ class HandoffRecord:
 
 
 class KVOwner:
-    """Paged-or-slab KV pool + allocator + jitted KV movement.
+    """Paged-or-slab KV pool + allocator + jitted KV movement: the
+    token-indexed implementation of ``statestore.SequenceStateStore``.
 
     Construction mirrors what ``ServeEngine.__init__`` used to inline:
     structural axis discovery, pool/scratch init (under the engine's mesh
     context), and one jitted entry per movement primitive.  ``pool`` and
     ``scratch`` are plain mutable attributes the engine's step loop
     reassigns; the allocator and block table are owned here.
+
+    Sliding-window models are served paged as **ring buffers**: the pool
+    and scratch are built over the *unclamped* cache
+    (``init_cache(..., clamp_window=False)`` — chunked prefill attends
+    through the full-length scratch, where the window is enforced by the
+    attention mask), and each window-clamped leaf gets a per-leaf ring
+    modulus ``M = round_up(window, block_size)`` (``ring_mods``): logical
+    position ``p`` lives at ring slot ``p % M`` of the slot's chain, both
+    in the prefill scatter (``write_chunk_blocks``) and the decode
+    write/gather (``paged_ring_decode_attention``).  When *every* KV leaf
+    is windowed the chain itself shrinks to ``M / block_size`` blocks —
+    fixed-size per slot, allocated whole at admission
+    (``ring_full_chain``) — which is where the paged pool's memory win
+    over the slab comes from for long-context windowed serving.
     """
 
     def __init__(self, model, ecfg, *, s_pad: int, ctx: Callable[[], Any]):
@@ -137,12 +152,36 @@ class KVOwner:
         self.block_table: Optional[np.ndarray] = None
         self.gather_fn = None
         self.copy_fn = None
+        self.ring = False
+        self.ring_full_chain = False
+        self.ring_mod = 0
         if self.paged:
             bs = ecfg.kv_block_size
             if bs < 1:
                 raise ValueError("kv_block_size must be >= 1")
             self.s_pad = s_pad
             self.blocks_per_slot = blocks_for_tokens(s_pad, bs)
+            # ring discovery: a leaf is windowed iff clamping changes its
+            # KV length at s_pad.  Windowed leaves wrap positions modulo
+            # M; with every leaf windowed the whole chain shrinks to M.
+            window = model.cfg.sliding_window or 0
+            M = round_up(window, bs) if window else 0
+            clamped = jax.eval_shape(lambda: model.init_cache(1, s_pad))
+            full = jax.eval_shape(
+                lambda: model.init_cache(1, s_pad, False))
+            self.ring_mods = jax.tree.map(
+                lambda c, f, ax: (M if ax >= 0
+                                  and c.shape[ax] != f.shape[ax] else 0),
+                clamped, full, self.seq_axes)
+            n_seq = sum(1 for a in jax.tree.leaves(self.seq_axes) if a >= 0)
+            n_ring = sum(1 for m in jax.tree.leaves(self.ring_mods) if m)
+            self.ring = n_ring > 0
+            self.ring_mod = M if self.ring else 0
+            self.ring_full_chain = self.ring and n_ring == n_seq
+            if self.ring_full_chain:
+                # every leaf wraps: a chain of M/bs blocks serves any
+                # logical length — fixed-size per slot, like an SSM slot
+                self.blocks_per_slot = M // bs
             usable = ecfg.num_kv_blocks or B * self.blocks_per_slot
             if usable < self.blocks_per_slot:
                 raise ValueError(
@@ -154,16 +193,21 @@ class KVOwner:
                                        NULL_BLOCK, np.int32)
             self.kv_capacity = s_pad
             with self._ctx():
-                # init_paged_cache validates pageability at s_pad (rejects
-                # window-clamped ring buffers and SSM state)
+                # the pool/scratch are built over the unclamped cache
+                # (assert_pageable validates full KV axes at s_pad; the
+                # window is enforced by ring_mods + the attention mask,
+                # never by silent truncation)
                 self.pool = model.init_paged_cache(
                     self.alloc.num_blocks, bs, s_pad,
-                    seq_axes=self.seq_axes)
-                self.scratch = model.init_cache(1, s_pad)
+                    seq_axes=self.seq_axes, clamp_window=False)
+                self.scratch = model.init_cache(1, s_pad, False)
+            ring_mods = self.ring_mods if self.ring else None
             self.write_fn = jax.jit(
-                lambda pool, scratch, bt_row, start: write_chunk_blocks(
+                lambda pool, scratch, bt_row, start, valid_to:
+                write_chunk_blocks(
                     pool, scratch, bt_row, start, chunk=C, block_size=bs,
-                    seq_axes=self.seq_axes))
+                    seq_axes=self.seq_axes, ring_mods=ring_mods,
+                    valid_to=valid_to))
             if self.sharing:
                 self.gather_fn = jax.jit(
                     lambda pool, scratch, bt_row, n: gather_prefix_blocks(
@@ -188,6 +232,38 @@ class KVOwner:
                                                        self.batch_axes))
 
     # ------------------------------------------------------------------
+    # SequenceStateStore protocol (serve/statestore.py)
+    # ------------------------------------------------------------------
+    def begin_prefill(self) -> None:
+        """Token-indexed scratch needs no reset: stale positions sit past
+        ``cache_len`` and are dead by masking."""
+
+    def release(self, rid: int, slot: int) -> None:
+        """Free request ``rid``'s blocks and park its table row on the
+        null block (no-op for the slab: its row is overwritten whole at
+        the next admission)."""
+        if self.paged:
+            self.alloc.release(rid)
+            self.block_table[slot, :] = NULL_BLOCK
+
+    def stats(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {
+            "kind": "paged" if self.paged else "slab",
+        }
+        if self.paged:
+            out["kv_block_size"] = self.ecfg.kv_block_size
+            out["blocks_per_slot"] = self.blocks_per_slot
+            out["usable_blocks"] = self.alloc.usable_blocks
+            out["blocks_in_use"] = self.alloc.blocks_in_use
+            out["window_ring"] = self.ring
+            if self.ring:
+                out["ring_tokens"] = self.ring_mod
+                out["ring_full_chain"] = self.ring_full_chain
+        else:
+            out["slots"] = self.ecfg.max_slots
+        return out
+
+    # ------------------------------------------------------------------
     # admission planning (block math; the engine owns slot scheduling)
     # ------------------------------------------------------------------
     def share_plan(self, tokens, resumed: bool) -> Tuple[int, List[int],
@@ -207,6 +283,12 @@ class KVOwner:
         chunk-padded prefill writes."""
         C, bs = self.ecfg.prefill_chunk, self.ecfg.kv_block_size
         L = len(tokens)
+        if self.ring_full_chain:
+            # every KV leaf wraps the same fixed ring: a slot's chain is
+            # whole-or-nothing, allocated up front regardless of prompt
+            # length (sharing is rejected for windowed models — a ring
+            # slot's contents depend on the sequence's absolute length)
+            return 0, [], self.blocks_per_slot, False
         shared = self.alloc.match_prefix(tokens) if self.sharing else []
         P = len(shared) * bs
         cow_last = False
@@ -291,7 +373,8 @@ class KVOwner:
         with self._ctx():
             for start in range(0, pad_len, C):
                 self.pool = self.write_fn(self.pool, imp, bt_row,
-                                          np.int32(start))
+                                          np.int32(start),
+                                          np.int32(pad_len))
 
     # ------------------------------------------------------------------
     def jit_counts(self) -> Dict[str, int]:

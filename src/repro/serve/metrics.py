@@ -24,15 +24,40 @@ sub-dict (hit_rate, stall_units, swaps, prefetches, bytes_staged) from
 the residency manager's window counters.  ``report()`` is JSON-safe on
 an empty measurement window: percentile reductions over zero requests
 come back as ``None``, never NaN.
+
+**Section convention.**  Every optional subsystem block in a report —
+``speculative``, ``phases``, ``load_balance``, ``residency`` here;
+``state_pool`` from the engine; ``fleet`` from the router — attaches
+through one mechanism instead of ad-hoc conditional appends: a *section
+function* returns the section dict, or a falsy value to omit the section
+this window.  ``ServeMetrics.register_section(name, fn)`` registers one
+on a metrics object (the built-ins register themselves the same way at
+construction, so subsystem sections and core sections are
+indistinguishable in ``report()``); the module-level ``section(rep,
+name, fn)`` applies the identical rule to dicts assembled outside a
+``ServeMetrics`` (the engine's and the fleet router's reports).  The
+full schema is documented in serve/README.md ("Report schema").
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
 from repro.serve.request import RequestState
+
+# a report section provider: () -> the section dict, or falsy to omit
+SectionFn = Callable[[], Optional[Dict[str, Any]]]
+
+
+def section(rep: Dict[str, Any], name: str, fn: SectionFn) -> None:
+    """Attach ``fn()`` to ``rep`` under ``name`` iff non-empty — the one
+    convention every subsystem report section goes through (see module
+    docstring)."""
+    sec = fn()
+    if sec:
+        rep[name] = sec
 
 
 def percentiles(xs, ps=(50, 90, 99)) -> Dict[str, float]:
@@ -137,6 +162,23 @@ class ServeMetrics:
         self.residency: Optional[Dict[str, Any]] = None
         self._t_first_arrival: Optional[float] = None
         self._t_last_finish: float = 0.0
+        # --- report sections (module docstring "Section convention") ---
+        # name -> provider; report() attaches each non-empty result.  The
+        # built-in subsystem sections register through the same mechanism
+        # engine-side sections (state_pool) do.
+        self._sections: Dict[str, SectionFn] = {}
+        self.register_section("speculative", self._speculative_section)
+        self.register_section("phases", self._phases_section)
+        self.register_section("residency",
+                              lambda: self.residency
+                              and dict(self.residency))
+        self.register_section("load_balance", self._load_balance)
+
+    def register_section(self, name: str, fn: SectionFn) -> None:
+        """Register a report section provider (last registration per name
+        wins).  ``fn()`` runs at ``report()`` time; a falsy return omits
+        the section for this window."""
+        self._sections[name] = fn
 
     @property
     def empty(self) -> bool:
@@ -227,12 +269,27 @@ class ServeMetrics:
                 if total_prompt else None),
             "requests": [r.asdict() for r in recs],
         }
-        if self.spec_steps:
-            # the per-SLOT accounting is what isolates speculation from
-            # batching: plain decode spends exactly one slot-step per
-            # committed token, so tokens_per_step == 1.0 marks "no win"
-            # regardless of how many slots each wall-clock step batches
-            rep["speculative"] = {
+        if self.kv_blocks_in_use:
+            used = np.asarray(self.kv_blocks_in_use, np.float64)
+            rep["kv_blocks_in_use"] = {"mean": float(used.mean()),
+                                       "max": int(used.max())}
+            rep["kv_utilization"] = (float(used.mean())
+                                     / max(self.kv_blocks_total, 1))
+        if self.moe_diags:
+            rep["moe"] = {k: float(np.mean(v))
+                          for k, v in self.moe_diags.items()}
+        for name, fn in self._sections.items():
+            section(rep, name, fn)
+        return _json_safe(rep)
+
+    def _speculative_section(self) -> Optional[Dict[str, Any]]:
+        if not self.spec_steps:
+            return None
+        # the per-SLOT accounting is what isolates speculation from
+        # batching: plain decode spends exactly one slot-step per
+        # committed token, so tokens_per_step == 1.0 marks "no win"
+        # regardless of how many slots each wall-clock step batches
+        return {
                 "steps": self.spec_steps,
                 "slot_steps": self.spec_slot_steps,
                 "drafted": self.spec_drafted,
@@ -251,9 +308,12 @@ class ServeMetrics:
                 "steps_per_committed_token": (
                     self.spec_slot_steps / self.spec_committed
                     if self.spec_committed else None),
-            }
-        if self.phase_steps:
-            rep["phases"] = {
+        }
+
+    def _phases_section(self) -> Optional[Dict[str, Any]]:
+        if not self.phase_steps:
+            return None
+        return {
                 ph: {
                     "steps": self.phase_steps[ph],
                     "tokens": self.phase_tokens.get(ph, 0),
@@ -270,22 +330,7 @@ class ServeMetrics:
                         if self.phase_tokens.get(ph, 0) else None),
                 }
                 for ph in sorted(self.phase_steps)
-            }
-        if self.kv_blocks_in_use:
-            used = np.asarray(self.kv_blocks_in_use, np.float64)
-            rep["kv_blocks_in_use"] = {"mean": float(used.mean()),
-                                       "max": int(used.max())}
-            rep["kv_utilization"] = (float(used.mean())
-                                     / max(self.kv_blocks_total, 1))
-        if self.moe_diags:
-            rep["moe"] = {k: float(np.mean(v))
-                          for k, v in self.moe_diags.items()}
-        if self.residency is not None:
-            rep["residency"] = dict(self.residency)
-        lb = self._load_balance()
-        if lb:
-            rep["load_balance"] = lb
-        return _json_safe(rep)
+        }
 
     def _load_balance(self) -> Dict[str, Any]:
         """Paper §5 load metrics per phase, from the per-step vector

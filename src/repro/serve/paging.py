@@ -340,9 +340,13 @@ def assert_pageable(init_cache: Callable[[int, int], Any], s_ref: int,
                     seq_axes: Any) -> None:
     """Every cache leaf must expose a full-length KV axis at ``s_ref``.
 
-    Leaves clamped below ``s_ref`` (sliding-window ring buffers) or with no
-    KV axis at all (SSM state) evict/step in ways a block table cannot
-    express yet — reject them up front with the offending shape.
+    Leaves clamped below ``s_ref`` or with no KV axis at all (SSM state)
+    cannot be addressed through a block table — reject them up front with
+    the offending shape.  Window-clamped attention leaves are served paged
+    by building the pool over the *unclamped* cache
+    (``init_cache(..., clamp_window=False)``) and wrapping logical
+    positions into per-leaf rings (``ring_mods``); SSM state is served by
+    the slotted ``serve.statestore.SlotStateStore`` instead.
     """
     shapes = jax.eval_shape(lambda: init_cache(1, s_ref))
 
@@ -351,8 +355,9 @@ def assert_pageable(init_cache: Callable[[int, int], Any], s_ref: int,
             raise NotImplementedError(
                 f"cache leaf {leaf.shape} is not pageable: its KV-length "
                 f"axis is {'absent' if ax < 0 else 'clamped below'} "
-                f"s_max={s_ref} (window-clamped ring buffers and SSM state "
-                f"need a paged equivalent — ROADMAP follow-on)")
+                f"s_max={s_ref}; page window-clamped leaves via the "
+                f"unclamped cache + ring_mods, and serve SSM state from "
+                f"the slotted state pool (serve/statestore.py)")
     jax.tree.map(check, shapes, seq_axes)
 
 
@@ -380,7 +385,8 @@ def make_paged_pool(init_cache: Callable[[int, int], Any], s_ref: int,
 # ----------------------------------------------------------------------
 def write_chunk_blocks(pool: Any, scratch: Any, bt_row: jnp.ndarray,
                        start: jnp.ndarray, *, chunk: int, block_size: int,
-                       seq_axes: Any) -> Any:
+                       seq_axes: Any, ring_mods: Any = None,
+                       valid_to: Optional[jnp.ndarray] = None) -> Any:
     """Scatter scratch positions ``[start, start + chunk)`` into the paged
     pool through one slot's block-table row.
 
@@ -393,18 +399,39 @@ def write_chunk_blocks(pool: Any, scratch: Any, bt_row: jnp.ndarray,
     blocks, as garbage the validity mask keeps unread until decode
     overwrites it.  Only entries still parked on the null block (beyond the
     chain) write into discarded space.
+
+    ``ring_mods`` (optional) is a per-leaf pytree of ring moduli: 0 for
+    full-length leaves, M = round_up(window, block_size) for sliding-window
+    leaves, whose logical position p lives at ring slot ``p % M`` of the
+    chain.  The engine guarantees ``chunk <= M`` (validated at config
+    build), so one chunk never self-overlaps a ring slot and the scatter
+    stays order-independent.
+
+    ``valid_to`` (traced int32 scalar; required with ``ring_mods``) is the
+    logical end of *real* tokens in this chunk.  On a full-length leaf a
+    pad position past it writes harmless garbage beyond ``cache_len`` that
+    decode overwrites in place — but on a ring leaf that same logical
+    position wraps onto the ring slot of a token still *inside* the
+    window, so pad writes there are redirected into the null block (whose
+    contents nothing ever reads) instead.
     """
     log = start + jnp.arange(chunk)
-    phys = bt_row[log // block_size] * block_size + log % block_size
 
-    def upd(p, sc, ax):
+    def upd(p, sc, ax, mod):
+        lg = (log % mod) if mod else log
+        phys = bt_row[lg // block_size] * block_size + lg % block_size
+        if mod and valid_to is not None:
+            phys = jnp.where(log < valid_to, phys,
+                             NULL_BLOCK * block_size + lg % block_size)
         pm = jnp.moveaxis(p, ax, 0)
         sm = jnp.moveaxis(sc, ax, 0)
         ck = jax.lax.dynamic_slice_in_dim(sm, start, chunk, axis=0)
         pm = pm.at[phys].set(ck.astype(pm.dtype))
         return jnp.moveaxis(pm, 0, ax)
 
-    return jax.tree.map(upd, pool, scratch, seq_axes)
+    if ring_mods is None:
+        ring_mods = jax.tree.map(lambda _: 0, seq_axes)
+    return jax.tree.map(upd, pool, scratch, seq_axes, ring_mods)
 
 
 def gather_prefix_blocks(pool: Any, scratch: Any, bt_row: jnp.ndarray,

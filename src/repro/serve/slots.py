@@ -77,16 +77,20 @@ def discover_seq_axes(init_cache: Callable[[int, int], Any],
 
 
 def min_kv_capacity(init_cache: Callable[[int, int], Any], s_max: int,
-                    seq_axes: Any) -> int:
+                    seq_axes: Any, default: int = 0) -> int:
     """Smallest per-layer KV length in the pool (sliding-window layers clamp
     their cache to the window, so prefill writes must fit the minimum).
-    Leaves without a KV-length axis (marked ``-1``) impose no capacity."""
+    Leaves without a KV-length axis (marked ``-1``) impose no capacity; a
+    cache with *no* seq-axed leaf at all (pure SSM state — fixed-size per
+    slot) returns ``default`` when given, else raises."""
     shapes = jax.eval_shape(lambda: init_cache(1, s_max))
     caps = []
     jax.tree.map(
         lambda leaf, ax: caps.append(leaf.shape[ax]) if ax >= 0 else None,
         shapes, seq_axes)
     if not caps:
+        if default:
+            return default
         raise ValueError("no cache leaf depends on s_max; cannot size the "
                          "KV pool")
     return min(caps)

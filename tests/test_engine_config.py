@@ -1,0 +1,91 @@
+"""EngineConfig.validate(): every illegal combination raises coherently.
+
+The validation is consolidated in one method (``EngineConfig.validate``,
+run from ``__post_init__``), so an ``EngineConfig`` that exists is valid
+and each illegal field combination fails at construction with an error
+that names the offending knob.  Model-*dependent* checks (MoE knobs on
+dense models, SSM paging, ring restrictions) are covered where the model
+is in hand — ``test_serve_ssm.py`` / ``test_serve_window_ring.py``.
+"""
+import dataclasses
+
+import pytest
+
+from repro.serve import EngineConfig
+
+
+def make(**kw):
+    return EngineConfig(**kw)
+
+
+# (kwargs, error fragment) — one row per illegal combination validate()
+# rejects.  The fragment must appear in the message so errors stay
+# attributable to the knob that caused them.
+ILLEGAL = [
+    # shapes
+    (dict(max_slots=0), "max_slots"),
+    (dict(max_seq_len=0), "max_seq_len"),
+    (dict(max_slots=-3), "max_slots"),
+    (dict(prefill_chunk=0), "prefill_chunk"),
+    (dict(chunks_per_step=0), "chunks_per_step"),
+    # roles
+    (dict(role="verifier"), "unknown engine role"),
+    (dict(role="prefill"), "paged"),
+    (dict(role="decode"), "paged"),
+    # paged pool
+    (dict(paged=True, kv_block_size=0), "kv_block_size"),
+    (dict(num_kv_blocks=-1), "num_kv_blocks"),
+    (dict(prefix_sharing=True), "paged"),
+    (dict(fused_paged_attention=True), "paged"),
+    # speculative
+    (dict(speculative_k=-1), "speculative_k"),
+    (dict(speculative_k=2), "paged"),
+    # sampling
+    (dict(temperature=-0.5), "temperature"),
+    (dict(top_k=-1), "top_k"),
+    (dict(top_p=0.0), "top_p"),
+    (dict(top_p=1.5), "top_p"),
+    # MoE serving knobs
+    (dict(moe_policy="greedy"), "moe_policy"),
+    (dict(replica_slots=-1), "replica_slots"),
+    (dict(rebalance_interval=-1), "rebalance_interval"),
+    (dict(rebalance_interval=4), "replica_slots"),
+    # residency
+    (dict(resident_experts=-1), "resident_experts"),
+    (dict(prefetch_policy="psychic"), "prefetch_policy"),
+]
+
+
+@pytest.mark.parametrize("kw,frag", ILLEGAL,
+                         ids=["_".join(f"{k}={v}" for k, v in kw.items())
+                              for kw, _ in ILLEGAL])
+def test_illegal_combinations_raise(kw, frag):
+    with pytest.raises(ValueError, match=frag):
+        make(**kw)
+
+
+def test_defaults_are_valid():
+    cfg = EngineConfig()
+    assert cfg.validate() is cfg        # chaining returns self
+
+
+def test_legal_combinations_construct():
+    # the features each gated knob unlocks, with their gates satisfied
+    make(paged=True, prefix_sharing=True, speculative_k=3,
+         fused_paged_attention=True, role="prefill")
+    make(role="decode", paged=True)
+    make(temperature=0.7, top_k=5, top_p=0.9)
+    make(replica_slots=2, rebalance_interval=8)
+    make(moe_policy="harmoeny", resident_experts=4,
+         prefetch_policy="on_demand")
+
+
+def test_replace_reruns_validation():
+    """``dataclasses.replace`` re-runs ``__post_init__``, so a valid
+    config cannot be mutated into an illegal combination silently —
+    dropping a gate (paged) out from under its dependents raises too."""
+    with pytest.raises(ValueError, match="top_p"):
+        dataclasses.replace(EngineConfig(), top_p=2.0)
+    cfg = EngineConfig(paged=True, speculative_k=2)
+    with pytest.raises(ValueError, match="paged"):
+        dataclasses.replace(cfg, paged=False)

@@ -1,0 +1,209 @@
+"""SSM / hybrid serving through the SequenceStateStore protocol.
+
+The ISSUE-mandated invariants for the slotted state pool
+(``serve/statestore.SlotStateStore``):
+
+* greedy streams through ``ServeEngine`` are token-identical to the
+  one-shot prefill + lockstep-decode oracle for a pure-SSM (mamba2) and a
+  hybrid (zamba2-style) reduced config, including partial final prefill
+  chunks (prompt lengths not multiples of the chunk);
+* prefill-continuation carry is isolated per request: the batch-1
+  recurrent scratch is reset at every ``begin_prefill``, so back-to-back
+  requests through one slot never inherit state;
+* preemption resume is token-exact: dropping a slot's recurrent state and
+  re-prefilling prompt + committed output reproduces the stream;
+* slot recycling never recompiles (one jit entry per step fn, warmup
+  covers them, ``recompiled_after_warmup`` is False);
+* ``report()["state_pool"]`` carries the slot-store section;
+* ``paged=True`` is rejected loudly for recurrent-state families.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ParallelConfig
+from repro.models.model import build_model
+from repro.serve import (EngineConfig, Request, ServeEngine, SlotStateStore,
+                         VirtualClock, engine_config_for, make_state_store)
+
+from _serve_helpers import captured_run
+
+L_MAX, GEN, CHUNK = 13, 6, 4          # 13 = 4 + 4 + 4 + 1: partial chunk
+
+
+def _build(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg, ParallelConfig(attn_chunk=8, loss_chunk=8),
+                        batch=1, seq_len=L_MAX)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def mamba():
+    return _build("mamba2-2.7b")
+
+
+@pytest.fixture(scope="module")
+def zamba():
+    return _build("zamba2-7b")
+
+
+def _engine(cfg, model, params, *, slots=2):
+    ecfg = engine_config_for(cfg, max_slots=slots, prompt_len=L_MAX,
+                             max_new_tokens=GEN, prefill_chunk=CHUNK)
+    return ServeEngine(model, params, ecfg, clock=VirtualClock(0.5))
+
+
+def _oracle(model, params, prompt, s_max, gen=GEN):
+    logits, caches, pos, _ = model.prefill(
+        params, {"tokens": jnp.asarray(np.asarray(prompt)[None])},
+        s_max=s_max)
+    out = [int(jnp.argmax(logits, -1)[0])]
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    for _ in range(gen - 1):
+        logits, caches, pos, _ = model.decode_step(params, tok, caches, pos)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        out.append(int(tok[0, 0]))
+    return out
+
+
+def _prompts(cfg, lens, seed=3):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+            for n in lens]
+
+
+# ----------------------------------------------------------------------
+# token identity vs the one-shot oracle
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("family", ["mamba", "zamba"])
+def test_engine_matches_one_shot(family, request):
+    """Chunked prefill + slotted decode == one-shot, token for token, for
+    concurrent requests with non-chunk-multiple prompt lengths (partial
+    final chunks exercise the pad-masked SSD update)."""
+    cfg, model, params = request.getfixturevalue(family)
+    eng = _engine(cfg, model, params)
+    prompts = _prompts(cfg, (13, 9, 7))
+    outputs, rep = captured_run(
+        eng, [Request(rid=i, tokens=p, max_new_tokens=GEN)
+              for i, p in enumerate(prompts)])
+    assert isinstance(eng.kv, SlotStateStore)
+    for i, p in enumerate(prompts):
+        assert outputs[i] == _oracle(model, params, p,
+                                     eng.ecfg.max_seq_len), f"rid {i}"
+    assert rep["state_pool"]["kind"] == "slot"
+
+
+def test_scratch_reset_between_requests(mamba):
+    """Two requests through ONE slot, back to back: the second stream
+    must match its solo oracle — recurrent prefill state carried across
+    chunk calls for request A must never leak into request B (the
+    begin_prefill scratch reset)."""
+    cfg, model, params = mamba
+    eng = _engine(cfg, model, params, slots=1)
+    prompts = _prompts(cfg, (13, 11), seed=7)
+    outputs, rep = captured_run(
+        eng, [Request(rid=i, tokens=p, max_new_tokens=GEN)
+              for i, p in enumerate(prompts)])
+    for i, p in enumerate(prompts):
+        assert outputs[i] == _oracle(model, params, p,
+                                     eng.ecfg.max_seq_len), f"rid {i}"
+    # one reset per prefill pickup (plus warmupless run => exactly 2)
+    assert rep["state_pool"]["scratch_resets"] == 2
+
+
+# ----------------------------------------------------------------------
+# preemption resume
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("family", ["mamba", "zamba"])
+def test_preemption_resume_token_exact(family, request):
+    """Preempt mid-decode (recurrent state dropped), resume, and the
+    full stream is identical: re-prefilling prompt + committed output
+    reproduces the SSD fold token-exactly."""
+    cfg, model, params = request.getfixturevalue(family)
+    eng = _engine(cfg, model, params)
+    [prompt] = _prompts(cfg, (13,), seed=11)
+
+    base_out, _ = captured_run(
+        eng, [Request(rid=0, tokens=prompt, max_new_tokens=GEN)])
+
+    eng2 = _engine(cfg, model, params)
+    outputs = {}
+    orig = eng2._finish
+
+    def cap(st, now):
+        outputs[st.req.rid] = list(st.output)
+        orig(st, now)
+
+    eng2._finish = cap
+    eng2.submit(Request(rid=0, tokens=prompt, max_new_tokens=GEN))
+    preempted = False
+    while eng2.has_work():
+        eng2.step(eng2.clock.now())
+        if not preempted and eng2.active.any():
+            s = int(np.nonzero(eng2.active)[0][0])
+            st = eng2.state_by_slot[s]
+            if st is not None and len(st.output) >= 3:
+                eng2._preempt(st)
+                preempted = True
+    assert preempted and eng2.metrics.preemptions == 1
+    assert outputs[0] == base_out[0]
+    assert eng2.report()["state_pool"]["preemptions"] == 1
+
+
+# ----------------------------------------------------------------------
+# compile stability
+# ----------------------------------------------------------------------
+def test_zero_post_warmup_recompiles(zamba):
+    cfg, model, params = zamba
+    eng = _engine(cfg, model, params)
+    eng.warmup()
+    prompts = _prompts(cfg, (13, 9, 11, 7), seed=5)
+    rep = eng.run([Request(rid=i, tokens=p, max_new_tokens=GEN)
+                   for i, p in enumerate(prompts)])
+    assert rep["recompiled_after_warmup"] is False
+    assert rep["jit_entries"]["decode"] == 1
+
+
+# ----------------------------------------------------------------------
+# store selection + protocol edges
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("family", ["mamba", "zamba"])
+def test_paged_rejected_for_recurrent_state(family, request):
+    cfg, model, params = request.getfixturevalue(family)
+    ecfg = EngineConfig(max_slots=2, max_seq_len=32, prefill_chunk=4,
+                        paged=True)
+    with pytest.raises(ValueError, match="recurrent"):
+        ServeEngine(model, params, ecfg, clock=VirtualClock())
+
+
+def test_slot_store_protocol_surface(mamba):
+    cfg, model, params = mamba
+    ecfg = EngineConfig(max_slots=2, max_seq_len=32, prefill_chunk=4)
+    store = make_state_store(model, ecfg, s_pad=32, ctx=_null_ctx)
+    assert isinstance(store, SlotStateStore)
+    assert not store.paged and not store.sharing
+    assert store.kv_capacity == ecfg.max_seq_len   # no KV-length axis
+    assert store.share_plan([1, 2, 3], resumed=False) == (0, [], 0, False)
+    assert store.can_admit((0, [], 0, False))
+    store.release(rid=0, slot=0)                   # no-op, must not raise
+    assert store.probe_prefix([1, 2, 3]) == 0
+    with pytest.raises(RuntimeError):
+        store.bt_row(0)
+    with pytest.raises(NotImplementedError):
+        store.export_kv(8)
+    with pytest.raises(NotImplementedError):
+        store.import_kv([], 8, None)
+    stats = store.stats()
+    assert stats["kind"] == "slot" and stats["slots"] == 2
+    assert stats["pool_bytes"] > 0 and stats["state_bytes_per_slot"] > 0
+
+
+class _null_ctx:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False

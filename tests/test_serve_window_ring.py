@@ -1,0 +1,170 @@
+"""Paged sliding-window ring buffers: differential vs the windowed oracle.
+
+A window-clamped attention layer used to be a loud rejection in the paged
+engine (`padded prompt exceeds the sliding window`).  It is now served as
+a fixed-size ring: each slot owns a whole chain of
+``round_up(window, block_size)`` tokens, logical position p lives at ring
+slot ``p % M``, and decode gathers through
+``paged_ring_decode_attention``.  Invariants:
+
+* greedy streams are token-identical to the one-shot windowed oracle
+  (clamped-slab prefill + decode) for prompts shorter than, equal to,
+  and far beyond the window — including non-block-multiple and
+  non-chunk-multiple lengths, whose partial final chunks make pad
+  positions wrap the ring (the null-block diversion keeps them from
+  clobbering in-window K/V);
+* preemption + resume through the ring is token-exact;
+* ring chains are allocated whole at admission and never grow;
+* the features whose semantics a ring breaks (speculative verify, prefix
+  sharing, fused paged attention, split roles, chunk > ring) are rejected
+  at engine construction with errors naming the blocker.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.models.model import build_model
+from repro.serve import Request, ServeEngine, VirtualClock, engine_config_for
+
+from _serve_helpers import captured_run
+
+SWA = ModelConfig(name="tinyswa", family="dense", num_layers=2, d_model=32,
+                  num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=64,
+                  head_dim=16, sliding_window=8, dtype="float32")
+L_MAX, GEN, CHUNK, BS = 14, 6, 4, 4
+
+
+@pytest.fixture(scope="module")
+def swa():
+    model = build_model(SWA, ParallelConfig(attn_chunk=8, loss_chunk=8),
+                        batch=1, seq_len=L_MAX)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _engine(model, params, **kw):
+    ecfg = engine_config_for(SWA, max_slots=2, prompt_len=L_MAX,
+                             max_new_tokens=GEN, prefill_chunk=CHUNK,
+                             paged=True, kv_block_size=BS, **kw)
+    return ServeEngine(model, params, ecfg, clock=VirtualClock(0.5))
+
+
+def _oracle(model, params, prompt, s_max, gen=GEN):
+    """One-shot prefill + lockstep decode on the window-clamped slab."""
+    logits, caches, pos, _ = model.prefill(
+        params, {"tokens": jnp.asarray(np.asarray(prompt)[None])},
+        s_max=s_max)
+    out = [int(jnp.argmax(logits, -1)[0])]
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    for _ in range(gen - 1):
+        logits, caches, pos, _ = model.decode_step(params, tok, caches, pos)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        out.append(int(tok[0, 0]))
+    return out
+
+
+def test_ring_engages(swa):
+    model, params = swa
+    eng = _engine(model, params)
+    stats = eng.kv.stats()
+    assert stats["window_ring"] and stats["ring_full_chain"]
+    assert stats["ring_tokens"] == 8           # round_up(window=8, bs=4)
+    assert eng.kv.blocks_per_slot == 2         # M // bs: fixed per slot
+
+
+def test_ring_matches_windowed_oracle(swa):
+    """Prompt lengths straddling the window (14 > 8 > 7), none a multiple
+    of chunk or block size: every greedy stream matches the one-shot
+    windowed oracle token for token."""
+    model, params = swa
+    eng = _engine(model, params)
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, SWA.vocab_size, (n,)).astype(np.int32)
+               for n in (14, 11, 9, 7)]
+    outputs, rep = captured_run(
+        eng, [Request(rid=i, tokens=p, max_new_tokens=GEN)
+              for i, p in enumerate(prompts)])
+    for i, p in enumerate(prompts):
+        assert outputs[i] == _oracle(model, params, p,
+                                     eng.ecfg.max_seq_len), \
+            f"rid {i} (prompt len {len(p)})"
+    assert rep["state_pool"]["window_ring"]
+
+
+def test_ring_preemption_resume_token_exact(swa):
+    """Preempt a ring request mid-decode (its whole fixed chain is
+    released), resume, and the stream is unchanged — re-prefill rebuilds
+    the ring contents for prompt + committed output exactly."""
+    model, params = swa
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(0, SWA.vocab_size, (13,)).astype(np.int32)
+
+    eng = _engine(model, params)
+    base, _ = captured_run(
+        eng, [Request(rid=0, tokens=prompt, max_new_tokens=GEN)])
+
+    eng2 = _engine(model, params)
+    outputs = {}
+    orig = eng2._finish
+
+    def cap(st, now):
+        outputs[st.req.rid] = list(st.output)
+        orig(st, now)
+
+    eng2._finish = cap
+    eng2.submit(Request(rid=0, tokens=prompt, max_new_tokens=GEN))
+    preempted = False
+    while eng2.has_work():
+        eng2.step(eng2.clock.now())
+        if not preempted and eng2.active.any():
+            s = int(np.nonzero(eng2.active)[0][0])
+            st = eng2.state_by_slot[s]
+            if st is not None and len(st.output) >= 3:
+                eng2._preempt(st)
+                preempted = True
+    assert preempted
+    assert outputs[0] == base[0]
+    assert eng2.report()["state_pool"]["preemptions"] == 1
+
+
+def test_ring_chains_never_grow(swa):
+    """With ring_full_chain every slot's chain is allocated whole at
+    admission; the block allocator sees no extends during decode."""
+    model, params = swa
+    eng = _engine(model, params)
+    orig_extend = eng._alloc.extend
+    calls = []
+    eng._alloc.extend = lambda rid: calls.append(rid) or orig_extend(rid)
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(0, SWA.vocab_size, (14,)).astype(np.int32)
+    captured_run(eng, [Request(rid=0, tokens=prompt, max_new_tokens=GEN)])
+    assert calls == []
+
+
+@pytest.mark.parametrize("kw,frag", [
+    (dict(speculative_k=2), "single-query"),
+    (dict(prefix_sharing=True), "absolute sequence length"),
+    (dict(fused_paged_attention=True), "no ring arithmetic"),
+    (dict(role="prefill"), "handoff"),
+], ids=["speculative", "sharing", "fused", "role"])
+def test_ring_blockers_rejected(swa, kw, frag):
+    model, params = swa
+    with pytest.raises(ValueError, match=frag):
+        _engine(model, params, **kw)
+
+
+def test_chunk_wider_than_ring_rejected(swa):
+    model, params = swa
+    with pytest.raises(ValueError, match="chunk"):
+        engine_config_for(SWA, max_slots=2, prompt_len=L_MAX,
+                          max_new_tokens=GEN, prefill_chunk=16,
+                          paged=True, kv_block_size=BS)
+
+
+def test_slab_still_rejects_beyond_window(swa):
+    """The slab pool keeps its loud rejection (its clamped cache cannot
+    hold more than the window); the error now points at the paged ring."""
+    with pytest.raises(ValueError, match="paged"):
+        engine_config_for(SWA, max_slots=2, prompt_len=L_MAX,
+                          max_new_tokens=GEN, prefill_chunk=CHUNK)
